@@ -1,0 +1,89 @@
+"""Coded training-step bench: the paper's trade-off measured END TO END in
+the runtime (expected step time vs redundancy level), for both geometries:
+
+  * MDS / linear jobs (the paper's s = n/k)         -- core.expectations
+  * FR gradient coding (achievable, s = n - k + 1)  -- runtime.straggler
+
+plus a wall-clock measurement of the coded step itself (tiny model, CPU)
+showing the compute overhead of replication factor c, and a simulated
+end-to-end comparison: expected wall time per EFFECTIVE step under
+stragglers = E[T_completion(c)] for the planner's c* vs naive splitting.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.planner import plan
+from repro.data import DataConfig
+from repro.models import api
+from repro.optim import adamw
+from repro.runtime import (CodedStepConfig, CodedTrainer, StragglerSim,
+                           fr_expected_completion, plan_fr)
+
+from .common import Check, emit_rows, time_call
+
+CFG = ModelConfig(name="bench", family="dense", num_layers=2, d_model=128,
+                  num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+                  flash_block_kv=64, remat="none",
+                  compute_dtype="float32", param_dtype="float32")
+
+
+def run(**_) -> bool:
+    check = Check("coded_step")
+    rows = []
+    n = 8
+    dists = {
+        "bimodal(10,0.3)": (BiModal(10.0, 0.3), 1.0),
+        "sexp(1,5)": (ShiftedExp(1.0, 5.0), None),
+        "pareto(1,1.8)": (Pareto(1.0, 1.8), 1.0),
+    }
+    for name, (dist, delta) in dists.items():
+        # paper geometry (MDS, any-k-of-n)
+        p_mds = plan(dist, Scaling.DATA_DEPENDENT, n, delta=delta)
+        # achievable gradient-code geometry (FR)
+        p_fr = plan_fr(dist, Scaling.DATA_DEPENDENT, n, delta=delta)
+        for c, e in sorted(p_fr["curve"].items()):
+            rows.append(dict(dist=name, geometry="FR", knob=f"c={c}",
+                             expected_time=round(e, 4)))
+        for k, e in sorted(p_mds.curve.items()):
+            rows.append(dict(dist=name, geometry="MDS", knob=f"k={k}",
+                             expected_time=round(e, 4)))
+        best_fr = p_fr["expected_time"]
+        worst_fr = max(p_fr["curve"].values())
+        check.expect(f"{name}: planned c* beats worst redundancy choice",
+                     best_fr < worst_fr,
+                     f"{best_fr:.2f} vs {worst_fr:.2f}")
+        naive = p_fr["curve"][1]     # splitting (c=1)
+        rows.append(dict(dist=name, geometry="FR", knob="c*",
+                         expected_time=f"{best_fr:.4f} (vs split "
+                         f"{naive:.4f}, {naive/best_fr:.2f}x)"))
+
+    # wall-clock overhead of replication on the real step (CPU, tiny model)
+    data_cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=8)
+    params = api.init_params(CFG, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    times = {}
+    for c in (1, 2, 4):
+        step_cfg = CodedStepConfig(n_workers=8, c=c, unique_batch=8)
+        tr = CodedTrainer(CFG, data_cfg, step_cfg, opt_cfg, donate=False)
+        opt = adamw.init(opt_cfg, params)
+        us = time_call(lambda: jax.block_until_ready(
+            tr.run_step(params, opt, 0)[2]["loss"]), repeat=3)
+        times[c] = us
+        rows.append(dict(dist="wall-clock", geometry="FR", knob=f"c={c}",
+                         expected_time=f"{us/1e3:.1f} ms/step"))
+    check.expect("replication inflates local compute ~linearly",
+                 times[4] > 1.5 * times[1],
+                 f"c=4 {times[4]/1e3:.1f}ms vs c=1 {times[1]/1e3:.1f}ms")
+
+    emit_rows("coded_step", rows, ["dist", "geometry", "knob",
+                                   "expected_time"])
+    return check.summary()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if run() else 1)

@@ -1,0 +1,66 @@
+"""Shared benchmark plumbing: timing, CSV/markdown emit, figure checks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "/root/repo/bench_results")
+
+
+def ensure_out() -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR
+
+
+def time_call(fn: Callable, *args, repeat: int = 3, **kw) -> float:
+    """Median wall-time (us) of fn(*args), after one warmup."""
+    fn(*args, **kw)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit_rows(name: str, rows: List[Dict], keys: List[str]) -> str:
+    """Write CSV + echo; returns path."""
+    out = ensure_out()
+    path = os.path.join(out, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+    print(f"[{name}] {len(rows)} rows -> {path}")
+    return path
+
+
+def emit_json(name: str, obj) -> str:
+    out = ensure_out()
+    path = os.path.join(out, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    print(f"[{name}] -> {path}")
+    return path
+
+
+class Check:
+    """Collects pass/fail assertions against the paper's stated results."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.results = []
+
+    def expect(self, desc: str, ok: bool, detail: str = ""):
+        self.results.append((desc, bool(ok), detail))
+        tag = "PASS" if ok else "FAIL"
+        print(f"  [{tag}] {desc}" + (f"  ({detail})" if detail else ""))
+
+    def summary(self) -> bool:
+        ok = all(r[1] for r in self.results)
+        n = sum(1 for r in self.results if r[1])
+        print(f"[{self.name}] {n}/{len(self.results)} checks pass")
+        return ok

@@ -1,0 +1,149 @@
+"""Paper Figs. 11-18: Bi-Modal service time.
+
+  Figs. 11-12 / Prop. 1, Thm. 8: server-dependent (+LLN, Fig. 13, n=60)
+  Figs. 14-15 / Thm. 9: data-dependent (+LLN, Fig. 16)
+  Figs. 17-18 / Prop. 2, Conj. 2: additive; optimal rate 1/2 -> 1/3
+"""
+from __future__ import annotations
+
+from repro.core.distributions import BiModal, Scaling
+from repro.core.expectations import (bimodal_additive,
+                                     bimodal_data_dependent,
+                                     bimodal_data_dependent_lln,
+                                     bimodal_server_dependent,
+                                     bimodal_server_dependent_lln)
+from repro.core.planner import divisors, plan
+
+from .common import Check, emit_rows
+
+N = 12
+
+
+def run(**_) -> bool:
+    rows = []
+    check = Check("fig_bimodal")
+
+    # ---- Fig. 11: server-dependent, B=10, eps sweep ----------------------
+    ks = {}
+    for eps in (0.005, 0.2, 0.4, 0.6, 0.8, 0.9):
+        for k in divisors(N):
+            e = bimodal_server_dependent(k, N, 10.0, eps)
+            rows.append(dict(fig=11, B=10.0, eps=eps, delta="", k=k,
+                             e=round(e, 4)))
+        ks[eps] = plan(BiModal(10.0, eps), Scaling.SERVER_DEPENDENT, N).k
+    check.expect("Fig11 eps->0 splitting", ks[0.005] == N, str(ks[0.005]))
+    check.expect("Fig11 moderate eps coding (0.2,0.4,0.6)",
+                 all(1 < ks[e] < N for e in (0.2, 0.4, 0.6)), str(ks))
+    check.expect("Fig11 optimal rate decreases with eps (coding regime)",
+                 ks[0.2] >= ks[0.4] >= ks[0.6], str(ks))
+    check.expect("Fig11 large eps splitting", ks[0.9] == N, str(ks[0.9]))
+
+    # ---- Fig. 12: server-dependent, eps=0.6, B sweep ---------------------
+    ksB = {}
+    for B in (2.0, 5.0, 10.0, 15.0):
+        for k in divisors(N):
+            e = bimodal_server_dependent(k, N, B, 0.6)
+            rows.append(dict(fig=12, B=B, eps=0.6, delta="", k=k,
+                             e=round(e, 4)))
+        ksB[B] = plan(BiModal(B, 0.6), Scaling.SERVER_DEPENDENT, N).k
+    check.expect("Fig12 Prop1 B<=2 -> splitting", ksB[2.0] == N, str(ksB))
+    check.expect("Fig12 large B -> coding", 1 < ksB[10.0] < N, str(ksB))
+
+    # ---- Fig. 13: LLN vs exact, n=60 -------------------------------------
+    # The paper compares the two CURVES (and notes the LLN first-local-min
+    # value is off for eps=0.9): we check pointwise agreement at rates away
+    # from the r = 1-eps phase boundary, where the LLN is sharp.
+    n60 = 60
+    for eps in (0.2, 0.6, 0.9):
+        exact = {k: bimodal_server_dependent(k, n60, 10.0, eps)
+                 for k in divisors(n60)}
+        interior = [k for k in divisors(n60)
+                    if k / n60 <= (1 - eps) - 0.1 or k == n60]
+        worst = 0.0
+        for k in interior:
+            lln = bimodal_server_dependent_lln(k / n60, 10.0, eps)
+            worst = max(worst, abs(lln - exact[k]) / exact[k])
+            rows.append(dict(fig=13, B=10.0, eps=eps, delta="", k=k,
+                             e=f"{exact[k]:.3f}/lln:{lln:.3f}"))
+        check.expect(f"Fig13 LLN == exact away from boundary (eps={eps})",
+                     worst < 0.05, f"worst rel {worst:.3f}")
+        kex = min(exact, key=exact.get)
+        # Thm 8: coding at r = 1-eps iff eps <= (B-1)/B, else splitting
+        r_star = (1 - eps) if eps < (10 - 1) / 10 else 1.0
+        check.expect(f"Fig13 exact k* tracks Thm8 r* (eps={eps})",
+                     abs(kex / n60 - r_star) <= 0.35,
+                     f"k*={kex} r*={r_star:.2f}")
+
+    # ---- Fig. 14: data-dependent, B=10, Delta=5, eps sweep ---------------
+    ksD = {}
+    for eps in (0.05, 0.2, 0.5, 0.6, 0.9):
+        for k in divisors(N):
+            e = bimodal_data_dependent(k, N, 10.0, eps, 5.0)
+            rows.append(dict(fig=14, B=10.0, eps=eps, delta=5.0, k=k,
+                             e=round(e, 4)))
+        ksD[eps] = plan(BiModal(10.0, eps), Scaling.DATA_DEPENDENT, N,
+                        delta=5.0).k
+    check.expect("Fig14 eps->0 splitting", ksD[0.05] == N, str(ksD))
+    check.expect("Fig14 moderate eps coding", 1 < ksD[0.2] < N, str(ksD))
+    check.expect("Fig14 large eps splitting", ksD[0.9] == N, str(ksD))
+
+    # ---- Fig. 15: data-dependent, eps=0.6, B sweep -----------------------
+    ksB2 = {}
+    for B in (2.0, 10.0, 30.0, 60.0):
+        for k in divisors(N):
+            e = bimodal_data_dependent(k, N, B, 0.6, 5.0)
+            rows.append(dict(fig=15, B=B, eps=0.6, delta=5.0, k=k,
+                             e=round(e, 4)))
+        ksB2[B] = plan(BiModal(B, 0.6), Scaling.DATA_DEPENDENT, N,
+                       delta=5.0).k
+    check.expect("Fig15 small B splitting / large B coding",
+                 ksB2[2.0] == N and 1 < ksB2[60.0] < N, str(ksB2))
+
+    # ---- Fig. 16: LLN vs exact (data-dependent, n=60) ---------------------
+    for eps in (0.2, 0.6):
+        exact = {k: bimodal_data_dependent(k, n60, 10.0, eps, 5.0)
+                 for k in divisors(n60) if k >= 5}
+        interior = [k for k in exact
+                    if k / n60 <= (1 - eps) - 0.1 or k == n60]
+        worst = 0.0
+        for k in interior:
+            lln = bimodal_data_dependent_lln(k / n60, 10.0, eps, 5.0)
+            worst = max(worst, abs(lln - exact[k]) / exact[k])
+            rows.append(dict(fig=16, B=10.0, eps=eps, delta=5.0, k=k,
+                             e=f"{exact[k]:.3f}/lln:{lln:.3f}"))
+        check.expect(f"Fig16 LLN == exact away from boundary (eps={eps})",
+                     worst < 0.05, f"worst rel {worst:.3f}")
+
+    # ---- Fig. 17: additive, B=10, eps sweep -------------------------------
+    ksA = {}
+    for eps in (0.005, 0.2, 0.6, 0.9):
+        for k in divisors(N):
+            e = bimodal_additive(k, N, 10.0, eps)
+            rows.append(dict(fig=17, B=10.0, eps=eps, delta="", k=k,
+                             e=round(e, 4)))
+        ksA[eps] = plan(BiModal(10.0, eps), Scaling.ADDITIVE, N).k
+    check.expect("Fig17 eps->0 splitting", ksA[0.005] == N, str(ksA))
+    check.expect("Fig17 eps=0.2 coding rate 1/2", ksA[0.2] == 6, str(ksA))
+    check.expect("Fig17 large eps splitting", ksA[0.9] == N, str(ksA))
+
+    # ---- Fig. 18: additive, eps=0.4, B sweep ------------------------------
+    ksA2 = {}
+    for B in (2.0, 5.0, 10.0, 20.0):
+        for k in divisors(N):
+            e = bimodal_additive(k, N, B, 0.4)
+            rows.append(dict(fig=18, B=B, eps=0.4, delta="", k=k,
+                             e=round(e, 4)))
+        ksA2[B] = plan(BiModal(B, 0.4), Scaling.ADDITIVE, N).k
+    check.expect("Fig18 Prop2 B<=2 splitting", ksA2[2.0] == N, str(ksA2))
+    check.expect("Fig18 Conj2: coding/splitting beats replication",
+                 all(k > 1 for k in ksA2.values()), str(ksA2))
+    check.expect("Fig18 optimal rate in {1/2, 1} (paper: 1/2 until B~106)",
+                 all(k in (6, 12) for k in ksA2.values()), str(ksA2))
+
+    emit_rows("fig_bimodal", rows, ["fig", "B", "eps", "delta", "k", "e"])
+    return check.summary()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if run() else 1)

@@ -1,0 +1,112 @@
+"""Paper Figs. 6-10: Pareto service time.
+
+  Fig. 6 / Thm. 6: server-dependent, k* = round((a n - 1)/(a + 1))
+  Figs. 7-8: data-dependent; optimal rate rises with Delta
+  Fig. 9: additive (Monte-Carlo, the paper's own methodology)
+  Fig. 10 / Thm. 7: replication lower bound vs splitting over n
+"""
+from __future__ import annotations
+
+from repro.core.distributions import Pareto, Scaling
+from repro.core.expectations import (pareto_additive_mc,
+                                     pareto_data_dependent,
+                                     pareto_replication_lower_bound,
+                                     pareto_server_dependent,
+                                     pareto_splitting_additive)
+from repro.core.planner import divisors, plan
+
+from .common import Check, emit_rows
+
+N = 12
+
+
+def run(mc_trials: int = 20_000) -> bool:
+    rows = []
+    check = Check("fig_pareto")
+
+    # ---- Fig. 6: server-dependent, lambda=1 ------------------------------
+    for alpha in (1.5, 2.0, 3.0, 5.0):
+        for k in divisors(N):
+            e = pareto_server_dependent(k, N, 1.0, alpha)
+            rows.append(dict(fig=6, alpha=alpha, delta="", k=k, e=round(e, 4)))
+        p = plan(Pareto(1.0, alpha), Scaling.SERVER_DEPENDENT, N)
+        kstar = (alpha * N - 1) / (alpha + 1)
+        legal = min(divisors(N), key=lambda k: abs(k - kstar))
+        check.expect(f"Fig6 Thm6 k* matches argmin (a={alpha})",
+                     p.k == legal, f"thm {kstar:.1f}->{legal}, exact {p.k}")
+    p = plan(Pareto(1.0, 1.5), Scaling.SERVER_DEPENDENT, N)
+    check.expect("Fig6 heavy tail -> rate-1/2 coding", p.k == 6, f"k*={p.k}")
+    p = plan(Pareto(1.0, 5.0), Scaling.SERVER_DEPENDENT, N)
+    check.expect("Fig6 light tail -> splitting", p.k == N, f"k*={p.k}")
+
+    # ---- Fig. 7: data-dependent, delta=5, lambda=1 -----------------------
+    for alpha in (1.5, 2.0, 3.0, 5.0):
+        for k in divisors(N):
+            e = pareto_data_dependent(k, N, 1.0, alpha, 5.0)
+            rows.append(dict(fig=7, alpha=alpha, delta=5.0, k=k,
+                             e=round(e, 4)))
+    p = plan(Pareto(1.0, 5.0), Scaling.DATA_DEPENDENT, N, delta=5.0)
+    check.expect("Fig7 light tail -> splitting", p.k == N, f"k*={p.k}")
+    p = plan(Pareto(1.0, 1.5), Scaling.DATA_DEPENDENT, N, delta=5.0)
+    check.expect("Fig7 heavy tail -> coding", 1 < p.k < N, f"k*={p.k}")
+
+    # ---- Fig. 8: data-dependent, lambda=5, alpha=3, Delta sweep ----------
+    ks_by_delta = {}
+    for delta in (0.1, 0.5, 5.0, 10.0):
+        for k in divisors(N):
+            e = pareto_data_dependent(k, N, 5.0, 3.0, delta)
+            rows.append(dict(fig=8, alpha=3.0, delta=delta, k=k,
+                             e=round(e, 4)))
+        ks_by_delta[delta] = plan(Pareto(5.0, 3.0), Scaling.DATA_DEPENDENT,
+                                  N, delta=delta).k
+    check.expect("Fig8 optimal rate increases with Delta",
+                 ks_by_delta[0.1] <= ks_by_delta[0.5]
+                 <= ks_by_delta[5.0] <= ks_by_delta[10.0],
+                 str(ks_by_delta))
+    check.expect("Fig8 small Delta -> low-rate coding/replication "
+                 "(paper: 'replication or low-rate coding')",
+                 ks_by_delta[0.1] <= 4, str(ks_by_delta[0.1]))
+
+    # ---- Fig. 9: additive (MC) -------------------------------------------
+    for alpha in (1.3, 2.0, 3.0, 5.0):
+        curve = {}
+        for k in divisors(N):
+            e = pareto_additive_mc(k, N, 1.0, alpha, trials=mc_trials)
+            curve[k] = e
+            rows.append(dict(fig=9, alpha=alpha, delta="", k=k,
+                             e=round(e, 4)))
+        kbest = min(curve, key=curve.get)
+        if alpha >= 5.0:
+            check.expect(f"Fig9 light tail splitting (a={alpha})",
+                         kbest == N, f"k*={kbest}")
+        if alpha <= 1.3:
+            check.expect(f"Fig9 heavy tail coding ~1/2 (a={alpha})",
+                         kbest in (4, 6), f"k*={kbest}")
+
+    # ---- Fig. 10: Thm. 7 bound vs splitting over n -----------------------
+    # the bound r_n = (1 - 21 xi / (n^2 eta^4))^n ~ exp(-21 xi / n) only
+    # bites once n >> 21 xi (= 189 for alpha=4.5): "sufficiently large n"
+    alpha, lam, eta = 4.5, 1.0, 1.0
+    ok = True
+    for n in (32, 64, 128, 256, 512):
+        lb = pareto_replication_lower_bound(n, lam, alpha, eta)
+        sp = pareto_splitting_additive(n, lam, alpha)
+        rows.append(dict(fig=10, alpha=alpha, delta="", k=f"n={n}",
+                         e=f"lb={lb:.3f};split={sp:.3f}"))
+        if n >= 128:
+            ok &= lb > sp
+    check.expect("Fig10 Thm7: replication lower bound > splitting (n>=128)",
+                 ok)
+    # and the ordering itself holds by MC already at moderate n
+    e_rep = pareto_additive_mc(1, 32, lam, alpha, trials=mc_trials)
+    e_spl = pareto_splitting_additive(32, lam, alpha)
+    check.expect("Fig10 Thm7 ordering: E[rep] > E[split] (n=32, MC)",
+                 e_rep > e_spl, f"{e_rep:.2f} > {e_spl:.2f}")
+
+    emit_rows("fig_pareto", rows, ["fig", "alpha", "delta", "k", "e"])
+    return check.summary()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if run() else 1)

@@ -1,0 +1,93 @@
+"""Paper Figs. 3-5: (Shifted-)Exponential service time, all three scalings.
+
+Regenerates each curve E[Y_{k:n}] vs k from the closed forms, cross-checks
+against Monte-Carlo, and validates the paper's stated optima:
+  Fig. 3 / Thm. 1: replication optimal (server-dependent)
+  Fig. 4 / Thm. 2: k* = n(-d/2 + sqrt(d + d^2/4)), regime sweep
+  Fig. 5 / Thms. 4+5: splitting > replication; rate-1/2 coding > splitting
+                      when Delta = 0 (additive)
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.distributions import Scaling, ShiftedExp
+from repro.core.expectations import (replication_additive_sexp,
+                                     sexp_additive, sexp_data_dependent,
+                                     sexp_server_dependent)
+from repro.core.planner import divisors, plan, theorem_kstar
+from repro.core.simulator import expected_completion_mc
+
+from .common import Check, emit_rows
+
+N = 12
+
+
+def run(mc_trials: int = 20_000) -> bool:
+    rows = []
+    check = Check("fig_sexp")
+
+    # ---- Fig. 3: server-dependent --------------------------------------
+    for (delta, W) in [(1, 0), (1, 5), (1, 10), (0, 1), (5, 1), (10, 1)]:
+        for k in divisors(N):
+            e = sexp_server_dependent(k, N, delta, W)
+            rows.append(dict(fig=3, delta=delta, W=W, k=k, e=round(e, 4)))
+        if W > 0:
+            p = plan(ShiftedExp(delta, W), Scaling.SERVER_DEPENDENT, N)
+            check.expect(f"Fig3 Thm1 replication optimal (D={delta},W={W})",
+                         p.k == 1, f"k*={p.k}")
+    # MC cross-check one point
+    e_cf = sexp_server_dependent(3, N, 1.0, 5.0)
+    e_mc = expected_completion_mc(ShiftedExp(1.0, 5.0),
+                                  Scaling.SERVER_DEPENDENT, 3, N,
+                                  trials=mc_trials)
+    check.expect("Fig3 closed-form == MC (k=3)",
+                 abs(e_cf - e_mc) / e_cf < 0.05, f"{e_cf:.3f} vs {e_mc:.3f}")
+
+    # ---- Fig. 4: data-dependent -----------------------------------------
+    for (W, delta) in [(0, 10), (1, 10), (5, 5), (10, 1), (10, 0)]:
+        for k in divisors(N):
+            e = sexp_data_dependent(k, N, delta, W)
+            rows.append(dict(fig=4, delta=delta, W=W, k=k, e=round(e, 4)))
+    p = plan(ShiftedExp(10.0, 1.0), Scaling.DATA_DEPENDENT, N)
+    check.expect("Fig4 small W/D -> splitting", p.k == N, f"k*={p.k}")
+    p = plan(ShiftedExp(0.0, 10.0), Scaling.DATA_DEPENDENT, N)
+    check.expect("Fig4 D=0 -> replication", p.k == 1, f"k*={p.k}")
+    p = plan(ShiftedExp(5.0, 5.0), Scaling.DATA_DEPENDENT, N)
+    check.expect("Fig4 W/D=1 -> coding 1<k<n", 1 < p.k < N, f"k*={p.k}")
+    tk, _ = theorem_kstar(ShiftedExp(5.0, 5.0), Scaling.DATA_DEPENDENT, N)
+    legal = min(divisors(N), key=lambda k: abs(k - tk))
+    check.expect("Fig4 Thm2 prediction matches argmin",
+                 abs(legal - p.k) <= 3, f"thm {tk:.1f} vs exact {p.k}")
+
+    # ---- Fig. 5: additive ------------------------------------------------
+    for (W, delta) in [(0, 10), (1, 10), (5, 5), (10, 1), (10, 0)]:
+        for k in divisors(N):
+            e = sexp_additive(k, N, delta, W)
+            rows.append(dict(fig=5, delta=delta, W=W, k=k, e=round(e, 4)))
+    # Thm 4: splitting beats replication (Delta=0, large n)
+    e_rep = replication_additive_sexp(N, 0.0, 1.0)
+    e_split = sexp_additive(N, N, 0.0, 1.0)
+    check.expect("Fig5 Thm4 splitting < replication (D=0)",
+                 e_split < e_rep, f"{e_split:.3f} < {e_rep:.3f}")
+    # Thm 5: rate-1/2 coding beats splitting when Delta=0
+    e_half = sexp_additive(N // 2, N, 0.0, 1.0)
+    check.expect("Fig5 Thm5 rate-1/2 < splitting (D=0)",
+                 e_half < e_split, f"{e_half:.3f} < {e_split:.3f}")
+    # small W/D: splitting optimal
+    p = plan(ShiftedExp(10.0, 1.0), Scaling.ADDITIVE, N)
+    check.expect("Fig5 small W/D -> splitting", p.k == N, f"k*={p.k}")
+    # MC cross-check (Erlang order stats)
+    e_cf = sexp_additive(6, N, 1.0, 5.0)
+    e_mc = expected_completion_mc(ShiftedExp(1.0, 5.0), Scaling.ADDITIVE,
+                                  6, N, trials=mc_trials)
+    check.expect("Fig5 closed-form == MC (k=6)",
+                 abs(e_cf - e_mc) / e_cf < 0.05, f"{e_cf:.3f} vs {e_mc:.3f}")
+
+    emit_rows("fig_sexp", rows, ["fig", "delta", "W", "k", "e"])
+    return check.summary()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if run() else 1)

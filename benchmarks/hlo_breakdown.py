@@ -1,0 +1,123 @@
+"""Per-op byte/flop attribution for one dry-run cell -- the 'profiler' of
+the hypothesis->change->measure loop (no hardware: the lowered HLO is the
+profile).
+
+    python -m benchmarks.hlo_breakdown --arch deepseek-7b --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+
+def breakdown(arch: str, shape: str, multi_pod: bool = False, top: int = 25):
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape, mesh)
+    with mesh:
+        compiled = cell.lower().compile()
+    txt = compiled.as_text()
+
+    # reuse hlo_cost's computation split + multipliers
+    comps = {}
+    entry = None
+    cur = None
+    meta = {}
+    for line in txt.splitlines():
+        h = H._HEADER_RE.match(line)
+        if h and not line.startswith(" "):
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            ins = H._parse_instr(line)
+            if ins:
+                comps[cur].append(ins)
+                m = re.search(r'op_name="([^"]+)"', line)
+                if m:
+                    meta[(cur, ins[0])] = m.group(1)
+    defs = {c: {i[0]: i[1] for i in instrs} for c, instrs in comps.items()}
+    fusion_bodies = set()
+    edges = {c: [] for c in comps}
+    ftgt = {}
+    for c, instrs in comps.items():
+        for name, rb, op, ops, rhs in instrs:
+            trip = 1
+            tm = H._TRIP_RE.search(rhs)
+            if tm:
+                trip = int(tm.group(1))
+            for kind, t in H._ATTR_CALL_RE.findall(rhs):
+                if t not in comps:
+                    continue
+                if kind == "calls":
+                    fusion_bodies.add(t)
+                    edges[c].append((t, 1))
+                    ftgt[(c, name)] = t
+                elif kind in ("body", "condition"):
+                    edges[c].append((t, trip))
+    mult = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for _ in range(64):
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for c in comps:
+            if mult[c] == 0:
+                continue
+            for t, k in edges[c]:
+                new[t] += mult[c] * k
+        if new == mult:
+            break
+        mult = new
+
+    by_tag = defaultdict(float)
+    rows = []
+    for c, instrs in comps.items():
+        m = mult.get(c, 0)
+        if m == 0 or c in fusion_bodies:
+            continue
+        d = defs[c]
+        for name, rb, op, ops, rhs in instrs:
+            if op in H._META_OPS or op.endswith("-done"):
+                continue
+            opb = [d.get(o, 0) for o in ops]
+            if op == "dynamic-update-slice" and len(opb) >= 2:
+                b = 2 * opb[1]
+            elif op in ("dynamic-slice", "slice", "gather"):
+                b = 2 * rb
+            elif op == "fusion":
+                b = H._fusion_bytes(comps.get(ftgt.get((c, name)), []),
+                                    opb, rb)
+            else:
+                b = rb + sum(opb)
+            tag = meta.get((c, name), f"<{op}>")
+            # canonicalize: strip jit prefix, keep the semantic tail
+            tag = re.sub(r"stack_frame_id=\d+", "", tag)
+            by_tag[tag.split(" ")[0]] += m * b
+            rows.append((m * b, m, op, tag))
+    total = sum(v for v, *_ in rows)
+    print(f"== {arch} x {shape} {'multi' if multi_pod else 'single'}: "
+          f"total {total/1e9:.1f} GB/dev ==")
+    agg = sorted(by_tag.items(), key=lambda kv: -kv[1])[:top]
+    for tag, v in agg:
+        print(f"  {v/1e9:9.1f} GB  {100*v/total:5.1f}%  {tag[:110]}")
+    return by_tag, total
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    a = ap.parse_args()
+    breakdown(a.arch, a.shape, a.multi, a.top)

@@ -1,0 +1,149 @@
+"""Post-process the roofline sweep into the EXPERIMENTS.md tables.
+
+Adds the minimum-traffic floor per cell (a bandwidth roofline): the bytes a
+perfect implementation must still move, so `floor / actual` is the
+bandwidth-utilization headroom for memory-bound cells (the analogue of MFU
+for compute-bound ones):
+
+  train   floor = params(read, compute dtype) + grads(write, fp32)
+                  + master params + 2 moments (read+write, fp32)
+                  + residual-stream activations once fwd + once bwd
+  prefill floor = params(read) + KV cache write + logits write
+  decode  floor = params(read) + cache read + cache update write
+
+    python -m benchmarks.perf_report
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from .common import ensure_out
+
+RESULTS = os.path.join(ensure_out(), "roofline.jsonl")
+
+
+def _cfg(arch):
+    from repro.configs.base import get_config
+    return get_config(arch)
+
+
+def min_traffic_bytes(arch: str, shape_name: str, chips: int) -> float:
+    """Per-device minimum HBM traffic floor (bytes).
+
+    Axis accounting for the production mesh (tp=16; dp = chips/16):
+      * TP-sharded weights: after the FSDP all-gather each device holds and
+        reads its 1/tp slice -> ~3x N/tp in compute dtype (AG write + read
+        fwd + read bwd);
+      * optimizer state stays fully sharded (1/chips), read+write fp32;
+      * residual-stream activations: batch/dp x S x d per layer, written
+        fwd + read bwd (+1 write for saved remat carry);
+      * KV/SSM caches: sharded over all chips, read once (+update write).
+    """
+    import jax
+    from repro.configs.base import SHAPES
+    from repro.models import api
+    cfg = _cfg(arch)
+    shape = SHAPES[shape_name]
+    tp = 16
+    dp = max(chips // tp, 1)
+    pshapes = api.param_shapes(cfg)
+    n_params = sum(math.prod(x.shape) for x in jax.tree.leaves(pshapes))
+    cdt = 2  # compute dtype bf16
+    d, L = cfg.d_model, cfg.num_layers
+    b_dp = max(shape.global_batch // dp, 1)
+    if shape.kind == "train":
+        params_traffic = 3 * n_params * cdt / tp \
+            + 16 * n_params / chips           # fp32 master + 2 moments rw
+        acts = b_dp * shape.seq_len * d * L * cdt * 3
+        from repro.models.transformer import padded_vocab
+        logits = b_dp * shape.seq_len * padded_vocab(cfg) // tp * cdt * 2
+        return params_traffic + acts + logits
+    if shape.kind == "prefill":
+        kv = 2 * L * shape.global_batch * shape.seq_len * \
+            max(cfg.num_kv_heads, 1) * (cfg.resolved_head_dim or 64) * \
+            cdt / chips
+        from repro.models.transformer import padded_vocab
+        logits = b_dp * shape.seq_len * padded_vocab(cfg) // tp * cdt
+        acts = b_dp * shape.seq_len * d * L * cdt
+        return n_params * cdt / tp + kv + logits + acts
+    # decode: read params + read cache once
+    caches = api.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    cache_bytes = sum(math.prod(x.shape) * x.dtype.itemsize
+                      for x in jax.tree.leaves(caches))
+    return n_params * cdt / tp + cache_bytes / chips
+
+
+def load():
+    seen = {}
+    with open(RESULTS) as f:
+        for line in f:
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def enrich(rows):
+    for r in rows:
+        if not r.get("ok"):
+            continue
+        floor = min_traffic_bytes(r["arch"], r["shape"], r["chips"])
+        r["min_bytes_per_device"] = floor
+        r["bw_fraction"] = floor / max(r["bytes_per_device"], 1.0)
+        # the score on the DOMINANT axis
+        if r["bottleneck"] == "compute":
+            r["dominant_fraction"] = r["useful_flops_fraction"]
+        elif r["bottleneck"] == "memory":
+            r["dominant_fraction"] = r["bw_fraction"]
+        else:
+            r["dominant_fraction"] = r["roofline_fraction"]
+    return rows
+
+
+def table(rows) -> str:
+    hdr = ("| arch | shape | mesh | T_comp | T_mem | T_coll (ms) | bneck | "
+           "MODEL/HLO flops | BW floor/actual | roofline frac |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh')} "
+                       f"| FAILED |" + " |" * 6)
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} "
+            f"| {r['t_collective']*1e3:.1f} | {r['bottleneck'][:4]} "
+            f"| {r['useful_flops_fraction']:.2f} "
+            f"| {r.get('bw_fraction', float('nan')):.3f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = enrich(load())
+    t = table(rows)
+    path = os.path.join(ensure_out(), "perf_table.md")
+    with open(path, "w") as f:
+        f.write(t + "\n")
+    print(t)
+    ok = [r for r in rows if r.get("ok")]
+    print(f"\n{len(ok)} ok / {len(rows)} cells -> {path}")
+    # candidates for the hillclimb
+    mem = sorted((r for r in ok if r["bottleneck"] == "memory"),
+                 key=lambda r: r.get("bw_fraction", 1))
+    coll = sorted(ok, key=lambda r: -(r["t_collective"] /
+                                      max(r["t_compute"], r["t_memory"], 1e-12)))
+    print("\nworst bandwidth-utilization cells:")
+    for r in mem[:5]:
+        print(f"  {r['arch']} x {r['shape']} x {r['mesh']}: "
+              f"bw_frac {r['bw_fraction']:.3f}")
+    print("most collective-bound cells:")
+    for r in coll[:5]:
+        print(f"  {r['arch']} x {r['shape']} x {r['mesh']}: "
+              f"T_coll/T_max {r['t_collective']/max(r['t_compute'], r['t_memory'], 1e-12):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline driver: run the dry-run sweep in subprocesses (XLA_FLAGS
+isolation + compile-memory isolation) and aggregate EXPERIMENTS.md tables.
+
+    python -m benchmarks.roofline --cells all --mesh both
+    python -m benchmarks.roofline --cells qwen3-0.6b:train_4k --mesh single
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit_json, ensure_out
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RESULTS = os.path.join(ensure_out(), "roofline.jsonl")
+
+
+def run_cell(arch: str, shape: str, mesh: str, timeout: int = 3600):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    tmp = RESULTS + ".part"
+    if os.path.exists(tmp):
+        os.remove(tmp)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--json", tmp]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    sys.stdout.write(r.stdout[-2000:])
+    if r.returncode != 0:
+        sys.stderr.write(r.stderr[-4000:])
+    out = []
+    if os.path.exists(tmp):
+        with open(tmp) as f:
+            out = [json.loads(line) for line in f]
+        os.remove(tmp)
+    with open(RESULTS, "a") as f:
+        for rec in out:
+            f.write(json.dumps(rec) + "\n")
+    return out
+
+
+def load_results():
+    if not os.path.exists(RESULTS):
+        return []
+    seen = {}
+    with open(RESULTS) as f:
+        for line in f:
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r.get("mesh"))] = r  # last wins
+    return list(seen.values())
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | T_comp(ms) | T_mem(ms) | T_coll(ms) | "
+           "bottleneck | useful F | roofline frac | bytes/dev (GiB) |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh')} | "
+                       f"FAILED: {r.get('error', '?')[:60]} |" + " |" * 6)
+            continue
+        gib = (r.get("argument_bytes", 0) + r.get("temp_bytes", 0)) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} "
+            f"| {r['t_collective']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r['useful_flops_fraction']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {gib:.1f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="all",
+                    help="'all' or comma list of arch:shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--table-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    if not args.table_only:
+        if args.cells == "all":
+            from repro.configs.base import (ARCH_IDS, applicable_shapes,
+                                            get_config)
+            cells = [(a, s) for a in ARCH_IDS if a != "paper-matvec"
+                     for s in applicable_shapes(get_config(a))]
+        else:
+            cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+        meshes = {"single": ["single"], "multi": ["multi"],
+                  "both": ["single", "multi"]}[args.mesh]
+        for arch, shape in cells:
+            for mesh in meshes:
+                try:
+                    run_cell(arch, shape, mesh)
+                except subprocess.TimeoutExpired:
+                    with open(RESULTS, "a") as f:
+                        f.write(json.dumps(dict(arch=arch, shape=shape,
+                                                mesh=mesh, ok=False,
+                                                error="timeout")) + "\n")
+
+    rows = load_results()
+    table = markdown_table(rows)
+    path = os.path.join(ensure_out(), "roofline_table.md")
+    with open(path, "w") as f:
+        f.write(table + "\n")
+    print(table)
+    bad = [r for r in rows if not r.get("ok")]
+    print(f"\n{len(rows)} cells, {len(bad)} failures -> {path}")
+    return len(bad) == 0
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -1,0 +1,52 @@
+"""Benchmark aggregator: one module per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --fast       # skip MC-heavy
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer MC trials (CI mode)")
+    args = ap.parse_args(argv)
+
+    from . import (coded_step, fig_bimodal, fig_pareto, fig_sexp, kernels,
+                   queueing, table1)
+    mc = 4_000 if args.fast else 20_000
+    jobs = 400 if args.fast else 1200
+
+    suites = [
+        ("fig_sexp (paper Figs. 3-5)", lambda: fig_sexp.run(mc_trials=mc)),
+        ("fig_pareto (paper Figs. 6-10)", lambda: fig_pareto.run(mc_trials=mc)),
+        ("fig_bimodal (paper Figs. 11-18)", fig_bimodal.run),
+        ("table1 (paper Table I)", table1.run),
+        ("kernels (Pallas vs oracle + traffic model)", kernels.run),
+        ("coded_step (end-to-end trade-off)", coded_step.run),
+        ("queueing (beyond-paper: redundancy under load)",
+         lambda: queueing.run(num_jobs=jobs)),
+    ]
+    ok = True
+    t0 = time.time()
+    for name, fn in suites:
+        print(f"\n=== {name} ===")
+        try:
+            ok &= bool(fn())
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            ok = False
+    print(f"\n{'ALL BENCHMARK CHECKS PASS' if ok else 'SOME CHECKS FAILED'} "
+          f"({time.time()-t0:.1f}s)")
+    print("roofline sweep: run `python -m benchmarks.roofline --cells all "
+          "--mesh both` (subprocess-per-cell; see bench_results/)")
+    return ok
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -1,0 +1,59 @@
+"""Paper Table I: the strategy matrix (PDF x scaling -> optimal strategy
+sequence as straggling grows), regenerated from the planner.
+
+Expected (paper Table I):
+  S-Exp   x server : replication
+  S-Exp   x data   : splitting -> replication
+  S-Exp   x additive: splitting -> coding
+  Pareto  x server : splitting -> coding
+  Pareto  x data   : splitting -> replication
+  Pareto  x additive: splitting -> coding
+  Bi-Modal x any   : splitting -> coding -> splitting
+"""
+from __future__ import annotations
+
+from repro.core.planner import strategy_table
+
+from .common import Check, emit_rows
+
+# the table's qualitative content: strategies present, in sweep order
+EXPECTED = {
+    ("shifted_exp", "server"): {"must": ["replication"],
+                                "forbid": []},
+    ("shifted_exp", "data"): {"must": ["splitting", "replication"],
+                              "forbid": []},
+    ("shifted_exp", "additive"): {"must": ["splitting", "coding"],
+                                  "forbid": ["replication"]},
+    ("pareto", "server"): {"must": ["splitting", "coding"],
+                           "forbid": ["replication"]},
+    ("pareto", "data"): {"must": ["splitting"],
+                         "forbid": []},
+    ("pareto", "additive"): {"must": ["splitting", "coding"],
+                             "forbid": ["replication"]},
+    ("bimodal", "server"): {"must": ["splitting", "coding"],
+                            "forbid": ["replication"]},
+    ("bimodal", "data"): {"must": ["splitting", "coding"],
+                          "forbid": ["replication"]},
+    ("bimodal", "additive"): {"must": ["splitting", "coding"],
+                              "forbid": ["replication"]},
+}
+
+
+def run(**_) -> bool:
+    check = Check("table1")
+    table = strategy_table(n=12)
+    rows = []
+    for (fam, sc), seq in sorted(table.items()):
+        rows.append(dict(family=fam, scaling=sc, sequence="->".join(seq)))
+        exp = EXPECTED[(fam, sc)]
+        ok = all(s in seq for s in exp["must"]) and \
+            not any(s in seq for s in exp["forbid"])
+        check.expect(f"TableI {fam} x {sc}: {'->'.join(seq)}", ok,
+                     f"must={exp['must']}")
+    emit_rows("table1", rows, ["family", "scaling", "sequence"])
+    return check.summary()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if run() else 1)

@@ -1,0 +1,42 @@
+"""Hedged serving example: the paper's replication column applied to
+autoregressive decoding (coding does not apply to a nonlinear job --
+DESIGN.md §6), with tail-latency planning from fitted telemetry.
+
+    PYTHONPATH=src python examples/serve_hedged.py
+"""
+import jax
+import numpy as np
+
+from repro.core.distributions import Pareto
+from repro.launch.serve import hedge_gain, plan_replicas
+from repro.runtime import Telemetry
+
+
+def main():
+    # 1. observe per-request latencies (simulated heavy-tail service)
+    dist_true = Pareto(0.05, 1.6)
+    telem = Telemetry(window=4096)
+    telem.record_step(np.asarray(dist_true.sample(jax.random.PRNGKey(0),
+                                                  (4096,))))
+    fitted, family = telem.fit()
+    print(f"fitted service model: {family} {fitted}")
+    print(f"tail stats: {telem.straggle_stats()}")
+
+    # 2. plan hedging
+    for cost in (0.0, 0.1, 0.25, 0.5):
+        r = plan_replicas(fitted, max_r=6, cost_weight=cost)
+        print(f"  replica cost weight {cost:.2f} -> hedge r = {r} "
+              f"(latency x{hedge_gain(fitted, r):.2f})")
+
+    # 3. measure hedged tail latency
+    rng = jax.random.PRNGKey(1)
+    draws = np.asarray(dist_true.sample(rng, (20_000, 4)))
+    for r in (1, 2, 4):
+        lat = draws[:, :r].min(axis=1)
+        print(f"  r={r}: mean {lat.mean():.3f}  p99 {np.quantile(lat, .99):.3f}")
+    print("hedging collapses the p99 tail -- the paper's replication "
+          "(k=1) column realized for serving")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""End-to-end driver: train a small LM (default ~64M params; CPU-budget
+flags go down to ~20M) for a few hundred steps
+with coded data parallelism, simulated stragglers, online re-planning,
+async checkpointing, and a mid-run elastic resize.
+
+    PYTHONPATH=src python examples/train_coded_dp.py --steps 300
+
+This is the (b) end-to-end deliverable.  Default ~64M params (qwen3-0.6b
+family at reduced width); the identical driver runs the full configs on a
+pod via launch/train.py (same CodedTrainer code path).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.core.distributions import BiModal, Scaling
+from repro.data import DataConfig
+from repro.models import api
+from repro.launch.hlo_analysis import count_params
+from repro.optim import adamw
+from repro.runtime import (CodedStepConfig, CodedTrainer, StragglerSim,
+                           Telemetry, plan_fr, resize_plan)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/coded_dp_ckpt")
+    ap.add_argument("--resize-at", type=int, default=0,
+                    help="elastic resize 8->6 workers at this step (0=off)")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=32_000)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # default ~64M params (qwen3 family, 8 x 512, 32k vocab); shrink via
+    # --d-model/--layers/--vocab/--seq for CPU-budget runs
+    cfg = get_config("qwen3-0.6b").scaled(
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(args.d_model // 64, 2),
+        num_kv_heads=max(args.d_model // 128, 1), head_dim=64,
+        d_ff=4 * args.d_model, vocab_size=args.vocab, remat="none",
+        compute_dtype="float32", param_dtype="float32", flash_block_kv=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"params: {count_params(params)/1e6:.1f}M")
+
+    n = 8
+    dist = BiModal(8.0, 0.25)
+    scaling = Scaling.DATA_DEPENDENT
+    fr = plan_fr(dist, scaling, n, delta=1.0)
+    print(f"initial plan: c* = {fr['c']} "
+          f"E[T] = {fr['expected_time']:.2f} (curve {fr['curve']})")
+
+    step_cfg = CodedStepConfig(n_workers=n, c=fr["c"], unique_batch=8)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=8)
+    opt_cfg = adamw.AdamWConfig(lr=6e-4, warmup_steps=20,
+                                decay_steps=args.steps)
+    sim = StragglerSim(dist, scaling, n=n, s=fr["c"], delta=1.0, seed=3)
+    trainer = CodedTrainer(cfg, data_cfg, step_cfg, opt_cfg,
+                           alive_fn=sim.alive_fn(deadline=4.0))
+    telem = Telemetry()
+    opt_state = adamw.init(opt_cfg, params)
+
+    start = 0
+    latest = ckpt.latest_step(args.ckpt_dir)
+    if latest:
+        (restored, _) = ckpt.restore(args.ckpt_dir, latest,
+                                     {"p": params, "o": opt_state})
+        params = jax.tree.map(jax.numpy.asarray, restored["p"])
+        opt_state = jax.tree.map(jax.numpy.asarray, restored["o"])
+        start = latest
+        print(f"resumed from {latest}")
+
+    losses, pending = [], None
+    t0 = time.time()
+    for step in range(start, args.steps):
+        if args.resize_at and step == args.resize_at:
+            new_cfg = resize_plan(trainer.step_cfg, 6, dist=dist,
+                                  scaling=scaling, delta=1.0)
+            print(f"ELASTIC RESIZE @ {step}: n 8->6, c*={new_cfg.c}")
+            sim = StragglerSim(dist, scaling, n=6, s=new_cfg.c,
+                               delta=1.0, seed=4)
+            trainer.step_cfg = new_cfg
+            trainer.alive_fn = sim.alive_fn(deadline=4.0)
+        params, opt_state, m = trainer.run_step(params, opt_state, step)
+        telem.record_step(sim.sample_times(step), trainer.step_cfg.c)
+        losses.append(float(m["loss"]))
+        if (step + 1) % 25 == 0:
+            print(f"step {step+1:4d}  loss {np.mean(losses[-25:]):.4f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"dropped {trainer.stragglers_dropped}  "
+                  f"fallbacks {trainer.decode_failures}")
+        if (step + 1) % 50 == 0:
+            if pending:
+                pending.result()
+            pending = ckpt.save_async(args.ckpt_dir, step + 1,
+                                      {"p": params, "o": opt_state})
+    if pending:
+        pending.result()
+    dt = time.time() - t0
+    print(f"\n{args.steps - start} steps in {dt/60:.1f} min; "
+          f"loss {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}")
+    fit, family = telem.fit()
+    print(f"telemetry fit: {family} {fit}; stats {telem.straggle_stats()}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "no learning?"
+    print("OK: loss decreased under coded-DP with stragglers")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .store import (  # noqa: F401
+    latest_step,
+    restore,
+    restore_sharded,
+    save,
+    save_async,
+)

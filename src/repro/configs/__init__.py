@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (exact public configs) + shape cells."""
+from .base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+    get_config,
+    register,
+)

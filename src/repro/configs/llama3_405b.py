@@ -1,0 +1,21 @@
+"""llama3-405b [dense]: GQA, 128k vocab.  126L d_model=16384 128H (kv=8)
+d_ff=53248 vocab=128256  [arXiv:2407.21783; unverified].
+
+Parameters are kept in bf16 master dtype at this scale (fp32 masters +
+Adam moments for 405B exceed a v5e-256's HBM; see EXPERIMENTS.md §Dry-run
+for the per-device byte accounting).
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=5e5,
+    param_dtype="bfloat16",
+))

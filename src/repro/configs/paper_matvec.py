@@ -1,0 +1,33 @@
+"""paper-matvec: the paper's own exemplar job (Fig. 2) -- coded A @ X.
+
+Not part of the assigned 40 cells; used by examples/benchmarks to run the
+paper's system end-to-end: an (M x D) matrix splits into k row-blocks,
+MDS-encodes into n coded tasks, job completes when any k workers finish.
+"""
+import dataclasses
+
+from .base import register, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MatVecConfig:
+    name: str = "paper-matvec"
+    rows: int = 12288          # M: one CU = rows/n rows
+    cols: int = 8192           # D
+    n_workers: int = 12        # the paper's n
+    dtype: str = "float32"
+
+
+CONFIG = MatVecConfig()
+
+# also register a tiny LM-shaped placeholder so `--arch paper-matvec` resolves
+register(ModelConfig(
+    name="paper-matvec",
+    family="dense",
+    num_layers=2,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=1024,
+    vocab_size=1024,
+))

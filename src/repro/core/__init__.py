@@ -1,0 +1,38 @@
+"""Core library: the paper's diversity/parallelism contribution.
+
+Public API re-exports for the service-time models, order statistics,
+expected completion times, the k* planner, MDS/gradient coding, and the
+Monte-Carlo simulator.
+"""
+from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp, fit_service_time
+from .expectations import expected_completion_time
+from .planner import Plan, Strategy, divisors, plan, strategy_table, theorem_kstar
+from .coding import (
+    FractionalRepetitionCode,
+    decode_blocks,
+    decode_matrix,
+    encode_blocks,
+    fractional_repetition_code,
+    gc_decode_weights,
+    mds_generator,
+    task_size_gradient,
+    task_size_linear,
+)
+from .simulator import (
+    completion_curve_mc,
+    expected_completion_mc,
+    job_completion_times,
+    sample_task_times,
+    straggler_mask,
+)
+
+__all__ = [
+    "BiModal", "Pareto", "Scaling", "ServiceTime", "ShiftedExp", "fit_service_time",
+    "expected_completion_time",
+    "Plan", "Strategy", "divisors", "plan", "strategy_table", "theorem_kstar",
+    "FractionalRepetitionCode", "decode_blocks", "decode_matrix", "encode_blocks",
+    "fractional_repetition_code", "gc_decode_weights", "mds_generator",
+    "task_size_gradient", "task_size_linear",
+    "completion_curve_mc", "expected_completion_mc", "job_completion_times",
+    "sample_task_times", "straggler_mask",
+]

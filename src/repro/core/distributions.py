@@ -1,0 +1,224 @@
+"""Canonical computing-unit (CU) service-time models of the paper (Sec. II-C/D).
+
+Three CU service-time PDFs:
+  * ShiftedExp(delta, W):  Pr{X > x} = exp(-(x-delta)/W),  x >= delta
+  * Pareto(lam, alpha):    Pr{X > x} = (lam/x)^alpha,      x >= lam
+  * BiModal(B, eps):       X = 1 w.p. 1-eps,  X = B w.p. eps
+
+Three task-size scaling models for a task of s CUs (Sec. II-D):
+  * SERVER_DEPENDENT:  Y = Delta + s * X          (Model 1)
+  * DATA_DEPENDENT:    Y = s * Delta + X          (Model 2)
+  * ADDITIVE:          Y = sum_{i=1..s} X_i       (Model 3; + s*Delta shift
+                        for S-Exp, matching Sec. IV-C where
+                        Y = s*Delta + Erlang(s, W))
+
+All samplers are JAX-traceable (usable inside jit / vmap) and take explicit
+PRNG keys.  Scalar helpers (mean, tail, pdf) are plain-numpy for use in the
+planner and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Scaling(enum.Enum):
+    """How a task's service time scales with its size s (number of CUs)."""
+
+    SERVER_DEPENDENT = "server"
+    DATA_DEPENDENT = "data"
+    ADDITIVE = "additive"
+
+
+class ServiceTime:
+    """Base class for CU service-time distributions.
+
+    Subclasses implement single-CU sampling and analytics; task-level
+    (s-CU) sampling under each scaling model is provided here.
+    """
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        raise NotImplementedError
+
+    def mean(self) -> float:
+        raise NotImplementedError
+
+    def tail(self, x: np.ndarray) -> np.ndarray:
+        """Pr{X > x}."""
+        raise NotImplementedError
+
+    # -- shift/noise decomposition X = delta + Z used by scaling models -----
+    @property
+    def shift(self) -> float:
+        """Deterministic minimum component Delta (0 if none)."""
+        return 0.0
+
+    def sample_noise(self, key: jax.Array, shape) -> jax.Array:
+        """Sample the random component Z = X - shift."""
+        return self.sample(key, shape) - self.shift
+
+    # -- task-level sampling -------------------------------------------------
+    def sample_task(
+        self,
+        key: jax.Array,
+        shape: Tuple[int, ...],
+        s: int,
+        scaling: Scaling,
+        delta: float | None = None,
+    ) -> jax.Array:
+        """Sample service times of tasks consisting of ``s`` CUs.
+
+        Follows Sec. II-D exactly:
+          Model 1 (server-dep): Y = Delta + s * Z   (Z = X - Delta the noise;
+                   for distributions with no intrinsic shift, Y = s * X)
+          Model 2 (data-dep):   Y = s * Delta + Z
+          Model 3 (additive):   Y = sum of s i.i.d. X
+
+        ``delta`` overrides the deterministic per-CU component.  For
+        ShiftedExp it defaults to the distribution's own shift; for
+        Pareto/Bi-Modal under data-dependent scaling the paper introduces an
+        exogenous Delta (e.g. Fig. 7-8, 14-15), passed here explicitly, and
+        the noise Z is the full X.
+        """
+        s = int(s)
+        d = self.shift if delta is None else float(delta)
+        if scaling is Scaling.SERVER_DEPENDENT:
+            return d + s * self.sample_noise(key, shape)
+        if scaling is Scaling.DATA_DEPENDENT:
+            return s * d + self.sample_noise(key, shape)
+        if scaling is Scaling.ADDITIVE:
+            draws = self.sample(key, shape + (s,))
+            return jnp.sum(draws, axis=-1)
+        raise ValueError(f"unknown scaling {scaling}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExp(ServiceTime):
+    """X ~ S-Exp(delta, W): minimum time delta plus Exp(W) noise.
+
+    W is the *mean* of the exponential part (paper's W), so
+    Pr{X > x} = exp(-(x - delta)/W).
+    """
+
+    delta: float
+    W: float
+
+    def __post_init__(self):
+        if self.delta < 0 or self.W < 0:
+            raise ValueError("delta and W must be non-negative")
+
+    @property
+    def shift(self) -> float:
+        return self.delta
+
+    def sample(self, key, shape):
+        if self.W == 0.0:
+            return jnp.full(shape, self.delta, dtype=jnp.float32)
+        return self.delta + self.W * jax.random.exponential(key, shape)
+
+    def sample_noise(self, key, shape):
+        if self.W == 0.0:
+            return jnp.zeros(shape, dtype=jnp.float32)
+        return self.W * jax.random.exponential(key, shape)
+
+    def mean(self) -> float:
+        return self.delta + self.W
+
+    def tail(self, x):
+        x = np.asarray(x, dtype=np.float64)
+        if self.W == 0.0:
+            return (x < self.delta).astype(np.float64)
+        return np.where(x < self.delta, 1.0, np.exp(-(x - self.delta) / max(self.W, 1e-300)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Pareto(ServiceTime):
+    """X ~ Pareto(lam, alpha): Pr{X > x} = (lam/x)^alpha for x >= lam."""
+
+    lam: float
+    alpha: float
+
+    def __post_init__(self):
+        if self.lam <= 0 or self.alpha <= 0:
+            raise ValueError("lam and alpha must be positive")
+
+    def sample(self, key, shape):
+        # Inverse-CDF: X = lam * U^(-1/alpha).  U is clamped at the 2^-24
+        # quantile: fp32 uniforms are quantized in 2^-24 steps and can return
+        # exactly 0/minval, which would yield ~1e10 outliers.  The truncation
+        # biases the mean by O(2^-24·(1-1/alpha)) relative -- negligible for
+        # the alpha > 1 regimes the paper studies.
+        u = jax.random.uniform(key, shape, minval=2.0 ** -24, maxval=1.0)
+        return self.lam * u ** (-1.0 / self.alpha)
+
+    def mean(self) -> float:
+        if self.alpha <= 1:
+            return math.inf
+        return self.lam * self.alpha / (self.alpha - 1.0)
+
+    def moment(self, p: float) -> float:
+        if self.alpha <= p:
+            return math.inf
+        return self.alpha * self.lam**p / (self.alpha - p)
+
+    def tail(self, x):
+        x = np.asarray(x, dtype=np.float64)
+        return np.where(x < self.lam, 1.0, (self.lam / np.maximum(x, self.lam)) ** self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class BiModal(ServiceTime):
+    """X = 1 w.p. 1-eps ; X = B w.p. eps  (B > 1, eps = straggle prob)."""
+
+    B: float
+    eps: float
+
+    def __post_init__(self):
+        if not (0.0 <= self.eps <= 1.0):
+            raise ValueError("eps must be in [0,1]")
+        if self.B < 1.0:
+            raise ValueError("B must be >= 1")
+
+    def sample(self, key, shape):
+        straggle = jax.random.bernoulli(key, p=self.eps, shape=shape)
+        return jnp.where(straggle, self.B, 1.0).astype(jnp.float32)
+
+    def mean(self) -> float:
+        return 1.0 * (1.0 - self.eps) + self.B * self.eps
+
+    def tail(self, x):
+        x = np.asarray(x, dtype=np.float64)
+        return np.where(x < 1.0, 1.0, np.where(x < self.B, self.eps, 0.0))
+
+
+def fit_service_time(samples: np.ndarray, family: str) -> ServiceTime:
+    """Fit a service-time model from per-task telemetry (method of moments /
+    MLE).  Used by runtime.telemetry to drive the planner online."""
+    x = np.asarray(samples, dtype=np.float64)
+    x = x[np.isfinite(x)]
+    if x.size < 2:
+        raise ValueError("need at least 2 samples")
+    if family == "shifted_exp":
+        delta = float(x.min())
+        w = float(max(x.mean() - delta, 1e-12))
+        return ShiftedExp(delta=delta, W=w)
+    if family == "pareto":
+        lam = float(max(x.min(), 1e-12))
+        # MLE for alpha given lam
+        logs = np.log(x / lam)
+        alpha = float(x.size / max(logs.sum(), 1e-12))
+        return Pareto(lam=lam, alpha=alpha)
+    if family == "bimodal":
+        lo = float(np.median(x))
+        stragglers = x > 2.0 * lo
+        eps = float(stragglers.mean())
+        b = float(x[stragglers].mean() / lo) if stragglers.any() else 1.0
+        # Normalize to the paper's unit-mode convention.
+        return BiModal(B=max(b, 1.0), eps=eps)
+    raise ValueError(f"unknown family {family!r}")

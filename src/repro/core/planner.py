@@ -1,0 +1,187 @@
+"""Optimal diversity/parallelism planning (the paper's Sec. III-VI results).
+
+Given a fitted CU service-time distribution, a scaling model, and n workers,
+``plan()`` returns the k* minimizing E[Y_{k:n}] over the divisors of n
+(task sizes must be integers, exactly as in the paper's figures), together
+with the closed-form/theorem-predicted k* where one exists:
+
+  * Thm. 1  S-Exp  x server-dep : k* = 1 (replication)
+  * Thm. 2  S-Exp  x data-dep   : k* = n(-d/2 + sqrt(d + d^2/4)), d = Delta/W
+  * Thm. 4/5 S-Exp x additive   : splitting beats replication (large n);
+                                  rate-1/2 coding beats splitting when Delta=0
+  * Thm. 6  Pareto x server-dep : k* = round((alpha n - 1)/(alpha + 1))
+  * Sec.V-B Pareto x data-dep   : replication if Delta << E[X], splitting if >>
+  * Thm. 7  Pareto x additive   : splitting beats replication (alpha > 4, large n)
+  * Prop. 1/2, Thm. 8  Bi-Modal x server-dep : splitting if B <= 2;
+      LLN: coding at r = 1-eps iff eps <= (B-1)/B else splitting
+  * Thm. 9  Bi-Modal x data-dep : LLN: coding at r = 1-eps iff
+      eps <= (B-1)/(Delta+B-1) else splitting
+
+The exact arg-min over divisors is always computed as well — the theorem
+prediction is advisory (and unit-tested to agree where the paper claims it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp
+from .expectations import expected_completion_time
+
+__all__ = ["Plan", "Strategy", "divisors", "plan", "theorem_kstar", "strategy_table"]
+
+
+def divisors(n: int) -> List[int]:
+    """All positive divisors of n, ascending (legal k values)."""
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The planner's decision for one (dist, scaling, n) problem."""
+
+    n: int
+    k: int                      # argmin over divisors of n
+    expected_time: float        # E[Y_{k*:n}]
+    strategy: str               # "replication" | "splitting" | "coding"
+    code_rate: float            # k/n
+    task_size: int              # s = n/k
+    curve: dict                 # k -> E[Y_{k:n}] for all divisors
+    theorem_k: Optional[float]  # closed-form k* where the paper gives one
+    theorem_name: Optional[str]
+
+
+class Strategy:
+    REPLICATION = "replication"
+    SPLITTING = "splitting"
+    CODING = "coding"
+
+
+def _classify(k: int, n: int) -> str:
+    if k == 1:
+        return Strategy.REPLICATION
+    if k == n:
+        return Strategy.SPLITTING
+    return Strategy.CODING
+
+
+def theorem_kstar(
+    dist: ServiceTime, scaling: Scaling, n: int, delta: Optional[float] = None
+):
+    """The paper's closed-form/asymptotic k* prediction, if one exists.
+
+    Returns (k_star_float_or_None, theorem_name_or_None).  k* may be
+    fractional (continuous relaxation); the caller rounds to legal divisors.
+    """
+    if isinstance(dist, ShiftedExp):
+        if scaling is Scaling.SERVER_DEPENDENT:
+            return 1.0, "Thm1:replication"
+        if scaling is Scaling.DATA_DEPENDENT:
+            if dist.W == 0.0:
+                return float(n), "Thm2:W=0->splitting"
+            d = dist.delta / dist.W
+            k = n * (-d / 2.0 + math.sqrt(d + d * d / 4.0))
+            return min(max(k, 1.0), float(n)), "Thm2"
+        return None, None  # additive: Thm 4/5 give orderings, not k*
+    if isinstance(dist, Pareto):
+        if scaling is Scaling.SERVER_DEPENDENT:
+            k = (dist.alpha * n - 1.0) / (dist.alpha + 1.0)
+            return min(max(k, 1.0), float(n)), "Thm6"
+        return None, None
+    if isinstance(dist, BiModal):
+        if scaling is Scaling.SERVER_DEPENDENT:
+            if dist.B <= 2.0:
+                return float(n), "Prop1:splitting"
+            # Thm 8 (LLN): coding at r=1-eps iff eps <= (B-1)/B
+            if dist.eps <= (dist.B - 1.0) / dist.B:
+                return (1.0 - dist.eps) * n, "Thm8:r=1-eps"
+            return float(n), "Thm8:splitting"
+        if scaling is Scaling.DATA_DEPENDENT:
+            d = delta or 0.0
+            if dist.eps <= (dist.B - 1.0) / (d + dist.B - 1.0):
+                return (1.0 - dist.eps) * n, "Thm9:r=1-eps"
+            return float(n), "Thm9:splitting"
+        if dist.B <= 2.0:
+            return float(n), "Prop2:splitting"
+        return None, None
+    return None, None
+
+
+def plan(
+    dist: ServiceTime,
+    scaling: Scaling,
+    n: int,
+    delta: Optional[float] = None,
+    candidate_ks: Optional[Sequence[int]] = None,
+    max_task_size: Optional[int] = None,
+) -> Plan:
+    """Exact arg-min of E[Y_{k:n}] over legal k, with theorem annotation.
+
+    ``max_task_size`` caps s = n/k (i.e. lower-bounds k) — used by the
+    training runtime when per-worker memory cannot hold s data parts.
+    """
+    ks = list(candidate_ks) if candidate_ks is not None else divisors(n)
+    if max_task_size is not None:
+        ks = [k for k in ks if n // k <= max_task_size]
+    if not ks:
+        raise ValueError("no legal k after constraints")
+    curve = {
+        k: expected_completion_time(dist, scaling, k, n, delta=delta) for k in ks
+    }
+    k_best = min(curve, key=lambda k: (curve[k], k))
+    tk, tname = theorem_kstar(dist, scaling, n, delta)
+    return Plan(
+        n=n,
+        k=k_best,
+        expected_time=curve[k_best],
+        strategy=_classify(k_best, n),
+        code_rate=k_best / n,
+        task_size=n // k_best,
+        curve=curve,
+        theorem_k=tk,
+        theorem_name=tname,
+    )
+
+
+def strategy_table(n: int = 12) -> dict:
+    """Reproduce the qualitative structure of the paper's Table I.
+
+    For each (PDF, scaling) we sweep the straggling knob from light to heavy
+    and report the sequence of optimal strategies; arrows in the paper's
+    table correspond to changes along each sweep.
+    """
+    sweeps = {
+        ("shifted_exp", "server"): [ShiftedExp(1.0, w) for w in (0.1, 1.0, 5.0, 10.0)],
+        ("shifted_exp", "data"): [ShiftedExp(10.0, 0.5), ShiftedExp(10.0, 1.0),
+                                  ShiftedExp(5.0, 5.0), ShiftedExp(1.0, 10.0),
+                                  ShiftedExp(0.0, 10.0)],
+        ("shifted_exp", "additive"): [ShiftedExp(10.0, 1.0), ShiftedExp(5.0, 5.0),
+                                      ShiftedExp(1.0, 10.0), ShiftedExp(0.0, 10.0)],
+        ("pareto", "server"): [Pareto(1.0, a) for a in (5.0, 3.0, 2.0, 1.5)],
+        ("pareto", "data"): [Pareto(1.0, a) for a in (5.0, 3.0, 2.0, 1.5)],
+        ("pareto", "additive"): [Pareto(1.0, a) for a in (5.0, 3.0, 2.0, 1.3)],
+        ("bimodal", "server"): [BiModal(10.0, e) for e in (0.005, 0.2, 0.6, 0.9)],
+        ("bimodal", "data"): [BiModal(10.0, e) for e in (0.05, 0.2, 0.5, 0.9)],
+        ("bimodal", "additive"): [BiModal(10.0, e) for e in (0.005, 0.2, 0.6, 0.9)],
+    }
+    scalings = {
+        "server": Scaling.SERVER_DEPENDENT,
+        "data": Scaling.DATA_DEPENDENT,
+        "additive": Scaling.ADDITIVE,
+    }
+    table = {}
+    for (fam, sc), dists in sweeps.items():
+        seq = []
+        for d in dists:
+            delta = 5.0 if (fam in ("pareto", "bimodal") and sc == "data") else None
+            p = plan(d, scalings[sc], n, delta=delta)
+            seq.append(p.strategy)
+        # collapse consecutive repeats: "splitting -> coding -> splitting"
+        collapsed = [seq[0]]
+        for x in seq[1:]:
+            if x != collapsed[-1]:
+                collapsed.append(x)
+        table[(fam, sc)] = collapsed
+    return table

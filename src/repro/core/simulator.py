@@ -1,0 +1,103 @@
+"""Vectorized Monte-Carlo simulation of coded job completion (paper Figs.).
+
+Simulates the paper's system end to end: n workers, task size s CUs under a
+scaling model, job completes at the k-th order statistic.  JAX-jitted and
+vmapped over trials; used to
+
+  * validate every closed form in expectations.py,
+  * produce the Pareto-additive curve (paper's own Fig. 9 methodology),
+  * empirically verify stochastic dominance (Thm. 5) and the LLN regimes,
+  * drive the runtime's straggler mask sampling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distributions import Scaling, ServiceTime
+
+__all__ = [
+    "sample_task_times",
+    "job_completion_times",
+    "expected_completion_mc",
+    "completion_curve_mc",
+    "straggler_mask",
+    "empirical_survival",
+]
+
+
+def sample_task_times(
+    dist: ServiceTime,
+    key: jax.Array,
+    trials: int,
+    n: int,
+    s: int,
+    scaling: Scaling,
+    delta: Optional[float] = None,
+) -> jax.Array:
+    """(trials, n) i.i.d. task service times for tasks of s CUs."""
+    return dist.sample_task(key, (trials, n), s, scaling, delta=delta)
+
+
+def job_completion_times(task_times: jax.Array, k: int) -> jax.Array:
+    """Y_{k:n} per trial: k-th smallest of each row."""
+    # top_k of negated values is the cheapest k-th order statistic in XLA
+    neg_topk, _ = jax.lax.top_k(-task_times, k)
+    return -neg_topk[..., k - 1]
+
+
+def expected_completion_mc(
+    dist: ServiceTime,
+    scaling: Scaling,
+    k: int,
+    n: int,
+    trials: int = 100_000,
+    seed: int = 0,
+    delta: Optional[float] = None,
+) -> float:
+    """Monte-Carlo E[Y_{k:n}] with the paper's geometry s = n/k."""
+    if n % k:
+        raise ValueError(f"k={k} must divide n={n}")
+    s = n // k
+    key = jax.random.PRNGKey(seed)
+    t = sample_task_times(dist, key, trials, n, s, scaling, delta=delta)
+    return float(jnp.mean(job_completion_times(t, k)))
+
+
+def completion_curve_mc(
+    dist: ServiceTime,
+    scaling: Scaling,
+    n: int,
+    ks: Optional[Sequence[int]] = None,
+    trials: int = 100_000,
+    seed: int = 0,
+    delta: Optional[float] = None,
+) -> dict:
+    """k -> MC E[Y_{k:n}] over the divisors of n (one figure curve)."""
+    if ks is None:
+        ks = [d for d in range(1, n + 1) if n % d == 0]
+    return {
+        k: expected_completion_mc(dist, scaling, k, n, trials, seed + k, delta)
+        for k in ks
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def straggler_mask(key: jax.Array, n: int, eps: float) -> jax.Array:
+    """Bool (n,) worker-finish mask: True = finished in time (Bi-Modal view).
+
+    The runtime's coded step consumes this to zero out straggler decode
+    coefficients; on a real cluster it comes from gather timeouts instead.
+    """
+    return ~jax.random.bernoulli(key, p=eps, shape=(n,))
+
+
+def empirical_survival(samples: np.ndarray, xs: np.ndarray) -> np.ndarray:
+    """Empirical Pr{Y > x} -- used to check stochastic dominance (Thm. 5)."""
+    samples = np.sort(np.asarray(samples))
+    idx = np.searchsorted(samples, xs, side="right")
+    return 1.0 - idx / samples.size

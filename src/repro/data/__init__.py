@@ -1,0 +1,7 @@
+from .pipeline import (  # noqa: F401
+    DataConfig,
+    batch_iterator,
+    coded_batch,
+    decode_example_weights,
+    synthetic_batch,
+)

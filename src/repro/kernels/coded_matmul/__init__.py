@@ -1,0 +1,2 @@
+from .ops import coded_matmul  # noqa: F401
+from .ref import coded_matmul_ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the fused MDS-encode matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import coded_matmul as _kernel_call
+from .ref import coded_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "use_kernel",
+                                             "interpret"))
+def coded_matmul(G, A, X, bm: int = 128, bn: int = 128, bk: int = 128,
+                 use_kernel: bool = True, interpret: bool = False):
+    """C (n, M, N) with C_i = sum_j G[i,j] (A_j @ X).
+
+    ``use_kernel=False`` routes to the pure-jnp oracle (CPU path /
+    verification); ``interpret=True`` runs the Pallas kernel body in python
+    on CPU (the container's validation mode -- TPU is the target).
+    """
+    if not use_kernel:
+        return coded_matmul_ref(G, A, X)
+    return _kernel_call(G, A, X, bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused MDS-encode matmul.
+
+The paper's exemplar job (Fig. 2): A (split into k row-blocks) times X,
+dispatched as n MDS-coded tasks.  Coded task i computes
+    C_i = (sum_j G[i, j] A_j) @ X = sum_j G[i, j] (A_j @ X).
+
+Encode-then-multiply materializes the encoded blocks (G x I) A in HBM; the
+kernel fuses the encode into the K-loop so the coded operand exists only in
+VMEM.  This oracle is the mathematical spec both paths must match.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coded_matmul_ref(G: jnp.ndarray, A: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """G (n, k), A (k, M, K) row-blocks, X (K, N) -> C (n, M, N)."""
+    Ae = jnp.einsum("ij,jmk->imk", G.astype(jnp.float32), A.astype(jnp.float32))
+    return jnp.einsum("imk,kn->imn", Ae, X.astype(jnp.float32)).astype(A.dtype)

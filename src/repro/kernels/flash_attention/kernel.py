@@ -1,0 +1,96 @@
+"""Pallas TPU flash attention (prefill/training hot-spot).
+
+Standard online-softmax blocking adapted to TPU: the KV axis is the
+innermost (sequential) grid dimension, the running (max, denom, accum)
+state lives in VMEM scratch between grid steps, and causal blocks that are
+fully masked are skipped with ``pl.when`` (upper-triangle block skip), so
+compute is ~S^2/2 like the CUDA kernels but expressed via the TPU grid
+rather than warp scheduling.
+
+Layout: q/k/v are (B*H, S, D) -- heads flattened into the leading grid
+axis; GQA is handled by the caller (ops.py) via KV head indexing.
+Block sizes default to (128 q x 512 kv), MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, bq: int, bkv: int, nkv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skip: kv block strictly above the diagonal contributes 0
+    run = (not causal) or (ki * bkv <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bkv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q/k/v (BH, S, D) -> (BH, S, D)."""
+    bh, s, d = q.shape
+    bq = min(bq, s)
+    bkv = min(bkv, s)
+    assert s % bq == 0 and s % bkv == 0, (s, bq, bkv)
+    nq, nkv = s // bq, s // bkv
+    scale = 1.0 / math.sqrt(d)
+    grid = (bh, nq, nkv)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          bq=bq, bkv=bkv, nkv=nkv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""Jitted wrapper: (B, S, H, D) GQA layout -> Pallas flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _kernel_call
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
+                                             "use_kernel", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bkv: int = 512, use_kernel: bool = True,
+                    interpret: bool = False):
+    """q (B, Sq, H, D), k/v (B, Sk, KV, D) -> (B, Sq, H, D).
+
+    GQA: KV heads are repeated to H before the kernel (the kernel sees MHA);
+    the Pallas BlockSpec then streams each KV head block once per q block.
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # (B, S, H, D) -> (B*H, S, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    if use_kernel:
+        of = _kernel_call(qf, kf, vf, causal=causal, bq=bq, bkv=bkv,
+                          interpret=interpret)
+    else:
+        of = attention_ref(qf[:, None].transpose(1, 0, 2, 3),
+                           kf[:, None].transpose(1, 0, 2, 3),
+                           vf[:, None].transpose(1, 0, 2, 3),
+                           causal=causal)[0]
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

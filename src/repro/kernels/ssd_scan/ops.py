@@ -1,0 +1,18 @@
+"""Jitted wrapper for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan as _kernel_call
+from .ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 256, use_kernel: bool = True,
+             interpret: bool = False):
+    """Mamba2 SSD: returns y (B, S, H, P).  Kernel or sequential oracle."""
+    if not use_kernel:
+        return ssd_ref(x, dt, A, Bm, Cm)[0]
+    return _kernel_call(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

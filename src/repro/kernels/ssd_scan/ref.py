@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan (single head batch).
+
+Spec (same recurrence as models/mamba2.ssd_chunked, G=1):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t B_t^T
+    y_t = C_t h_t
+x (B, S, H, P), dt (B, S, H), A (H,), Bm/Cm (B, S, N) -> y (B, S, H, P).
+The oracle is the naive sequential recurrence -- the mathematically
+unambiguous form both the chunked jnp path and the Pallas kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt.astype(f32) * A.astype(f32))           # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn",
+                         xt.astype(f32) * dtt[..., None].astype(f32),
+                         Bt.astype(f32))
+        hstate = hstate * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ct.astype(f32))
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), f32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hf

@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof (without hardware) that the distribution config is
+coherent: jit(step).lower(ShapeDtypeStructs).compile() must succeed on the
+single-pod (16 data x 16 model = 256 chip) AND multi-pod (2 x 16 x 16 =
+512 chip) production meshes, and memory_analysis/cost_analysis feed the
+EXPERIMENTS.md §Dry-run / §Roofline tables.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    python -m repro.launch.dryrun --arch all --mesh both --json out.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    import jax
+    from repro.configs.base import SHAPES, applicable_shapes, get_config
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.models import api
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "multi" if multi_pod else "single"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    overrides = {}
+    if os.environ.get("REPRO_REMAT"):
+        overrides["remat"] = os.environ["REPRO_REMAT"]
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, overrides=overrides or None)
+    with mesh:
+        lowered = cell.lower()
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    hlo_dir = os.environ.get("REPRO_SAVE_HLO")
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = os.environ.get("REPRO_OPT", "base") or "base"
+        path = os.path.join(hlo_dir, f"{arch}_{shape_name}_{mesh_name}_"
+                            f"{tag.replace(',', '+')}.hlo")
+        with open(path, "w") as f:
+            f.write(compiled.as_text())
+
+    mem = compiled.memory_analysis()
+    pshapes = api.param_shapes(cfg)
+    mflops = H.model_flops_for(cfg, shape, pshapes)
+    roof = H.analyze(arch, shape_name, mesh_name, chips, compiled, mflops)
+
+    out = roof.to_dict()
+    out.update(
+        compile_s=round(t1 - t0, 1),
+        generated_code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        ok=True,
+    )
+    if verbose:
+        gb = 1024 ** 3
+        print(f"[{arch} x {shape_name} x {mesh_name}] ok "
+              f"compile={out['compile_s']}s "
+              f"args/dev={out['argument_bytes']/gb:.2f}GiB "
+              f"temp/dev={out['temp_bytes']/gb:.2f}GiB "
+              f"flops/dev={roof.flops_per_device:.3e} "
+              f"coll/dev={roof.coll_bytes_per_device:.3e}B "
+              f"T=(c{roof.t_compute*1e3:.1f} m{roof.t_memory*1e3:.1f} "
+              f"x{roof.t_collective*1e3:.1f})ms "
+              f"bottleneck={roof.bottleneck} "
+              f"roofline_frac={roof.roofline_fraction:.3f}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--json", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ARCH_IDS, applicable_shapes, get_config
+
+    archs = [a for a in ARCH_IDS if a != "paper-matvec"] \
+        if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg) if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "multi" if mp else "single",
+                                    "ok": False, "error": repr(e)})
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+        sys.exit(1)
+    print(f"\nall {len(results)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

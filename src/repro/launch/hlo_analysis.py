@@ -1,0 +1,599 @@
+"""Roofline-term extraction from the compiled dry-run artifact.
+
+Sources (no real hardware -- TPU v5e is the TARGET):
+  * ``compiled.cost_analysis()``  -> HLO FLOPs + bytes accessed (per-device
+    program: the SPMD-partitioned module);
+  * ``compiled.as_text()``        -> post-optimization HLO, parsed for
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand bytes (per-device collective traffic).
+
+Hardware constants (TPU v5e):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI
+
+Terms (seconds), with per-device quantities F, B, C:
+  T_compute = F / peak_flops      (== total_F / (chips * peak))
+  T_memory  = B / hbm_bw
+  T_coll    = C / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+# shapes like  bf16[16,4096,128]{2,1,0}  or f32[] or (tuples thereof)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s+=\s+(.*)$")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _result_type(rhs: str) -> str:
+    """Leading (possibly tuple) type expression of an instruction RHS."""
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1]
+        return rhs
+    return rhs.split(" ", 1)[0]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind operand bytes of every collective in the partitioned module.
+
+    Post-optimization HLO prints operands as bare ids (``all-reduce(%x)``),
+    so we first map every instruction id to its result bytes, then sum the
+    operand ids of each collective.  ``-start`` async variants are counted,
+    ``-done`` skipped (same transfer).  A collective inside the layer scan
+    appears once in the HLO text but executes num_layers times: the while-
+    loop trip counts are applied by multiplying ops inside while bodies by
+    their trip count (parsed from the loop condition's constant bound).
+    """
+    defs: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        t = _result_type(rhs)
+        defs[name] = sum(_shape_bytes(d, dims)
+                         for d, dims in _SHAPE_RE.findall(t))
+
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in rhs or f" {k}-start(" in rhs:
+                kind = k
+                break
+        if kind is None:
+            continue
+        open_tok = f" {kind}(" if f" {kind}(" in rhs else f" {kind}-start("
+        args = rhs.split(open_tok, 1)[1]
+        depth = 1
+        buf = []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        arglist = "".join(buf)
+        b = sum(defs.get(op, 0) for op in _OPERAND_RE.findall(arglist))
+        out[kind] += b
+        count[kind] += 1
+    out["_counts"] = count
+    return out
+
+
+# --------------------------------------------------------------------------
+# Trip-count-aware whole-program cost model from HLO text.
+#
+# XLA's HloCostAnalysis (compiled.cost_analysis()) visits every computation
+# ONCE, so anything inside a lax.scan/while body -- i.e. all the layers --
+# is under-counted by its trip count.  XLA records the trip count it proved
+# in backend_config={"known_trip_count":{"n":...}}; we propagate call
+# multiplicities (entry=1, while body x trip, fusion x callsite) and count:
+#   * FLOPs: 2 * prod(result_dims) * prod(contracting_dims) per dot
+#   * bytes: operands + result per top-level instruction (fusion internals
+#     excluded -- they live in registers/VMEM on the TPU target); dynamic-
+#     update-slice counted as 2x update bytes (in-place on TPU)
+#   * collective operand bytes per kind
+# --------------------------------------------------------------------------
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_ATTR_CALL_RE = re.compile(
+    r"(calls|body|condition|to_apply)=(%[\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_META_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "iota", "replica-id",
+             "while", "conditional", "call"}
+
+
+def _parse_instr(line: str):
+    """-> (name, result_bytes, opcode, operand_names, line) or None."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    t = _result_type(rhs)
+    rbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(t))
+    rest = rhs[len(t):].lstrip()
+    op = re.match(r"([\w\-]+)", rest)
+    opcode = op.group(1) if op else ""
+    # operand list inside the eventual first parens
+    ops = []
+    if "(" in rest:
+        args = rest.split("(", 1)[1]
+        depth = 1
+        buf = []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf.append(ch)
+        ops = _OPERAND_RE.findall("".join(buf))
+    return name, rbytes, opcode, ops, rhs
+
+
+_PASSTHRU = {"convert", "bitcast", "copy", "reshape", "transpose"}
+
+
+def _fusion_bytes(fused_instrs, opbytes, rbytes) -> float:
+    """HBM traffic of one fusion call: slice-aware reads, DUS-aware write.
+
+    A scan-body fusion typically takes the full stacked (num_layers, ...)
+    weight/carry buffers as operands but only dynamic-slices one layer's
+    worth (possibly through convert/bitcast chains): charging the full
+    operand would overcount by the trip count.  Uses are followed through
+    pass-through ops; a dynamic-update-slice root (again through converts)
+    is charged at the update size -- XLA aliases the buffer in place on the
+    TPU target.
+    """
+    if not fused_instrs:
+        return rbytes + sum(opbytes)
+    params = {}
+    info = {}
+    users = {}
+    used = set()
+    for n2, rb2, op2, ops2, rhs2 in fused_instrs:
+        info[n2] = (op2, rb2, ops2)
+        if op2 == "parameter":
+            m2 = re.search(r"parameter\((\d+)\)", rhs2)
+            if m2:
+                params[int(m2.group(1))] = n2
+        for o in ops2:
+            users.setdefault(o, []).append(n2)
+            used.add(o)
+
+    def terminal_uses(name, depth=0):
+        """Follow pass-through chains; return list of (opcode, user, pos)."""
+        out = []
+        if depth > 8:
+            return [("opaque", name, 0)]
+        for u in users.get(name, []):
+            op2, rb2, ops2 = info[u]
+            if op2 in _PASSTHRU:
+                out.extend(terminal_uses(u, depth + 1))
+            else:
+                out.append((op2, u, ops2.index(name) if name in ops2 else 0))
+        return out
+
+    read = 0.0
+    for idx, opb in enumerate(opbytes):
+        pname = params.get(idx)
+        if pname is None:
+            read += opb
+            continue
+        tu = terminal_uses(pname)
+        if tu and all(op2 == "dynamic-slice" or
+                      (op2 == "dynamic-update-slice" and pos == 0)
+                      for op2, u, pos in tu):
+            for op2, u, pos in tu:
+                _, rb2, ops2 = info[u]
+                if op2 == "dynamic-slice":
+                    read += rb2
+                else:
+                    upd = ops2[1] if len(ops2) > 1 else None
+                    read += info[upd][1] if upd in info else rb2
+        else:
+            read += opb
+
+    # root: the instruction nobody consumes, followed back through passthru
+    root = None
+    for n2, rb2, op2, ops2, rhs2 in fused_instrs:
+        if n2 not in used:
+            root = n2
+    hops = 0
+    while root is not None and info[root][0] in _PASSTHRU and hops < 8:
+        ops2 = info[root][2]
+        root = ops2[0] if ops2 else None
+        hops += 1
+    if root is not None and info[root][0] == "dynamic-update-slice":
+        ops2 = info[root][2]
+        upd = ops2[1] if len(ops2) > 1 else None
+        write = info[upd][1] if upd in info else rbytes
+    else:
+        write = rbytes
+    return read + write
+
+
+def hlo_cost(text: str, tpu_native_dtypes: bool = True) -> Dict[str, float]:
+    """Whole-program per-device cost with while trip counts applied.
+
+    ``tpu_native_dtypes``: XLA:CPU's float-normalization pass rewrites every
+    bf16 dot as convert->f32 dot->convert, which drags the surrounding
+    elementwise/collective chains to fp32 -- none of which happens on the
+    TPU target (native bf16 MXU + bf16 collectives).  When enabled, any
+    fp32 value whose producer's (non-scalar) operands are all
+    bf16-equivalent is charged at 2 bytes/element ("bf16-equivalence
+    propagation"); genuinely-fp32 state (optimizer moments, fp32 params,
+    row statistics fed by fp32 carries) is unaffected.  Both raw and
+    adjusted totals are returned."""
+    # split into computations
+    comps: Dict[str, list] = {}
+    root_op: Dict[str, str] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and not line.startswith(" "):
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            ins = _parse_instr(line)
+            if ins:
+                comps[cur].append(ins)
+                if line.lstrip().startswith("ROOT"):
+                    root_op[cur] = ins[2]
+
+    defs = {c: {i[0]: i[1] for i in instrs} for c, instrs in comps.items()}
+
+    # call graph (a DAG): fusion bodies excluded from byte accounting
+    fusion_bodies = set()
+    edges: Dict[str, list] = {c: [] for c in comps}
+    fusion_target: Dict[tuple, str] = {}
+    for c, instrs in comps.items():
+        for name, rbytes, opcode, ops, rhs in instrs:
+            trip = 1
+            tm = _TRIP_RE.search(rhs)
+            if tm:
+                trip = int(tm.group(1))
+            for kind, target in _ATTR_CALL_RE.findall(rhs):
+                if target not in comps:
+                    continue
+                if kind == "calls":
+                    fusion_bodies.add(target)
+                    edges[c].append((target, 1))
+                    fusion_target[(c, name)] = target
+                elif kind in ("body", "condition"):
+                    edges[c].append((target, trip))
+                elif kind == "to_apply":
+                    # real computations reached via call (e.g. the
+                    # closed_call bodies jax.checkpoint emits INSIDE scan
+                    # loops -- skipping these undercounts every nested
+                    # flop/byte); reduce lambdas ride along harmlessly
+                    # (scalar bodies)
+                    edges[c].append((target, 1))
+            bm = _BRANCH_RE.search(rhs)
+            if bm:
+                for target in _OPERAND_RE.findall(bm.group(1)):
+                    if target in comps:
+                        edges[c].append((target, 1))
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
+                "coll_breakdown": {}, "coll_counts": {}}
+
+    # multiplicity = sum over call paths (DAG relaxation to fixed point)
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for _ in range(64):
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for c in comps:
+            if mult[c] == 0.0:
+                continue
+            for target, k in edges[c]:
+                new[target] += mult[c] * k
+        if new == mult:
+            break
+        mult = new
+
+    # ---- TPU-native dtype adjustment: bf16-equivalence propagation -----
+    # scale[name] (per computation) = 0.5 if the fp32 value would be bf16
+    # on the TPU target, else 1.0.  Seeds: bf16-typed values.  Propagates
+    # through any op whose non-scalar operands are all bf16-equivalent.
+    # The adjustment covers ONLY the CPU float-normalization footprint,
+    # using model knowledge instead of dataflow guessing: every einsum in
+    # the models runs in the compute dtype by construction (weights are
+    # .astype(bf16)-cast at use; XLA:CPU rewrites those as fp32 dots and
+    # erases the casts).  So each f32 DOT is charged at bf16 for its result
+    # and large operands, as are the pure pass-through (convert/copy/
+    # bitcast/transpose/concat) wrappers around dots and any collective
+    # whose payload is such a dot product.  Values the model genuinely
+    # computes in f32 (softmax stats, fp32 prob streams, norm internals,
+    # optimizer math) are NOT adjusted, so model-level dtype optimizations
+    # stay measurable.
+    _WRAP_OPS = _PASSTHRU | {"concatenate", "pad", "broadcast"}
+    _PROP_OPS = set(_COLLECTIVES) | {f"{k}-start" for k in _COLLECTIVES}
+    scales: Dict[str, Dict[str, float]] = {}
+    if tpu_native_dtypes:
+        passthru_fusions = set()
+        for c in fusion_bodies:
+            ops_in = {i[2] for i in comps.get(c, [])}
+            if ops_in <= (_WRAP_OPS | _META_OPS):
+                passthru_fusions.add(c)
+        for c, instrs in comps.items():
+            dtypes = {}
+            marked = {}
+            opcodes = {}
+            for name, rb, op, ops, rhs in instrs:
+                t = _result_type(rhs)
+                dtypes[name] = t.split("[")[0].lstrip("(")
+                opcodes[name] = op
+                if op == "dot" and dtypes[name] == "f32":
+                    marked[name] = True
+            # wrappers + collectives around marked dots (3 hops)
+            for _ in range(3):
+                changed = False
+                for name, rb, op, ops, rhs in instrs:
+                    if marked.get(name) or dtypes.get(name) != "f32":
+                        continue
+                    eff = op
+                    if op == "fusion" and                             fusion_target.get((c, name)) in passthru_fusions:
+                        eff = "convert"
+                    if not (eff in _WRAP_OPS or eff in _PROP_OPS):
+                        continue
+                    big = [o for o in ops
+                           if defs[c].get(o, 0) >= max(rb // 8, 1)]
+                    if big and all(marked.get(o, False) for o in big):
+                        marked[name] = True
+                        changed = True
+                if not changed:
+                    break
+            scales[c] = {n: (0.5 if marked.get(n) else 1.0) for n in dtypes}
+            scales[c]["__dtypes__"] = dtypes
+
+    def _scaled(c, name, b):
+        return b * scales.get(c, {}).get(name, 1.0)
+
+    flops = 0.0
+    bytes_ = 0.0
+    bytes_raw = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for c, instrs in comps.items():
+        m = mult.get(c, 0.0)
+        if m == 0.0:
+            continue
+        d = defs[c]
+        for name, rbytes, opcode, ops, rhs in instrs:
+            if opcode == "dot":
+                flops += m * _dot_flops(rhs, instrs, d)
+            if c in fusion_bodies:
+                continue                      # bytes: top level only
+            if opcode in _META_OPS or opcode.endswith("-done"):
+                continue
+            opbytes = [d.get(o, 0) for o in ops]
+            opbytes_s = [_scaled(c, o, d.get(o, 0)) for o in ops]
+            if opcode == "dot" and tpu_native_dtypes:
+                # the model's einsum reads bf16 operands on TPU
+                dt_map = scales.get(c, {}).get("__dtypes__", {})
+                opbytes_s = [b * 0.5 if dt_map.get(o) == "f32" and b == raw_b
+                             else b
+                             for o, b, raw_b in zip(ops, opbytes_s, opbytes)]
+            if opcode == "dynamic-update-slice" and len(opbytes) >= 2:
+                raw = 2 * opbytes[1]
+                adj = 2 * opbytes_s[1]
+            elif opcode in ("dynamic-slice", "slice", "gather"):
+                raw = 2 * rbytes
+                adj = 2 * _scaled(c, name, rbytes)
+            elif opcode == "fusion":
+                tgt = fusion_target.get((c, name))
+                raw = _fusion_bytes(comps.get(tgt, []), opbytes, rbytes)
+                ratio = raw / max(rbytes + sum(opbytes), 1)
+                adj = ratio * (_scaled(c, name, rbytes) + sum(opbytes_s))
+            else:
+                raw = rbytes + sum(opbytes)
+                adj = _scaled(c, name, rbytes) + sum(opbytes_s)
+            bytes_raw += m * raw
+            bytes_ += m * adj
+            for k in _COLLECTIVES:
+                if opcode == k or opcode == f"{k}-start":
+                    coll[k] += m * sum(opbytes_s)
+                    counts[k] += int(m)
+                    break
+    return {"flops": flops, "bytes": bytes_, "bytes_raw": bytes_raw,
+            "coll_bytes": float(sum(coll.values())),
+            "coll_breakdown": coll, "coll_counts": counts}
+
+
+def _dot_flops(rhs: str, instrs, defs_bytes) -> float:
+    """2 * prod(result) * prod(contracting dims) for one dot line."""
+    # result elem count from result type
+    t = _result_type(rhs)
+    shapes = _SHAPE_RE.findall(t)
+    if not shapes:
+        return 0.0
+    rdims = [int(x) for x in shapes[0][1].split(",") if x] or [1]
+    relems = math.prod(rdims)
+    # lhs operand: first operand name; find its def line for its dims
+    m = re.search(r"dot\((%[\w.\-]+)", rhs)
+    cd = _CDIMS_RE.search(rhs)
+    if not (m and cd):
+        return 2.0 * relems  # fallback: treat as elementwise-ish
+    lhs_name = m.group(1)
+    lhs_dims = None
+    for name, rbytes, opcode, ops, line in instrs:
+        if name == lhs_name:
+            ts = _SHAPE_RE.findall(_result_type(line.split(" = ", 1)[1]
+                                                if " = " in line else line))
+            if ts:
+                lhs_dims = [int(x) for x in ts[0][1].split(",") if x] or [1]
+            break
+    if lhs_dims is None:
+        return 2.0 * relems
+    cdims = [int(x) for x in cd.group(1).split(",") if x]
+    csize = math.prod(lhs_dims[i] for i in cdims) if cdims else 1
+    return 2.0 * relems * csize
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float              # 6ND train / 2ND decode-prefill (total)
+    peak_bytes_per_device: Optional[float] = None
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time: max of the three terms (full overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_total -- remat/redundancy waste flag."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: model_flops / (step_time * chips * peak)."""
+        denom = self.step_time * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else float("nan")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(bottleneck=self.bottleneck, step_time=self.step_time,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            compiled, model_flops: float) -> Roofline:
+    cost = hlo_cost(compiled.as_text())
+    flops = float(cost["flops"])
+    byts = float(cost["bytes"])
+    coll = dict(cost["coll_breakdown"])
+    counts = cost["coll_counts"]
+    cbytes = float(cost["coll_bytes"])
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                    getattr(ma, "argument_size_in_bytes", 0) +
+                    getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=cbytes,
+        coll_breakdown={**coll, "counts": counts},
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=byts / HBM_BW,
+        t_collective=cbytes / LINK_BW,
+        model_flops=model_flops,
+        peak_bytes_per_device=mem,
+    )
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS: 6*N*D (train) / 2*N*D (inference), N = active params
+# --------------------------------------------------------------------------
+
+def count_params(shapes_tree) -> int:
+    import jax
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes_tree))
+
+
+def active_params(cfg, total: int) -> float:
+    """MoE: experts contribute topk/E of their weights per token."""
+    if not cfg.num_experts:
+        return float(total)
+    from ..models.transformer import _layer_shapes
+    expert_names = ("w_gate", "w_up", "w_down")
+    shapes = _layer_shapes(cfg)
+    expert = sum(math.prod(shapes[n]) for n in expert_names)
+    frac = cfg.experts_per_token / cfg.num_experts
+    return float(total - expert + expert * frac)
+
+
+def model_flops_for(cfg, shape, pshapes) -> float:
+    n_total = count_params(pshapes)
+    n_act = active_params(cfg, n_total)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        return 6.0 * n_act * tokens
+    return 2.0 * n_act * tokens

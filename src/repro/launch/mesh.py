@@ -1,0 +1,60 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before first jax init; smoke tests must see
+the single real CPU device).
+
+Axes:
+  single-pod : (data=16, model=16)            = 256 chips  (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+``data``  -- batch (DP) + parameter/optimizer sharding (FSDP/ZeRO-3); the
+             paper's n redundancy workers are contiguous slices of it.
+``model`` -- tensor parallel: attention heads / FFN hidden / experts / vocab.
+``pod``   -- pure DP across pods (gradient all-reduce over DCN).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over the real local devices (smoke tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, max(n // data, 1))[:2], ("data", "model"))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Largest (pod, data) prefix that divides the batch; P() if none."""
+    axes = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # try full (pod, data), then data alone
+    for cand in (axes, axes[-1:],):
+        total = math.prod(sizes[a] for a in cand)
+        if global_batch % total == 0:
+            return P(cand if len(cand) > 1 else cand[0])
+    return P(None)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

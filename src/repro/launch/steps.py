@@ -1,0 +1,195 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape)
+cell -- the single source of truth shared by the dry-run, the roofline
+benchmarks, and the real train/serve drivers.
+
+Cell kinds (from configs.SHAPES):
+  train   -> train_step(params, opt, tokens, labels, weights)   [coded step]
+  prefill -> prefill_step(params, tokens) -> logits
+  decode  -> serve_step(params, cache, tokens, pos) -> (logits, cache)
+
+All inputs are ShapeDtypeStructs (no allocation); shardings are
+NamedShardings derived from the model's partition_specs and the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES, get_config
+from ..models import api
+from ..optim import adamw
+from ..runtime.coded_step import weighted_loss_fn
+from .mesh import batch_spec, named
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape x mesh) dry-run/benchmark cell, ready to lower."""
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable                    # the step function (un-jitted)
+    args: Tuple[Any, ...]           # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+    mesh: Any = None
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        from ..models.layers import activation_mesh
+        with activation_mesh(self.mesh):
+            return self.jitted().lower(*self.args)
+
+
+def default_opt_cfg() -> adamw.AdamWConfig:
+    return adamw.AdamWConfig()
+
+
+def _token_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
+    """(ShapeDtypeStruct, NamedSharding) for the model input."""
+    bspec = batch_spec(mesh, batch)
+    if cfg.embedding_inputs:
+        sds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                   jnp.dtype(cfg.compute_dtype))
+        spec = P(bspec[0] if len(bspec) else None, None, None)
+    else:
+        sds = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        spec = P(bspec[0] if len(bspec) else None, None)
+    return sds, NamedSharding(mesh, spec)
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None) -> Cell:
+    opt_cfg = opt_cfg or default_opt_cfg()
+    pshapes = api.param_shapes(cfg)
+    pspecs = named(mesh, api.partition_specs(cfg))
+    oshapes = adamw.state_shapes(opt_cfg, pshapes)
+    ospecs = adamw.state_specs(api.partition_specs(cfg))
+    ospecs = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                          is_leaf=lambda s: isinstance(s, P))
+    tok_sds, tok_shard = _token_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    if cfg.embedding_inputs:
+        lab_sds = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                       jnp.int32)
+        lab_shard = NamedSharding(mesh, batch_spec(mesh, shape.global_batch))
+    else:
+        lab_sds, lab_shard = tok_sds, tok_shard
+    w_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.float32)
+    w_shard = NamedSharding(mesh, batch_spec(mesh, shape.global_batch))
+
+    loss = weighted_loss_fn(cfg)
+
+    from ..models.layers import opt_enabled
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def train_step(params, opt_state, tokens, labels, weights):
+        if opt_enabled("params16"):
+            # cast-before-gather: one sharded fp32->bf16 cast per step, so
+            # the per-layer FSDP all-gathers move bf16 (half the bytes) and
+            # the forward never re-reads fp32 masters
+            def fwd_loss(p):
+                pc = jax.tree.map(
+                    lambda a: a.astype(cdt)
+                    if a.dtype == jnp.float32 else a, p)
+                return loss(pc, tokens, labels, weights)
+            lval, grads = jax.value_and_grad(fwd_loss)(params)
+        else:
+            lval, grads = jax.value_and_grad(loss)(params, tokens, labels,
+                                                   weights)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = lval
+        return params, opt_state, metrics
+
+    rep = NamedSharding(mesh, P())
+    out_shardings = (pspecs, ospecs,
+                     {"loss": rep, "grad_norm": rep, "lr": rep})
+    return Cell(
+        arch=cfg.name, shape=shape.name, kind="train",
+        fn=train_step,
+        args=(pshapes, oshapes, tok_sds, lab_sds, w_sds),
+        in_shardings=(pspecs, ospecs, tok_shard, lab_shard, w_shard),
+        out_shardings=out_shardings,
+        donate=(0, 1),
+        mesh=mesh,
+    )
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Cell:
+    pshapes = api.param_shapes(cfg)
+    pspecs = named(mesh, api.partition_specs(cfg))
+    tok_sds, tok_shard = _token_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    vspec = P(batch_spec(mesh, shape.global_batch)[0]
+              if len(batch_spec(mesh, shape.global_batch)) else None,
+              None, "model")
+
+    def prefill_step(params, tokens):
+        return api.forward(cfg, params, tokens)
+
+    return Cell(
+        arch=cfg.name, shape=shape.name, kind="prefill",
+        fn=prefill_step,
+        args=(pshapes, tok_sds),
+        in_shardings=(pspecs, tok_shard),
+        out_shardings=NamedSharding(mesh, vspec),
+        mesh=mesh,
+    )
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Cell:
+    """One serve_step: new token with a KV/SSM cache of seq_len."""
+    pshapes = api.param_shapes(cfg)
+    pspecs = named(mesh, api.partition_specs(cfg))
+    cshapes = api.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    cspecs = named(mesh, api.cache_specs(cfg))
+    if cfg.embedding_inputs:
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.d_model),
+                                       jnp.dtype(cfg.compute_dtype))
+        tspec = P(batch_spec(mesh, shape.global_batch)[0]
+                  if len(batch_spec(mesh, shape.global_batch)) else None,
+                  None, None)
+    else:
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tspec = P(batch_spec(mesh, shape.global_batch)[0]
+                  if len(batch_spec(mesh, shape.global_batch)) else None, None)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    vspec = P(batch_spec(mesh, shape.global_batch)[0]
+              if len(batch_spec(mesh, shape.global_batch)) else None,
+              None, "model")
+
+    def serve_step(params, cache, tokens, pos):
+        return api.decode_step(cfg, params, cache, tokens, pos)
+
+    return Cell(
+        arch=cfg.name, shape=shape.name, kind="decode",
+        fn=serve_step,
+        args=(pshapes, cshapes, tok_sds, pos_sds),
+        in_shardings=(pspecs, cspecs, NamedSharding(mesh, tspec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, vspec), cspecs),
+        donate=(1,),
+        mesh=mesh,
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh)

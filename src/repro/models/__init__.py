@@ -1,0 +1,2 @@
+"""Pure-pytree JAX model zoo for the assigned architecture pool."""
+from . import api, frontends, layers, mamba2, moe, ssm_lm, transformer  # noqa: F401

@@ -1,0 +1,30 @@
+"""Modality frontend STUBS for [audio]/[vlm] archs (per the assignment).
+
+The transformer BACKBONE is the assigned architecture; the frontend
+(wav2vec-style conv feature extractor for hubert, InternViT for internvl2)
+is replaced by precomputed frame / patch embeddings: ``input_specs()`` for
+those archs yields (B, S, d_model) embedding tensors and these helpers
+generate deterministic synthetic ones for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def synthetic_frame_embeddings(cfg: ModelConfig, key: jax.Array,
+                               batch: int, seq: int,
+                               dtype: str = "bfloat16") -> jax.Array:
+    """Stand-in for a 20ms-hop audio feature extractor output."""
+    x = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+    return (x / jnp.sqrt(cfg.d_model)).astype(jnp.dtype(dtype))
+
+
+def synthetic_patch_embeddings(cfg: ModelConfig, key: jax.Array,
+                               batch: int, seq: int,
+                               dtype: str = "bfloat16") -> jax.Array:
+    """Stand-in for InternViT patch embeddings projected to the LM width."""
+    x = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+    return (0.02 * x).astype(jnp.dtype(dtype))

@@ -1,0 +1,310 @@
+"""Mamba2 (SSD -- state-space duality) blocks, pure-pytree JAX.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060):
+within-chunk computation is an attention-like (Q x Q) masked matmul, the
+across-chunk part is a linear recurrence over chunk states scanned with
+``lax.scan``.  Training/prefill use the chunked path; decode keeps the
+recurrent state (B, H, P, N) and a depthwise-conv tail buffer.
+
+Shapes follow the paper's notation:
+  d_in = expand * d_model, heads H = d_in / head_dim, head dim P,
+  state size N, n_groups G = 1 (B and C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P_
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+CONV_K = 4   # depthwise causal conv kernel width (Mamba default)
+N_GROUPS = 1
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+# --------------------------------------------------------------------------
+# Parameters (single layer, stacked by caller)
+# --------------------------------------------------------------------------
+
+def layer_shapes(cfg: ModelConfig, nl: int) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_model
+    d_in, h, p, n = dims(cfg)
+    gn = N_GROUPS * n
+    return {
+        "norm": (nl, d),
+        "wz": (nl, d, d_in),
+        "wx": (nl, d, d_in),
+        "wB": (nl, d, gn),
+        "wC": (nl, d, gn),
+        "wdt": (nl, d, h),
+        "conv_x": (nl, CONV_K, d_in),
+        "conv_B": (nl, CONV_K, gn),
+        "conv_C": (nl, CONV_K, gn),
+        "A_log": (nl, h),
+        "D": (nl, h),
+        "dt_bias": (nl, h),
+        "gate_norm": (nl, d_in),
+        "out_proj": (nl, d_in, d),
+    }
+
+
+def layer_specs(cfg: ModelConfig, fsdp: str = "data", tp: str = "model") -> Dict[str, P_]:
+    d_in, h, p, n = dims(cfg)
+    inner = tp if d_in % 16 == 0 else None
+    head = tp if h % 16 == 0 else None
+    return {
+        "norm": P_(None, None),
+        "wz": P_(None, fsdp, inner),
+        "wx": P_(None, fsdp, inner),
+        "wB": P_(None, fsdp, None),
+        "wC": P_(None, fsdp, None),
+        "wdt": P_(None, fsdp, head),
+        "conv_x": P_(None, None, inner),
+        "conv_B": P_(None, None, None),
+        "conv_C": P_(None, None, None),
+        "A_log": P_(None, head),
+        "D": P_(None, head),
+        "dt_bias": P_(None, head),
+        "gate_norm": P_(None, inner),
+        "out_proj": P_(None, inner, fsdp),
+    }
+
+
+def init_layer_params(cfg: ModelConfig, nl: int, key: jax.Array) -> Params:
+    shapes = layer_shapes(cfg, nl)
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if "norm" in name or name == "D":
+            out[name] = jnp.ones(shape, jnp.dtype(cfg.param_dtype))
+        elif name == "A_log":
+            # A in [-1, -16): log of uniform init (mamba2 default)
+            u = jax.random.uniform(k, shape, minval=1.0, maxval=16.0)
+            out[name] = jnp.log(u).astype(jnp.dtype(cfg.param_dtype))
+        elif name == "dt_bias":
+            # softplus^-1 of dt ~ U[1e-3, 1e-1]
+            u = jax.random.uniform(k, shape, minval=1e-3, maxval=1e-1)
+            out[name] = jnp.log(jnp.expm1(u)).astype(jnp.dtype(cfg.param_dtype))
+        elif name.startswith("conv"):
+            out[name] = L.dense_init(k, shape, CONV_K, jnp.dtype(cfg.param_dtype))
+        else:
+            out[name] = L.dense_init(k, shape, shape[1], jnp.dtype(cfg.param_dtype))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Depthwise causal conv (width CONV_K) -- train and streaming forms
+# --------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B, S, C), w (K, C) -> (B, S, C); y[t] = sum_i w[i] x[t-K+1+i]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out
+
+
+def causal_conv_step(tail: jax.Array, x_t: jax.Array, w: jax.Array):
+    """Streaming step: tail (B, K-1, C) previous inputs, x_t (B, 1, C).
+    Returns (y_t (B, 1, C), new_tail)."""
+    window = jnp.concatenate([tail, x_t], axis=1)               # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype))[:, None]
+    return y, window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan (train / prefill)
+# --------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bmat: jax.Array, Cmat: jax.Array,
+                chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD: x (B,S,H,P), dt (B,S,H) (>0), A (H,) (<0),
+    Bmat/Cmat (B,S,N) (G=1 shared over heads).
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    Recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t * x_t B_t^T ;  y_t = C_t h_t.
+    """
+    b, s, h, p = x.shape
+    n = Bmat.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xs = x.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bs = Bmat.reshape(b, nc, chunk, n).astype(f32)
+    Cs = Cmat.reshape(b, nc, chunk, n).astype(f32)
+    # move chunk axis first for scan
+    xs = xs.transpose(1, 0, 2, 3, 4)
+    dts = dts.transpose(1, 0, 2, 3)
+    Bs = Bs.transpose(1, 0, 2, 3)
+    Cs = Cs.transpose(1, 0, 2, 3)
+    A32 = A.astype(f32)
+
+    def chunk_body(hstate, inputs):
+        xc, dtc, Bc, Cc = inputs            # (B,Q,H,P),(B,Q,H),(B,Q,N),(B,Q,N)
+        dA = dtc * A32                      # (B,Q,H) decay log per step
+        lcum = jnp.cumsum(dA, axis=1)       # (B,Q,H) inclusive
+        # -- intra-chunk (attention-like) term ------------------------------
+        # decay(t, s) = exp(lcum_t - lcum_s) for s <= t
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]        # (B,Q,Q,H)
+        tmask = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        decay = jnp.where(tmask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", Cc, Bc)                 # (B,Q,Q)
+        w = cb[..., None] * decay * dtc[:, None, :, :]          # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w, xc.astype(f32))
+        # -- chunk state and inter-chunk term -------------------------------
+        tail = lcum[:, -1:, :] - lcum                           # exp(l_Q - l_s)
+        wB = Bc[:, :, None, :] * (jnp.exp(tail) * dtc)[..., None]  # (B,Q,H,N)
+        state = jnp.einsum("bqhn,bqhp->bhpn", wB, xc.astype(f32))
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Cc, hstate) * \
+            jnp.exp(lcum)[..., None]
+        h_new = hstate * jnp.exp(lcum[:, -1, :])[:, :, None, None] + state
+        return h_new, (y_intra + y_inter)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), f32)
+    h_final, ys = jax.lax.scan(chunk_body, h0.astype(f32), (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(hstate: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    A: jax.Array, B_t: jax.Array, C_t: jax.Array):
+    """One-token recurrence.  hstate (B,H,P,N), x_t (B,H,P), dt_t (B,H),
+    B_t/C_t (B,N).  Returns (y_t (B,H,P), h_new)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt_t.astype(f32) * A.astype(f32))              # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x_t.astype(f32) * dt_t[..., None].astype(f32),
+                     B_t.astype(f32))
+    h_new = hstate * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C_t.astype(f32))
+    return y.astype(x_t.dtype), h_new
+
+
+# --------------------------------------------------------------------------
+# Full mamba2 block
+# --------------------------------------------------------------------------
+
+def _project(cfg: ModelConfig, lp: Params, x: jax.Array):
+    """Shared projections; returns (z, xbc_raw, dt_raw) pre-conv."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, lp["wz"].astype(dtype))
+    xin = jnp.einsum("bsd,de->bse", h, lp["wx"].astype(dtype))
+    Braw = jnp.einsum("bsd,dn->bsn", h, lp["wB"].astype(dtype))
+    Craw = jnp.einsum("bsd,dn->bsn", h, lp["wC"].astype(dtype))
+    dtraw = jnp.einsum("bsd,dh->bsh", h, lp["wdt"].astype(dtype))
+    return z, xin, Braw, Craw, dtraw
+
+
+def _finish(cfg: ModelConfig, lp: Params, y: jax.Array, x_conv: jax.Array,
+            z: jax.Array) -> jax.Array:
+    """Skip (D), gating, norm, out-projection.  y/x_conv (B,S,H,P)."""
+    d_in, heads, p, n = dims(cfg)
+    b, s = y.shape[:2]
+    y = y + x_conv * lp["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, lp["out_proj"].astype(y.dtype))
+
+
+def mamba2_block(cfg: ModelConfig, lp: Params, x: jax.Array) -> jax.Array:
+    """Full-sequence mamba2 block (train / prefill, chunked SSD)."""
+    d_in, heads, p, n = dims(cfg)
+    b, s = x.shape[:2]
+    z, xin, Braw, Craw, dtraw = _project(cfg, lp, x)
+    xc = jax.nn.silu(causal_conv(xin, lp["conv_x"]))
+    Bc = jax.nn.silu(causal_conv(Braw, lp["conv_B"]))
+    Cc = jax.nn.silu(causal_conv(Craw, lp["conv_C"]))
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xc.reshape(b, s, heads, p)
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # pad the tail; dt=0 there makes the padded steps exact no-ops
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_p = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        C_p = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        y, _ = ssd_chunked(xh_p, dt_p, A, B_p, C_p, chunk=chunk)
+        y = y[:, :s]
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bc, Cc, chunk=chunk)
+    return _finish(cfg, lp, y, xh, z)
+
+
+def mamba2_block_decode(cfg: ModelConfig, lp: Params, x: jax.Array,
+                        state: Dict[str, jax.Array]):
+    """One-token block step.  x (B, 1, d).  state:
+      {"h": (B,H,P,N), "conv_x": (B,K-1,d_in), "conv_B": (B,K-1,N),
+       "conv_C": (B,K-1,N)}."""
+    d_in, heads, p, n = dims(cfg)
+    b = x.shape[0]
+    z, xin, Braw, Craw, dtraw = _project(cfg, lp, x)
+    xc, tail_x = causal_conv_step(state["conv_x"], xin, lp["conv_x"])
+    Bc, tail_B = causal_conv_step(state["conv_B"], Braw, lp["conv_B"])
+    Cc, tail_C = causal_conv_step(state["conv_C"], Craw, lp["conv_C"])
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xc.reshape(b, heads, p)
+    y, h_new = ssd_decode_step(state["h"], xh, dt[:, 0], A, Bc[:, 0], Cc[:, 0])
+    out = _finish(cfg, lp, y[:, None], xh[:, None], z)
+    new_state = {"h": h_new, "conv_x": tail_x, "conv_B": tail_B,
+                 "conv_C": tail_C}
+    return out, new_state
+
+
+def init_block_state(cfg: ModelConfig, nl: int, batch: int) -> Dict[str, jax.Array]:
+    """Stacked decode state for nl layers."""
+    d_in, heads, p, n = dims(cfg)
+    f32 = jnp.float32
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return {
+        "h": jnp.zeros((nl, batch, heads, p, n), f32),
+        "conv_x": jnp.zeros((nl, batch, CONV_K - 1, d_in), dtype),
+        "conv_B": jnp.zeros((nl, batch, CONV_K - 1, N_GROUPS * n), dtype),
+        "conv_C": jnp.zeros((nl, batch, CONV_K - 1, N_GROUPS * n), dtype),
+    }
+
+
+def block_state_shapes(cfg: ModelConfig, nl: int, batch: int):
+    d_in, heads, p, n = dims(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return {
+        "h": jax.ShapeDtypeStruct((nl, batch, heads, p, n), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((nl, batch, CONV_K - 1, d_in), dtype),
+        "conv_B": jax.ShapeDtypeStruct((nl, batch, CONV_K - 1, N_GROUPS * n), dtype),
+        "conv_C": jax.ShapeDtypeStruct((nl, batch, CONV_K - 1, N_GROUPS * n), dtype),
+    }
+
+
+def block_state_specs(cfg: ModelConfig, fsdp: str = "data", tp: str = "model"):
+    d_in, heads, p, n = dims(cfg)
+    head = tp if heads % 16 == 0 else None
+    inner = tp if d_in % 16 == 0 else None
+    return {
+        "h": P_(None, None, head, None, None),
+        "conv_x": P_(None, None, None, inner),
+        "conv_B": P_(None, None, None, None),
+        "conv_C": P_(None, None, None, None),
+    }

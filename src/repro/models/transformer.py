@@ -1,0 +1,305 @@
+"""Decoder/encoder transformer LM family (dense + MoE) as pure pytrees.
+
+Covers the assigned archs: deepseek-7b, llama3-405b, qwen3-0.6b (qk_norm),
+yi-9b, dbrx-132b (MoE), qwen3-moe-235b-a22b (MoE), hubert-xlarge
+(encoder-only, embedding inputs), internvl2-76b (embedding inputs).
+
+Layer parameters are stacked along a leading ``num_layers`` axis and the
+forward pass is a single ``lax.scan`` over layers, so the lowered HLO is
+O(1) in depth (essential for the 126-layer dry-run) and activation
+rematerialization is one ``jax.checkpoint`` on the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .moe import moe_ffn
+
+Params = Dict[str, Any]
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to a multiple of 128 (MXU + model-axis sharding)."""
+    return (cfg.vocab_size + 127) // 128 * 128
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# Parameter construction
+# --------------------------------------------------------------------------
+
+def _layer_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv, f, nl = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.num_layers
+    shapes = {
+        "attn_norm": (nl, d),
+        "wq": (nl, d, h, hd),
+        "wk": (nl, d, kv, hd),
+        "wv": (nl, d, kv, hd),
+        "wo": (nl, h, hd, d),
+        "mlp_norm": (nl, d),
+    }
+    if cfg.qk_norm:
+        shapes["q_norm"] = (nl, hd)
+        shapes["k_norm"] = (nl, hd)
+    if cfg.num_experts:
+        e = cfg.num_experts
+        shapes.update(
+            router=(nl, d, e),
+            w_gate=(nl, e, d, f),
+            w_up=(nl, e, d, f),
+            w_down=(nl, e, f, d),
+        )
+    else:
+        shapes.update(w_gate=(nl, d, f), w_up=(nl, d, f), w_down=(nl, f, d))
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree (for the allocation-free dry-run)."""
+    dt = _dt(cfg)
+    v = padded_vocab(cfg)
+    tree: Params = {"layers": {k: jax.ShapeDtypeStruct(s, dt)
+                               for k, s in _layer_shapes(cfg).items()}}
+    if not cfg.embedding_inputs:
+        tree["embed"] = jax.ShapeDtypeStruct((v, cfg.d_model), dt)
+    tree["final_norm"] = jax.ShapeDtypeStruct((cfg.d_model,), dt)
+    tree["lm_head"] = jax.ShapeDtypeStruct((cfg.d_model, v), dt)
+    return tree
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Materialized parameters (smoke tests / examples; full configs use
+    param_shapes + dry-run only)."""
+    dt = _dt(cfg)
+    shapes = _layer_shapes(cfg)
+    keys = jax.random.split(key, len(shapes) + 2)
+    layer_p = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if "norm" in name:
+            layer_p[name] = jnp.ones(shape, dt)
+        else:
+            fan_in = shape[-2] if len(shape) > 2 else shape[-1]
+            if name == "wo":
+                fan_in = shape[1] * shape[2]
+            if name in ("wq", "wk", "wv"):
+                fan_in = shape[1]
+            layer_p[name] = L.dense_init(k, shape, fan_in, dt)
+    tree: Params = {"layers": layer_p}
+    v = padded_vocab(cfg)
+    if not cfg.embedding_inputs:
+        tree["embed"] = L.embed_init(keys[-2], (v, cfg.d_model), dt)
+    tree["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    tree["lm_head"] = L.dense_init(keys[-1], (cfg.d_model, v), cfg.d_model, dt)
+    return tree
+
+
+def partition_specs(cfg: ModelConfig, fsdp: str = "data", tp: str = "model") -> Params:
+    """PartitionSpec pytree congruent with param_shapes.
+
+    TP shards the head / ffn / expert / vocab axes over ``tp`` where
+    divisible by the axis size (checked at mesh-apply time by GSPMD; we use
+    static divisibility by 16 here, the production model-axis size); FSDP
+    shards a complementary axis over ``data``.  KV projections whose head
+    count does not divide the tp axis stay replicated over tp (standard
+    GQA practice) but remain FSDP-sharded.
+    """
+    def head_spec(nheads):
+        return tp if nheads % 16 == 0 else None
+
+    specs_l = {
+        "attn_norm": P(None, None),
+        "wq": P(None, fsdp, head_spec(cfg.num_heads), None),
+        "wk": P(None, fsdp, head_spec(cfg.num_kv_heads), None),
+        "wv": P(None, fsdp, head_spec(cfg.num_kv_heads), None),
+        "wo": P(None, head_spec(cfg.num_heads), None, fsdp),
+        "mlp_norm": P(None, None),
+    }
+    if cfg.qk_norm:
+        specs_l["q_norm"] = P(None, None)
+        specs_l["k_norm"] = P(None, None)
+    if cfg.num_experts:
+        ep = tp if cfg.num_experts % 16 == 0 else None
+        ffn_tp = None if ep else tp
+        specs_l.update(
+            router=P(None, fsdp, None),
+            w_gate=P(None, ep, fsdp, ffn_tp),
+            w_up=P(None, ep, fsdp, ffn_tp),
+            w_down=P(None, ep, ffn_tp, fsdp),
+        )
+    else:
+        specs_l.update(
+            w_gate=P(None, fsdp, tp), w_up=P(None, fsdp, tp),
+            w_down=P(None, tp, fsdp),
+        )
+    tree: Params = {"layers": specs_l}
+    if not cfg.embedding_inputs:
+        tree["embed"] = P(tp, fsdp)
+    tree["final_norm"] = P(None)
+    tree["lm_head"] = P(fsdp, tp)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, lp: Params, x: jax.Array,
+                positions: jax.Array,
+                cache_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_pos: Optional[jax.Array] = None,
+                window: int = 0):
+    """One attention sub-block.  Returns (out, new_kv) where new_kv is the
+    updated (k_cache, v_cache) when a cache is provided, else None."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhe->bshe", h, lp["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhe->bshe", h, lp["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_kv = None
+    if cache_kv is not None:
+        kc, vc = cache_kv
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_pos, 0, 0))
+        new_kv = (kc, vc)
+        kv_len = cache_pos + k.shape[1]
+        out = L.attention(q, kc, vc, causal=True, q_offset=cache_pos,
+                          block_kv=cfg.flash_block_kv, kv_len=kv_len,
+                          window=window)
+    else:
+        out = L.attention(q, k, v, causal=cfg.causal, q_offset=0,
+                          block_kv=cfg.flash_block_kv, window=window)
+    out = jnp.einsum("bshe,hed->bsd", out, lp["wo"].astype(dtype))
+    return out, new_kv
+
+
+def _ffn_block(cfg: ModelConfig, lp: Params, x: jax.Array) -> jax.Array:
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.num_experts:
+        return moe_ffn(h, lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"],
+                       top_k=cfg.experts_per_token,
+                       capacity_factor=cfg.capacity_factor)
+    return L.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.embedding_inputs:
+        return tokens.astype(dtype)          # already (B, S, d) embeddings
+    return params["embed"].astype(dtype)[tokens]
+
+
+def _unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dtype))
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, V_pad).  Train / prefill path."""
+    x = L.constrain(_embed(cfg, params, tokens), "batch", None, None)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def layer(x, lp):
+        a, _ = _attn_block(cfg, lp, x, positions)
+        x = L.constrain(x + a, "batch", None, None)
+        x = L.constrain(x + _ffn_block(cfg, lp, x), "batch", None, None)
+        return x, None
+
+    if cfg.remat == "full":
+        layer = jax.checkpoint(layer)
+    elif cfg.remat == "dots":
+        # save matmul outputs, recompute the cheap elementwise chains:
+        # trades a little residency for removing the recompute HBM traffic
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(layer, x, params["layers"])
+    return L.constrain(_unembed(cfg, params, x), "batch", None, "model")
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            labels: jax.Array) -> jax.Array:
+    logits = forward(cfg, params, tokens)
+    # padded vocab tail never appears in labels; mask not needed
+    return L.cross_entropy_loss(logits, labels)
+
+
+# --------------------------------------------------------------------------
+# KV-cache serving path
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype: str = "bfloat16") -> Tuple[jax.Array, jax.Array]:
+    """Stacked KV cache (L, B, S_max, KV, hd) pair."""
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    z = jnp.zeros(shape, jnp.dtype(dtype))
+    return (z, z)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype: str = "bfloat16"):
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    sds = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    return (sds, sds)
+
+
+def cache_specs(cfg: ModelConfig, fsdp: str = "data", tp: str = "model"):
+    """KV-cache sharding (L, B, S, KV, hd).
+
+    KV heads shard over ``tp`` when divisible; otherwise (GQA with few KV
+    heads) the HEAD_DIM axis is tp-sharded instead -- RoPE is applied before
+    the cache write, so head_dim becomes a pure contraction axis and GSPMD
+    turns the q.k score into a psum (one small collective per decode step
+    on the dense single-token path), keeping the multi-GB cache sharded
+    rather than replicated 16-way.
+    """
+    if cfg.num_kv_heads % 16 == 0:
+        spec = P(None, fsdp, None, tp, None)
+    else:
+        spec = P(None, fsdp, None, None, tp)
+    return (spec, spec)
+
+
+def decode_step(cfg: ModelConfig, params: Params,
+                cache: Tuple[jax.Array, jax.Array],
+                tokens: jax.Array, pos: jax.Array):
+    """One autoregressive step: tokens (B, 1) (or (B, 1, d) embeddings),
+    ``pos`` scalar int32 position. Returns (logits (B, 1, V), new_cache)."""
+    x = _embed(cfg, params, tokens)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+
+    def layer(carry, inputs):
+        x = carry
+        lp, kc, vc = inputs
+        a, new_kv = _attn_block(cfg, lp, x, positions, cache_kv=(kc, vc),
+                                cache_pos=pos)
+        x = x + a
+        x = x + _ffn_block(cfg, lp, x)
+        return x, new_kv
+
+    x, new_cache = jax.lax.scan(layer, x, (params["layers"],) + tuple(cache))
+    return _unembed(cfg, params, x), new_cache

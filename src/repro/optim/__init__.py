@@ -1,0 +1,12 @@
+from .adamw import (  # noqa: F401
+    AdamWConfig,
+    OptState,
+    accumulate_grads,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    schedule,
+    state_shapes,
+    state_specs,
+)

@@ -1,0 +1,136 @@
+"""AdamW with sharded pytree states, global-norm clipping, schedules and
+micro-batch gradient accumulation.  Pure-pytree (no optax dependency).
+
+Moments inherit the parameter PartitionSpecs, so under pjit the optimizer
+state is FSDP-sharded exactly like the parameters (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # schedule
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # moment dtype (fp32 default; bf16 halves optimizer memory)
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array     # () int32
+    mu: Params          # first moment
+    nu: Params          # second moment
+
+
+def init(cfg: AdamWConfig, params: Params) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(z, params),
+                    nu=jax.tree.map(z, params))
+
+
+def state_shapes(cfg: AdamWConfig, param_shapes: Params) -> OptState:
+    """ShapeDtypeStruct mirror for the allocation-free dry-run."""
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=jax.tree.map(z, param_shapes),
+                    nu=jax.tree.map(z, param_shapes))
+
+
+def state_specs(param_specs: Params) -> OptState:
+    """PartitionSpecs: moments shard exactly like their parameters."""
+    from jax.sharding import PartitionSpec as P
+    return OptState(step=P(), mu=param_specs, nu=param_specs)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def apply_updates(cfg: AdamWConfig, params: Params, grads: Params,
+                  state: OptState):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g32 * g32 * (1 - b2)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step, new_mu, new_nu), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def accumulate_grads(loss_fn: Callable, params: Params, batches,
+                     num_micro: int):
+    """Sequential micro-batch gradient accumulation via lax.scan.
+
+    ``batches``: pytree whose leaves have a leading ``num_micro`` axis.
+    Returns (mean_loss, mean_grads).
+    """
+    def body(carry, micro):
+        loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+        acc_l, acc_g = carry
+        return (acc_l + loss / num_micro,
+                jax.tree.map(lambda a, g: a + g / num_micro, acc_g, grads)), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros),
+                                    batches, length=num_micro)
+    return loss, grads

@@ -1,0 +1,222 @@
+"""Event-driven master/worker cluster simulator (Fig. 1 as a discrete-event
+system), extending the paper from single-job analysis to the QUEUEING
+regime its references study (Joshi-Soljanin-Wornell [18], Gardner et al.).
+
+The paper computes E[Y_{k:n}] for one job in isolation.  In a real cluster
+jobs ARRIVE; redundancy then has a second cost besides lost parallelism:
+it inflates server occupancy, so the optimal redundancy level shifts with
+LOAD.  This simulator measures that shift end to end:
+
+  * n workers, each an exclusive server with its own FCFS queue;
+  * jobs arrive (Poisson by default), each of size n CUs;
+  * the master pre-processes each job with an [n, k] strategy (splitting /
+    coding / replication): n tasks of s = n/k CUs, one per worker;
+  * a job completes when any k of its n tasks finish; its remaining tasks
+    are CANCELLED (purged from queues; in-service remnants run to
+    completion unless ``preempt`` -- the paper's any-k barrier plus the
+    cancel-on-complete of redundancy systems);
+  * task service times are drawn from the paper's CU models + scaling.
+
+Outputs per run: mean/percentile job latency, worker utilization, mean
+wasted work (executed-but-cancelled CU time) -- the quantities that decide
+k* under load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.distributions import Scaling, ServiceTime
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_workers: int
+    k: int                        # diversity/parallelism knob (divides n)
+    arrival_rate: float           # jobs / unit time (Poisson)
+    num_jobs: int = 2000
+    preempt: bool = True          # cancel in-service remnant tasks
+    cancel_overhead: float = 0.0  # time to purge a cancelled task
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_workers % self.k:
+            raise ValueError("k must divide n")
+
+
+@dataclasses.dataclass
+class JobStats:
+    arrival: float
+    start: float = 0.0
+    done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.done - self.arrival
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    latencies: np.ndarray
+    utilization: float
+    wasted_frac: float            # cancelled-work time / total busy time
+    throughput: float
+
+    def summary(self) -> dict:
+        q = np.quantile
+        return dict(
+            mean=float(self.latencies.mean()),
+            p50=float(q(self.latencies, 0.50)),
+            p95=float(q(self.latencies, 0.95)),
+            p99=float(q(self.latencies, 0.99)),
+            utilization=self.utilization,
+            wasted_frac=self.wasted_frac,
+            throughput=self.throughput,
+        )
+
+
+class _Worker:
+    """One exclusive server: FCFS queue of (job_id, service_time)."""
+
+    __slots__ = ("queue", "busy_until", "current", "busy_time",
+                 "wasted_time")
+
+    def __init__(self):
+        self.queue: List[Tuple[int, float]] = []
+        self.busy_until = 0.0
+        self.current: Optional[Tuple[int, float, float]] = None  # job,t0,svc
+        self.busy_time = 0.0
+        self.wasted_time = 0.0
+
+
+def simulate(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
+             delta: Optional[float] = None) -> ClusterResult:
+    """Run the discrete-event simulation; returns latency/utilization stats.
+
+    Implementation: a single event heap of task completions + arrivals.
+    Each worker processes its queue in order; cancellation removes queued
+    tasks of completed jobs and (if ``preempt``) truncates the in-service
+    remnant at the cancellation instant.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    n, k = cfg.n_workers, cfg.k
+    s = n // k
+
+    # pre-sample task service times: (num_jobs, n)
+    import jax
+    key = jax.random.PRNGKey(cfg.seed)
+    svc = np.asarray(dist.sample_task(key, (cfg.num_jobs, n), s, scaling,
+                                      delta=delta), dtype=np.float64)
+    inter = rng.exponential(1.0 / cfg.arrival_rate, size=cfg.num_jobs)
+    arrivals = np.cumsum(inter)
+
+    workers = [_Worker() for _ in range(n)]
+    jobs: Dict[int, JobStats] = {}
+    finished_tasks: Dict[int, int] = {}
+    done_jobs: set = set()
+
+    # event heap: (time, seq, kind, payload)
+    events: List[Tuple[float, int, str, tuple]] = []
+    seq = 0
+    for j, t in enumerate(arrivals):
+        heapq.heappush(events, (float(t), seq, "arrive", (j,)))
+        seq += 1
+
+    def start_next(w: _Worker, widx: int, now: float):
+        nonlocal seq
+        while w.queue:
+            job, st = w.queue.pop(0)
+            if job in done_jobs:
+                continue                      # purged from queue (free)
+            w.current = (job, now, st)
+            w.busy_until = now + st
+            heapq.heappush(events, (w.busy_until, seq, "finish",
+                                    (widx, job)))
+            seq += 1
+            return
+        w.current = None
+
+    completed = 0
+    while events and completed < cfg.num_jobs:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "arrive":
+            (j,) = payload
+            jobs[j] = JobStats(arrival=now)
+            finished_tasks[j] = 0
+            for widx, w in enumerate(workers):
+                w.queue.append((j, svc[j, widx]))
+                if w.current is None:
+                    start_next(w, widx, now)
+        else:  # finish
+            widx, job = payload
+            w = workers[widx]
+            if w.current is None or w.current[0] != job:
+                continue                      # stale event (cancelled)
+            _, t0, st = w.current
+            w.busy_time += now - t0
+            if job in done_jobs:
+                w.wasted_time += now - t0     # remnant ran to completion
+            else:
+                finished_tasks[job] += 1
+                if finished_tasks[job] == k:
+                    done_jobs.add(job)
+                    jobs[job].done = now
+                    completed += 1
+                    # cancel: purge queues; preempt in-service remnants
+                    for widx2, w2 in enumerate(workers):
+                        if w2 is w:
+                            continue
+                        if w2.current is not None and w2.current[0] == job:
+                            if cfg.preempt:
+                                _, t02, _ = w2.current
+                                w2.busy_time += now - t02
+                                w2.wasted_time += now - t02
+                                w2.busy_until = now + cfg.cancel_overhead
+                                start_next(w2, widx2,
+                                           now + cfg.cancel_overhead)
+            start_next(w, widx, now)
+
+    horizon = max((j.done for j in jobs.values() if j.done > 0),
+                  default=1.0)
+    lat = np.array([j.latency for j in jobs.values() if j.done > 0])
+    busy = sum(w.busy_time for w in workers)
+    waste = sum(w.wasted_time for w in workers)
+    return ClusterResult(
+        latencies=lat,
+        utilization=busy / (n * horizon),
+        wasted_frac=waste / max(busy, 1e-12),
+        throughput=len(lat) / horizon,
+    )
+
+
+def latency_vs_redundancy(dist: ServiceTime, scaling: Scaling, n: int,
+                          arrival_rate: float, num_jobs: int = 2000,
+                          delta: Optional[float] = None,
+                          seed: int = 0) -> Dict[int, dict]:
+    """Mean/percentile latency for every legal k at one load level."""
+    out = {}
+    for k in [d for d in range(1, n + 1) if n % d == 0]:
+        cfg = ClusterConfig(n_workers=n, k=k, arrival_rate=arrival_rate,
+                            num_jobs=num_jobs, seed=seed)
+        out[k] = simulate(cfg, dist, scaling, delta=delta).summary()
+    return out
+
+
+def optimal_k_vs_load(dist: ServiceTime, scaling: Scaling, n: int,
+                      loads: List[float], num_jobs: int = 1500,
+                      delta: Optional[float] = None) -> Dict[float, int]:
+    """k* (by mean latency) at each load -- the beyond-paper curve.
+
+    ``loads`` are offered loads rho ~ arrival_rate * E[single-job work] /
+    capacity; we pass arrival rates directly and report the argmin-k map.
+    """
+    out = {}
+    for lam in loads:
+        curves = latency_vs_redundancy(dist, scaling, n, lam,
+                                       num_jobs=num_jobs, delta=delta)
+        out[lam] = min(curves, key=lambda k: curves[k]["mean"])
+    return out

@@ -1,0 +1,151 @@
+"""The coded any-k-of-n gradient step: the paper's technique as a training
+feature.
+
+The ``n`` redundancy workers are the ``n_groups`` contiguous slices of the
+``data`` mesh axis.  Data parts are assigned by a fractional-repetition
+gradient code (core.coding); each worker computes the loss over its
+(replicated) part rows.  Decode is fused into the gradient all-reduce: the
+per-example loss weights carry the decode coefficients (a_i = 0 for
+stragglers, one finisher per part group), so the single psum XLA already
+emits for data-parallel backprop *is* the decode -- no master round-trip,
+no extra collective.  See DESIGN.md §4.
+
+On a real cluster the straggler mask comes from a gather-with-timeout at
+the step barrier; here it is sampled from the paper's service-time models
+(runtime.straggler).  Either way the jitted step function is identical:
+``weights`` is just an input.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.coding import FractionalRepetitionCode, gc_decode_weights
+from ..data.pipeline import DataConfig, coded_batch, decode_example_weights
+from ..models import api
+from ..models.layers import cross_entropy_loss
+from ..optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedStepConfig:
+    """Redundancy plan for one training job."""
+    n_workers: int            # redundancy groups (divides the data-axis size)
+    c: int                    # replication factor (task size in parts); c=1
+                              # is splitting, c=n is replication
+    unique_batch: int         # unique examples per step (the "job size")
+
+    def __post_init__(self):
+        if self.n_workers % self.c:
+            raise ValueError("c must divide n_workers")
+
+    @property
+    def code(self) -> FractionalRepetitionCode:
+        return FractionalRepetitionCode(n=self.n_workers, c=self.c)
+
+    @property
+    def coded_batch_rows(self) -> int:
+        """Materialized rows = unique * c (replication inflates the batch)."""
+        return self.unique_batch * self.c
+
+    @property
+    def per_worker_rows(self) -> int:
+        return self.coded_batch_rows // self.n_workers
+
+
+def weighted_loss_fn(cfg: ModelConfig) -> Callable:
+    """loss(params, tokens, labels, weights) with per-example weights.
+
+    weights (B,) -- decode coefficients expanded to examples; the weighted
+    mean over coded rows equals the plain mean over unique rows when the
+    weights come from ``decode_example_weights``.
+    """
+    def loss(params, tokens, labels, weights):
+        logits = api.forward(cfg, params, tokens)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = (logz - gold).mean(axis=-1)          # (B,) per-example
+        return (nll * weights).mean()
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig) -> Callable:
+    """(params, opt_state, tokens, labels, weights) -> (params, opt, metrics).
+
+    The returned function is pjit-able; decode weights ride in as data.
+    """
+    loss = weighted_loss_fn(cfg)
+
+    def step(params, opt_state, tokens, labels, weights):
+        lval, grads = jax.value_and_grad(loss)(params, tokens, labels, weights)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = lval
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, tokens, labels):
+        logits = api.forward(cfg, params, tokens)
+        return cross_entropy_loss(logits, labels)
+    return eval_step
+
+
+class CodedTrainer:
+    """Host-side driver: builds coded batches, samples/ingests straggler
+    masks, derives decode weights, and invokes the jitted step.
+
+    ``alive_fn(step) -> bool (n,)`` supplies the straggler mask (simulated
+    here; gather timeouts in production).  If a part group loses all its
+    workers, decode is impossible: the step falls back to WAITING for the
+    full barrier (all-ones weights on the unique rows) -- the fault-
+    tolerance path -- and the event is counted.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
+                 step_cfg: CodedStepConfig, opt_cfg: adamw.AdamWConfig,
+                 alive_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 jit: bool = True, donate: bool = True):
+        self.model_cfg = model_cfg
+        self.data_cfg = dataclasses.replace(
+            data_cfg, global_batch=step_cfg.unique_batch)
+        self.step_cfg = step_cfg
+        self.opt_cfg = opt_cfg
+        self.alive_fn = alive_fn
+        step = make_train_step(model_cfg, opt_cfg)
+        self.step_fn = jax.jit(
+            step, donate_argnums=(0, 1) if donate else ()) if jit else step
+        self.decode_failures = 0
+        self.stragglers_dropped = 0
+
+    def weights_for(self, alive: np.ndarray) -> np.ndarray:
+        code = self.step_cfg.code
+        try:
+            a = gc_decode_weights(code, alive)
+            self.stragglers_dropped += int((~alive).sum())
+        except RuntimeError:
+            # a whole group straggled: wait for everyone (full barrier)
+            self.decode_failures += 1
+            a = np.zeros(code.n, np.float32)
+            for g in range(code.num_groups):
+                a[g * code.c] = 1.0     # deterministic: first member per group
+        return decode_example_weights(
+            code, a, self.step_cfg.per_worker_rows,
+            self.step_cfg.unique_batch)
+
+    def run_step(self, params, opt_state, step: int):
+        toks, labs = coded_batch(self.data_cfg, step, self.step_cfg.code)
+        alive = (self.alive_fn(step) if self.alive_fn is not None
+                 else np.ones(self.step_cfg.n_workers, bool))
+        w = self.weights_for(alive)
+        return self.step_fn(params, opt_state, jnp.asarray(toks),
+                            jnp.asarray(labs), jnp.asarray(w))

@@ -1,0 +1,60 @@
+"""Elastic scaling: re-derive the redundancy plan and data-axis grouping
+when workers join/leave, without touching the model pytree.
+
+The model/optimizer pytrees are LOGICAL (mesh-agnostic); on a resize the
+driver (1) checkpoints or keeps the host copy, (2) builds the new mesh,
+(3) re-applies shardings (checkpoint.restore_sharded), (4) asks this module
+for a new coded-step config consistent with the new worker count, and
+(5) resumes.  Node failure is the special case "shrink by the dead nodes":
+the planner treats permanent failure as Bi-Modal straggling with B -> inf
+(a worker that never finishes), which drives the optimal plan toward more
+redundancy (Sec. VI of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.distributions import BiModal, Scaling, ServiceTime
+from .coded_step import CodedStepConfig
+from .straggler import plan_fr
+
+
+def resize_plan(old: CodedStepConfig, new_n: int,
+                dist: Optional[ServiceTime] = None,
+                scaling: Scaling = Scaling.DATA_DEPENDENT,
+                delta: Optional[float] = None,
+                keep_unique_batch: bool = True) -> CodedStepConfig:
+    """A coded-step config for ``new_n`` workers.
+
+    Re-plans c* for the fitted service model on the new n (falls back to
+    the old code rate rounded to a divisor).  The unique batch is kept so
+    the optimization trajectory is unchanged across resizes.
+    """
+    if dist is not None:
+        c = plan_fr(dist, scaling, new_n, delta=delta)["c"]
+    else:
+        target_rate = old.c / old.n_workers
+        divs = [d for d in range(1, new_n + 1) if new_n % d == 0]
+        c = min(divs, key=lambda d: abs(d / new_n - target_rate))
+    unique = old.unique_batch if keep_unique_batch else \
+        old.unique_batch * new_n // old.n_workers
+    # unique batch must split over the new group count
+    g = new_n // c
+    if unique % g:
+        unique = (unique // g + 1) * g
+    return CodedStepConfig(n_workers=new_n, c=c, unique_batch=unique)
+
+
+def failure_adjusted_model(eps_fail: float, base_eps: float = 0.05,
+                           B: float = 100.0) -> BiModal:
+    """Service model that folds permanent node failure into straggling.
+
+    A failed node is a straggler of unbounded magnitude; numerically we cap
+    B (the planner's optima are insensitive to B beyond ~100x, cf. paper
+    Fig. 12).  eps = P(slow or dead).
+    """
+    eps = min(base_eps + eps_fail, 1.0)
+    return BiModal(B=B, eps=eps)

@@ -1,0 +1,80 @@
+"""Per-worker step-time telemetry -> fitted service-time model -> re-plan.
+
+The paper's planner needs the service-time PDF and scaling model.  In
+production neither is known a priori: this module keeps a sliding window of
+per-worker task times (from the step barrier), fits each candidate family
+by maximum likelihood / method of moments, selects the best fit by
+log-likelihood, and hands the fitted model to ``core.planner.plan`` /
+``runtime.straggler.plan_fr`` -- the paper's Table I as a control loop.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Deque, Optional, Tuple
+
+import numpy as np
+
+from ..core.distributions import (BiModal, Pareto, Scaling, ServiceTime,
+                                  ShiftedExp, fit_service_time)
+
+
+@dataclasses.dataclass
+class Telemetry:
+    window: int = 512
+
+    def __post_init__(self):
+        self._times: Deque[float] = collections.deque(maxlen=self.window)
+        self._task_size: int = 1
+
+    def record_step(self, worker_times: np.ndarray, task_size: int = 1):
+        """Record the per-worker completion times of one step."""
+        self._task_size = task_size
+        for t in np.asarray(worker_times, dtype=np.float64).ravel():
+            if math.isfinite(t):
+                self._times.append(float(t))
+
+    @property
+    def num_samples(self) -> int:
+        return len(self._times)
+
+    def samples(self) -> np.ndarray:
+        return np.asarray(self._times, dtype=np.float64)
+
+    # -- model selection ----------------------------------------------------
+
+    def _loglik(self, dist: ServiceTime, x: np.ndarray) -> float:
+        """Approximate log-likelihood via the tail function (finite diff)."""
+        eps = 1e-6 * max(x.std(), 1e-9)
+        f = (dist.tail(x - eps) - dist.tail(x + eps)) / (2 * eps)
+        return float(np.log(np.maximum(f, 1e-300)).sum())
+
+    def fit(self) -> Tuple[ServiceTime, str]:
+        """Best-fitting family among the paper's three, by log-likelihood."""
+        if self.num_samples < 8:
+            raise ValueError("not enough telemetry samples")
+        x = self.samples()
+        best = None
+        for family in ("shifted_exp", "pareto", "bimodal"):
+            try:
+                d = fit_service_time(x, family)
+            except Exception:
+                continue
+            ll = self._loglik(d, x)
+            if best is None or ll > best[2]:
+                best = (d, family, ll)
+        assert best is not None
+        return best[0], best[1]
+
+    def straggle_stats(self) -> dict:
+        x = self.samples()
+        med = float(np.median(x))
+        stragglers = x > 2.0 * med
+        return {
+            "median": med,
+            "p99": float(np.quantile(x, 0.99)),
+            "straggle_frac": float(stragglers.mean()),
+            "straggle_magnitude": float(x[stragglers].mean() / med)
+            if stragglers.any() else 1.0,
+        }

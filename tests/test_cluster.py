@@ -1,0 +1,66 @@
+"""Event-driven cluster simulator: conservation laws + paper consistency."""
+import numpy as np
+import pytest
+
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.planner import plan
+from repro.core.simulator import expected_completion_mc
+from repro.runtime.cluster import (ClusterConfig, latency_vs_redundancy,
+                                   simulate)
+
+
+def test_single_job_matches_order_statistic():
+    """At arrival_rate -> 0 a job never queues: mean latency == E[Y_{k:n}]."""
+    d = ShiftedExp(1.0, 5.0)
+    cfg = ClusterConfig(n_workers=8, k=4, arrival_rate=1e-4, num_jobs=500,
+                        seed=3)
+    res = simulate(cfg, d, Scaling.SERVER_DEPENDENT)
+    mc = expected_completion_mc(d, Scaling.SERVER_DEPENDENT, 4, 8,
+                                trials=40_000)
+    assert abs(res.latencies.mean() - mc) / mc < 0.08
+
+
+def test_low_load_best_k_matches_planner():
+    d = BiModal(10.0, 0.3)
+    curves = latency_vs_redundancy(d, Scaling.ADDITIVE, 12,
+                                   arrival_rate=0.01, num_jobs=600)
+    best = min(curves, key=lambda k: curves[k]["mean"])
+    assert best == plan(d, Scaling.ADDITIVE, 12).k
+
+
+def test_utilization_and_waste_bounds():
+    d = Pareto(1.0, 2.0)
+    cfg = ClusterConfig(n_workers=6, k=3, arrival_rate=0.05, num_jobs=400,
+                        seed=1)
+    res = simulate(cfg, d, Scaling.SERVER_DEPENDENT)
+    assert 0.0 < res.utilization <= 1.0
+    assert 0.0 <= res.wasted_frac < 1.0
+    assert res.throughput > 0
+
+
+def test_replication_saturates_under_load():
+    """n-fold replication inflates work n-fold: queue blows up at loads
+    splitting handles easily (the beyond-paper queueing effect)."""
+    d = BiModal(10.0, 0.3)
+    lam = 0.12
+    rep = simulate(ClusterConfig(12, 1, lam, num_jobs=500, seed=2), d,
+                   Scaling.ADDITIVE)
+    split = simulate(ClusterConfig(12, 12, lam, num_jobs=500, seed=2), d,
+                     Scaling.ADDITIVE)
+    assert rep.latencies.mean() > 5 * split.latencies.mean()
+    assert rep.wasted_frac > 0.5
+
+
+def test_splitting_has_no_waste():
+    """k = n cancels nothing: wasted work must be exactly zero."""
+    d = ShiftedExp(1.0, 2.0)
+    res = simulate(ClusterConfig(8, 8, 0.02, num_jobs=300, seed=4), d,
+                   Scaling.DATA_DEPENDENT)
+    assert res.wasted_frac == 0.0
+
+
+def test_latency_nonnegative_and_fifo_consistent():
+    d = ShiftedExp(0.5, 1.0)
+    res = simulate(ClusterConfig(4, 2, 0.1, num_jobs=300, seed=5), d,
+                   Scaling.ADDITIVE)
+    assert (res.latencies > 0).all()

@@ -1,0 +1,130 @@
+"""MDS codes over the reals and gradient coding: exactness properties."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding as C
+
+
+# ------------------------------------------------------------- MDS generator
+@given(
+    n=st.integers(1, 14),
+    data=st.data(),
+)
+@settings(max_examples=30, deadline=None)
+def test_mds_any_k_rows_invertible(n, data):
+    k = data.draw(st.integers(1, n))
+    G = C.mds_generator(n, k, dtype=np.float64)
+    assert G.shape == (n, k)
+    np.testing.assert_allclose(G[:k], np.eye(k), atol=1e-9)
+    rng = np.random.default_rng(0)
+    # sample up to 10 random k-subsets and check conditioning
+    all_sets = list(itertools.combinations(range(n), k))
+    idx = rng.choice(len(all_sets), size=min(10, len(all_sets)), replace=False)
+    for i in idx:
+        S = list(all_sets[i])
+        sub = G[S]
+        assert np.linalg.cond(sub) < 1e8
+
+
+def test_decode_matrix_roundtrip():
+    n, k = 8, 3
+    G = C.mds_generator(n, k, dtype=np.float64)
+    for S in [(0, 1, 2), (5, 6, 7), (0, 4, 7), (2, 3, 6)]:
+        D = C.decode_matrix(G, S)
+        np.testing.assert_allclose(D @ G[list(S)], np.eye(k), atol=1e-8)
+
+
+def test_encode_decode_blocks_roundtrip():
+    n, k = 6, 3
+    G = C.mds_generator(n, k, dtype=np.float64)
+    rng = np.random.default_rng(1)
+    blocks = jnp.asarray(rng.normal(size=(k, 4, 5)))
+    coded = C.encode_blocks(G, blocks)
+    assert coded.shape == (n, 4, 5)
+    # systematic: first k coded blocks are the originals
+    np.testing.assert_allclose(np.asarray(coded[:k]), np.asarray(blocks), atol=1e-10)
+    for S in [(0, 1, 2), (3, 4, 5), (1, 3, 5)]:
+        rec = C.decode_blocks(G, list(S), coded[np.array(S)])
+        # jnp computes in float32 by default -> fp32-level tolerance
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(blocks), atol=5e-4)
+
+
+def test_coded_matvec_end_to_end():
+    """The paper's Fig. 2 exemplar: coded A @ x from any k of n task outputs."""
+    n, k = 6, 3
+    rows, cols = 12, 7  # 12 rows -> k=3 blocks of 4 rows
+    G = C.mds_generator(n, k, dtype=np.float64)
+    rng = np.random.default_rng(2)
+    A = rng.normal(size=(rows, cols))
+    x = rng.normal(size=(cols,))
+    blocks = A.reshape(k, rows // k, cols)
+    coded_A = np.asarray(C.encode_blocks(G, jnp.asarray(blocks)))
+    # each of the n workers computes its coded block times x (task size s=n/k CUs)
+    outputs = coded_A @ x
+    for S in [(0, 1, 2), (2, 4, 5), (1, 3, 5)]:
+        rec = np.asarray(C.decode_blocks(G, list(S), jnp.asarray(outputs[list(S)])))
+        np.testing.assert_allclose(rec.reshape(rows), A @ x, atol=2e-3)
+
+
+# ------------------------------------------------------- gradient coding (FR)
+@pytest.mark.parametrize("n,c", [(4, 2), (6, 2), (6, 3), (12, 4), (8, 8), (8, 1)])
+def test_fr_code_structure(n, c):
+    code = C.fractional_repetition_code(n, c)
+    B = code.assignment()
+    assert B.shape == (n, n // c)
+    assert (B.sum(axis=1) == 1).all()           # each worker one group
+    assert (B.sum(axis=0) == c).all()           # each group replicated c times
+    assert code.k == n - c + 1
+
+
+def test_fr_decodes_under_any_legal_straggler_set():
+    n, c = 6, 3
+    code = C.fractional_repetition_code(n, c)
+    # any c-1 = 2 stragglers are tolerated
+    for dead in itertools.combinations(range(n), c - 1):
+        alive = np.ones(n, dtype=bool)
+        alive[list(dead)] = False
+        a = C.gc_decode_weights(code, alive)
+        # one unit coefficient per group, on an alive worker
+        B = code.assignment()
+        np.testing.assert_allclose(a @ B, np.ones(code.num_groups))
+        assert np.all(a[~alive] == 0)
+
+
+def test_fr_decode_raises_when_group_wiped_out():
+    code = C.fractional_repetition_code(6, 2)
+    alive = np.ones(6, dtype=bool)
+    alive[0] = alive[1] = False  # entire group 0 dead
+    with pytest.raises(RuntimeError):
+        C.gc_decode_weights(code, alive)
+
+
+def test_fr_gradient_sum_exact():
+    """End-to-end: coded worker outputs + decode weights == full gradient."""
+    n, c = 6, 2
+    code = C.fractional_repetition_code(n, c)
+    rng = np.random.default_rng(3)
+    part_grads = rng.normal(size=(code.num_groups, 10))  # one per part-group
+    B = code.assignment()
+    worker_out = B @ part_grads  # worker i returns sum of its group's parts
+    alive = np.array([True, False, True, True, True, True])
+    a = C.gc_decode_weights(code, alive)
+    np.testing.assert_allclose(a @ worker_out, part_grads.sum(0), atol=1e-10)
+
+
+# ------------------------------------------------------- task-size geometries
+def test_task_size_geometries():
+    assert C.task_size_linear(3, 12) == 4
+    assert C.task_size_linear(12, 12) == 1
+    assert C.task_size_gradient(12, 12) == 1   # splitting
+    assert C.task_size_gradient(1, 12) == 12   # replication
+    assert C.task_size_gradient(11, 12) == 2
+    with pytest.raises(ValueError):
+        C.task_size_linear(5, 12)
+    with pytest.raises(ValueError):
+        C.task_size_gradient(5, 12)  # c=8 does not divide 12

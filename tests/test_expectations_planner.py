@@ -1,0 +1,272 @@
+"""E[Y_{k:n}] surfaces and the planner vs the paper's theorems and figures."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BiModal, Pareto, Scaling, ShiftedExp,
+    expected_completion_time, plan, strategy_table, theorem_kstar,
+    expected_completion_mc,
+)
+from repro.core import expectations as E
+
+N = 12
+DIVS = [1, 2, 3, 4, 6, 12]
+
+
+# ---------------------------------------------------------------- Sec. IV
+def test_thm1_replication_optimal_sexp_server():
+    for W in (0.1, 1.0, 5.0, 10.0):
+        p = plan(ShiftedExp(1.0, W), Scaling.SERVER_DEPENDENT, N)
+        assert p.k == 1 and p.strategy == "replication"
+
+
+def test_eq2_matches_mc():
+    d = ShiftedExp(1.0, 5.0)
+    for k in (1, 6, 12):
+        cf = E.sexp_server_dependent(k, N, 1.0, 5.0)
+        mc = expected_completion_mc(d, Scaling.SERVER_DEPENDENT, k, N, trials=200_000)
+        assert cf == pytest.approx(mc, rel=0.02)
+
+
+def test_thm2_kstar_formula():
+    dlt, W = 5.0, 5.0
+    kf, name = theorem_kstar(ShiftedExp(dlt, W), Scaling.DATA_DEPENDENT, N)
+    d = dlt / W
+    assert kf == pytest.approx(N * (-d / 2 + math.sqrt(d + d * d / 4)))
+    assert name == "Thm2"
+    # the continuous k* brackets the discrete argmin
+    p = plan(ShiftedExp(dlt, W), Scaling.DATA_DEPENDENT, N)
+    below = max([k for k in DIVS if k <= kf], default=1)
+    above = min([k for k in DIVS if k >= kf], default=N)
+    assert p.k in (below, above)
+
+
+def test_eq3_matches_mc():
+    d = ShiftedExp(5.0, 5.0)
+    for k in (1, 4, 12):
+        cf = E.sexp_data_dependent(k, N, 5.0, 5.0)
+        mc = expected_completion_mc(d, Scaling.DATA_DEPENDENT, k, N, trials=200_000)
+        assert cf == pytest.approx(mc, rel=0.02)
+
+
+def test_additive_sexp_matches_mc():
+    d = ShiftedExp(1.0, 10.0)
+    for k in (1, 6, 12):
+        cf = E.sexp_additive(k, N, 1.0, 10.0)
+        mc = expected_completion_mc(d, Scaling.ADDITIVE, k, N, trials=200_000)
+        assert cf == pytest.approx(mc, rel=0.02)
+
+
+def test_thm4_splitting_beats_replication_large_n():
+    # additive scaling, delta=0: E[Y_{1:n}] > E[Y_{n:n}] for large n
+    for n in (24, 60, 120):
+        repl = E.replication_additive_sexp(n, 0.0, 1.0)
+        split = 0.0 + 1.0 * sum(1.0 / j for j in range(1, n + 1))
+        assert repl > split
+
+
+def test_thm5_rate_half_beats_splitting_delta0():
+    for n in (4, 8, 12, 24):
+        half = E.sexp_additive(n // 2, n, 0.0, 1.0)
+        split = E.sexp_additive(n, n, 0.0, 1.0)
+        assert half <= split
+
+
+def test_thm5_stochastic_dominance_empirical():
+    """Pr{Y_{n/2:n} > x} <= Pr{Y_{n:n} > x} for all x (Thm. 5)."""
+    import jax
+    from repro.core.simulator import job_completion_times, sample_task_times
+    from repro.core.simulator import empirical_survival
+
+    n, W = 12, 1.0
+    d = ShiftedExp(0.0, W)
+    key = jax.random.PRNGKey(0)
+    t2 = sample_task_times(d, key, 100_000, n, 2, Scaling.ADDITIVE)
+    t1 = sample_task_times(d, key, 100_000, n, 1, Scaling.ADDITIVE)
+    y_code = np.asarray(job_completion_times(t2, n // 2))
+    y_split = np.asarray(job_completion_times(t1, n))
+    xs = np.linspace(0.0, 10.0, 50)
+    s_code = empirical_survival(y_code, xs)
+    s_split = empirical_survival(y_split, xs)
+    assert np.all(s_code <= s_split + 0.01)  # MC tolerance
+
+
+# ---------------------------------------------------------------- Sec. V
+def test_thm6_kstar_and_figure6():
+    # paper: k* = 6.8, 7.7, 8.8, 9.8 for alpha = 1.5, 2, 3, 5
+    expected = {1.5: 6.8, 2.0: 7.666, 3.0: 8.75, 5.0: 9.833}
+    for a, kf_paper in expected.items():
+        kf, name = theorem_kstar(Pareto(1.0, a), Scaling.SERVER_DEPENDENT, N)
+        assert name == "Thm6"
+        assert kf == pytest.approx((a * N - 1) / (a + 1), rel=1e-12)
+        assert kf == pytest.approx(kf_paper, abs=0.06)
+    # discrete optima: coding (k=6) for heavy tails, splitting for alpha=5
+    assert plan(Pareto(1.0, 1.5), Scaling.SERVER_DEPENDENT, N).k == 6
+    assert plan(Pareto(1.0, 5.0), Scaling.SERVER_DEPENDENT, N).k == 12
+
+
+def test_pareto_server_dep_matches_mc():
+    # NB: the k-th order statistic of Pareto(alpha) has finite variance only
+    # when (n-k+1) * alpha > 2, so the MC check uses cells where it holds.
+    d = Pareto(1.0, 2.0)
+    for k in (1, 6):
+        cf = E.pareto_server_dependent(k, N, 1.0, 2.0)
+        mc = expected_completion_mc(d, Scaling.SERVER_DEPENDENT, k, N, trials=400_000)
+        assert cf == pytest.approx(mc, rel=0.05)
+    d4 = Pareto(1.0, 4.0)
+    cf = E.pareto_server_dependent(12, N, 1.0, 4.0)
+    mc = expected_completion_mc(d4, Scaling.SERVER_DEPENDENT, 12, N, trials=400_000)
+    assert cf == pytest.approx(mc, rel=0.05)
+
+
+def test_pareto_data_dep_approx_close_to_exact():
+    for k in (1, 2, 3, 4, 6):
+        exact = E.pareto_data_dependent(k, N, 1.0, 3.0, 5.0)
+        approx = E.pareto_data_dependent_approx(k, N, 1.0, 3.0, 5.0)
+        assert approx == pytest.approx(exact, rel=0.15)
+
+
+def test_fig8_optimal_rate_increases_with_delta():
+    ks = [plan(Pareto(5.0, 3.0), Scaling.DATA_DEPENDENT, N, delta=dl).k
+          for dl in (0.1, 0.5, 5.0, 10.0)]
+    assert all(k2 >= k1 for k1, k2 in zip(ks, ks[1:]))
+    assert ks[0] <= 3 and ks[-1] == 12  # low-rate coding -> splitting (Fig. 8)
+
+
+def test_thm7_replication_bound_below_mc_and_above_splitting():
+    # The (1 - 21 xi / (n^2 eta^4))^n factor only bites for large n
+    # (the paper's Fig. 10 is plotted against growing n for this reason).
+    lam, alpha, n = 1.0, 4.5, 400
+    lb = E.pareto_replication_lower_bound(n, lam, alpha, eta=1.0)
+    split = E.pareto_splitting_additive(n, lam, alpha)
+    mc_repl = expected_completion_mc(
+        Pareto(lam, alpha), Scaling.ADDITIVE, 1, n, trials=1_000
+    )
+    assert lb > split          # Thm. 7 conclusion: splitting wins
+    assert mc_repl > lb * 0.99  # bound is a valid lower bound
+
+
+def test_pareto_additive_mc_deterministic():
+    a = E.pareto_additive_mc(6, N, 1.0, 2.0, trials=20_000, seed=3)
+    b = E.pareto_additive_mc(6, N, 1.0, 2.0, trials=20_000, seed=3)
+    assert a == b
+
+
+# ---------------------------------------------------------------- Sec. VI
+def test_prop1_splitting_when_B_le_2():
+    for eps in (0.1, 0.5, 0.9):
+        p = plan(BiModal(2.0, eps), Scaling.SERVER_DEPENDENT, N)
+        assert p.k == N
+
+
+def test_prop2_splitting_when_B_le_2_additive():
+    for eps in (0.1, 0.5, 0.9):
+        p = plan(BiModal(2.0, eps), Scaling.ADDITIVE, N)
+        assert p.k == N
+
+
+def test_eq12_matches_mc():
+    d = BiModal(10.0, 0.4)
+    for k in (1, 4, 12):
+        cf = E.bimodal_server_dependent(k, N, 10.0, 0.4)
+        mc = expected_completion_mc(d, Scaling.SERVER_DEPENDENT, k, N, trials=200_000)
+        assert cf == pytest.approx(mc, rel=0.02)
+
+
+def test_eq14_matches_mc():
+    d = BiModal(10.0, 0.4)
+    for k in (1, 4, 12):
+        cf = E.bimodal_data_dependent(k, N, 10.0, 0.4, 5.0)
+        mc = expected_completion_mc(
+            d, Scaling.DATA_DEPENDENT, k, N, trials=200_000, delta=5.0
+        )
+        assert cf == pytest.approx(mc, rel=0.02)
+
+
+def test_lemma1_matches_mc():
+    d = BiModal(10.0, 0.4)
+    for k in (1, 4, 12):
+        cf = E.bimodal_additive(k, N, 10.0, 0.4)
+        mc = expected_completion_mc(d, Scaling.ADDITIVE, k, N, trials=200_000)
+        assert cf == pytest.approx(mc, rel=0.02)
+
+
+def test_thm8_lln_approximates_exact_n60():
+    """Fig. 13: LLN vs exact at n=60, B=10."""
+    n, B = 60, 10.0
+    for eps in (0.2, 0.6):
+        for k in (6, 15, 30, 60):
+            r = k / n
+            lln = E.bimodal_server_dependent_lln(r, B, eps)
+            exact = E.bimodal_server_dependent(k, n, B, eps)
+            if abs((1 - eps) - r) > 0.1:  # away from the LLN discontinuity
+                assert lln == pytest.approx(exact, rel=0.25)
+
+
+def test_thm8_regime_boundary():
+    # eps <= (B-1)/B -> coding at r = 1-eps; else splitting
+    B = 10.0
+    kf, name = theorem_kstar(BiModal(B, 0.4), Scaling.SERVER_DEPENDENT, 60)
+    assert name == "Thm8:r=1-eps" and kf == pytest.approx(0.6 * 60)
+    kf, name = theorem_kstar(BiModal(B, 0.95), Scaling.SERVER_DEPENDENT, 60)
+    assert name == "Thm8:splitting" and kf == 60.0
+
+
+def test_thm9_lln_approximates_exact_n60():
+    n, B, dlt = 60, 10.0, 5.0
+    for eps in (0.2, 0.6):
+        for k in (6, 15, 30, 60):
+            r = k / n
+            lln = E.bimodal_data_dependent_lln(r, B, eps, dlt)
+            exact = E.bimodal_data_dependent(k, n, B, eps, dlt)
+            if abs((1 - eps) - r) > 0.1:
+                assert lln == pytest.approx(exact, rel=0.25)
+
+
+def test_fig11_optimal_strategy_sweep():
+    ks = {e: plan(BiModal(10.0, e), Scaling.SERVER_DEPENDENT, N).k
+          for e in (0.005, 0.2, 0.4, 0.6, 0.8, 0.9)}
+    assert ks[0.005] == 12
+    assert ks[0.2] in (4, 6) and ks[0.4] in (3, 4) and ks[0.6] in (2, 3)
+    assert ks[0.8] == 12 and ks[0.9] == 12
+
+
+def test_fig17_additive_sweep():
+    assert plan(BiModal(10.0, 0.2), Scaling.ADDITIVE, N).k == 6  # rate 1/2
+    assert plan(BiModal(10.0, 0.9), Scaling.ADDITIVE, N).k == 12
+
+
+def test_conjecture2_coding_or_splitting_beats_replication():
+    for B in (2.0, 10.0, 100.0):
+        for eps in (0.1, 0.4, 0.7):
+            curve = plan(BiModal(B, eps), Scaling.ADDITIVE, N).curve
+            assert min(curve[k] for k in curve if k >= 2) < curve[1] + 1e-9
+
+
+# ---------------------------------------------------------------- Table I
+def test_table1_structure():
+    t = strategy_table(12)
+    assert t[("shifted_exp", "server")] == ["replication"]
+    assert t[("shifted_exp", "data")][0] == "splitting"
+    assert t[("shifted_exp", "data")][-1] == "replication"
+    assert t[("shifted_exp", "additive")] == ["splitting", "coding"]
+    assert t[("pareto", "server")] == ["splitting", "coding"]
+    assert t[("pareto", "additive")] == ["splitting", "coding"]
+    assert t[("bimodal", "server")] == ["splitting", "coding", "splitting"]
+    assert t[("bimodal", "data")] == ["splitting", "coding", "splitting"]
+    assert t[("bimodal", "additive")] == ["splitting", "coding", "splitting"]
+
+
+def test_dispatcher_covers_all_nine():
+    dists = [ShiftedExp(1.0, 2.0), Pareto(1.0, 2.5), BiModal(8.0, 0.3)]
+    for d in dists:
+        for sc in Scaling:
+            v = expected_completion_time(d, sc, 6, 12, delta=2.0, mc_trials=2_000)
+            assert np.isfinite(v) and v > 0
+
+
+def test_planner_max_task_size_constraint():
+    p = plan(ShiftedExp(1.0, 10.0), Scaling.SERVER_DEPENDENT, 12, max_task_size=3)
+    assert p.task_size <= 3 and p.k >= 4

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward + one train step on CPU; asserts output shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) -- see launch/dryrun.py and tests/test_dryrun_smoke.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import api
+from repro.models.transformer import padded_vocab
+from repro.optim import adamw
+from repro.runtime.coded_step import make_train_step
+
+# reduced dims shared by every family; family-specific bits preserved
+REDUCE = dict(
+    num_layers=2, d_model=64, d_ff=128, vocab_size=211,
+    flash_block_kv=32, remat="none", compute_dtype="float32",
+    param_dtype="float32",
+)
+
+
+def reduced(arch: str):
+    cfg = get_config(arch)
+    kw = dict(REDUCE)
+    if cfg.num_heads:
+        kw.update(num_heads=4, num_kv_heads=max(1, min(cfg.num_kv_heads, 2)))
+        kw.update(head_dim=16 if cfg.head_dim else None)
+    if cfg.num_experts:
+        kw.update(num_experts=4, experts_per_token=min(cfg.experts_per_token, 2))
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+    if cfg.attn_every:
+        kw.update(num_layers=5, attn_every=2, attn_window=16)
+    if cfg.family in ("ssm",):
+        kw.update(num_heads=0, num_kv_heads=0, d_ff=0)
+    return cfg.scaled(**kw)
+
+
+ARCHS = [a for a in ARCH_IDS if a != "paper-matvec"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(arch)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 16
+    params = api.init_params(cfg, key)
+    if cfg.embedding_inputs:
+        tokens = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    else:
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    logits = api.forward(cfg, params, tokens)
+    assert logits.shape == (B, S, padded_vocab(cfg))
+    assert not bool(jnp.isnan(logits).any())
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, decay_steps=10)
+    step = make_train_step(cfg, opt_cfg)
+    opt_state = adamw.init(opt_cfg, params)
+    w = jnp.ones((B,), jnp.float32)
+    params2, opt2, metrics = step(params, opt_state, tokens, labels, w)
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(params2):
+        assert not bool(jnp.isnan(leaf).any())
+    # the step must actually move the weights
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).family not in
+                                  ("encoder", "audio")])
+def test_decode_step(arch):
+    cfg = reduced(arch)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 8
+    params = api.init_params(cfg, key)
+    cache = api.init_cache(cfg, B, S, dtype="float32")
+    if cfg.embedding_inputs:
+        tok = jax.random.normal(key, (B, 1, cfg.d_model), jnp.float32)
+    else:
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    logits, cache2 = api.decode_step(cfg, params, cache, tok, jnp.asarray(0))
+    assert logits.shape == (B, 1, padded_vocab(cfg))
+    assert not bool(jnp.isnan(logits).any())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-1.3b", "zamba2-1.2b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the full forward logits."""
+    cfg = reduced(arch)
+    key = jax.random.PRNGKey(2)
+    B, S = 2, 12
+    params = api.init_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full = api.forward(cfg, params, toks)
+    cache = api.init_cache(cfg, B, S, dtype="float32")
+    outs = []
+    for t in range(S):
+        lg, cache = api.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)

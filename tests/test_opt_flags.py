@@ -1,0 +1,45 @@
+"""The §Perf optimization switches must preserve numerics (subprocess:
+REPRO_OPT is read at import time)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import json
+import jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=211,
+                  flash_block_kv=16, remat="none",
+                  compute_dtype="float32", param_dtype="float32")
+p = api.init_params(cfg, jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 211)
+loss, grads = jax.value_and_grad(
+    lambda pp: api.loss_fn(cfg, pp, toks, toks))(p)
+gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+print(json.dumps({"loss": float(loss), "gsum": gn}))
+"""
+
+
+def _run(opts: str) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC, REPRO_OPT=opts)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_opt_flags_preserve_numerics():
+    base = _run("")
+    opt = _run("norm_vjp,attn_probs16")
+    # fp32 model: the flags change computation order only -> tight match
+    assert abs(base["loss"] - opt["loss"]) / abs(base["loss"]) < 1e-5
+    assert abs(base["gsum"] - opt["gsum"]) / abs(base["gsum"]) < 1e-3

@@ -1,0 +1,144 @@
+"""Closed-form order statistics vs each other, quadrature, and Monte Carlo."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import order_stats as osl
+
+
+# ---------------------------------------------------------------- eq. (17)
+@given(
+    n=st.integers(1, 40),
+    data=st.data(),
+    W=st.floats(0.1, 10.0),
+)
+@settings(max_examples=40, deadline=None)
+def test_exponential_order_stat_matches_quadrature(n, data, W):
+    k = data.draw(st.integers(1, n))
+    closed = osl.exponential_order_stat(k, n, W)
+    surv = lambda t: np.exp(-np.maximum(t, 0.0) / W)
+    quad = osl.expected_order_stat(surv, k, n, scale=W)
+    assert closed == pytest.approx(quad, rel=1e-8, abs=1e-10)
+
+
+def test_harmonic_values():
+    assert osl.harmonic(0) == 0.0
+    assert osl.harmonic(1) == 1.0
+    assert osl.harmonic(4) == pytest.approx(1 + 0.5 + 1 / 3 + 0.25)
+
+
+# ---------------------------------------------------------------- eq. (18)
+@pytest.mark.parametrize("k,n,s", [(1, 4, 2), (3, 6, 2), (6, 12, 2), (2, 4, 3),
+                                   (4, 12, 3), (1, 12, 12), (12, 12, 1)])
+def test_erlang_exact_vs_quadrature(k, n, s):
+    a = osl.erlang_order_stat_exact(k, n, s, W=1.3)
+    b = osl.erlang_order_stat(k, n, s, W=1.3)
+    assert a == pytest.approx(b, rel=1e-9)
+
+
+def test_erlang_order_stat_monotone_in_k():
+    vals = [osl.erlang_order_stat(k, 12, 3, 1.0) for k in range(1, 13)]
+    assert all(v2 > v1 for v1, v2 in zip(vals, vals[1:]))
+
+
+def test_erlang_s1_equals_exponential():
+    for k in (1, 5, 12):
+        assert osl.erlang_order_stat(k, 12, 1, 2.0) == pytest.approx(
+            osl.exponential_order_stat(k, 12, 2.0), rel=1e-8
+        )
+
+
+# ------------------------------------------------- birthday problem (23)/(24)
+@pytest.mark.parametrize("n,d", [(4, 3), (12, 2), (12, 12), (8, 5)])
+def test_birthday_equals_min_of_erlangs(n, d):
+    """Thm. 3 core identity: E[min of n Erlang(d,1)] = E(n,d)/n."""
+    lhs = osl.erlang_order_stat(1, n, d, 1.0)
+    rhs = osl.birthday_expectation(n, d) / n
+    assert lhs == pytest.approx(rhs, rel=1e-8)
+
+
+def test_birthday_asymptotic_converges():
+    """Eq. (24): ratio -> 1 as n grows (fixed d)."""
+    d = 3
+    r_small = osl.birthday_expectation(20, d) / osl.birthday_asymptotic(20, d)
+    r_large = osl.birthday_expectation(500, d) / osl.birthday_asymptotic(500, d)
+    assert abs(r_large - 1.0) < abs(r_small - 1.0)
+    # convergence rate is ~ n^{-1/d}: ratio 1.063 at n=500 for d=3
+    assert r_large == pytest.approx(1.0, abs=0.08)
+
+
+# ---------------------------------------------------------------- eq. (19)
+def test_pareto_order_stat_vs_mc():
+    rng = np.random.default_rng(0)
+    lam, alpha, n = 1.0, 2.5, 12
+    x = lam * rng.uniform(size=(400_000, n)) ** (-1.0 / alpha)
+    x.sort(axis=1)
+    for k in (1, 6, 12):
+        mc = x[:, k - 1].mean()
+        assert osl.pareto_order_stat(k, n, lam, alpha) == pytest.approx(mc, rel=0.02)
+
+
+def test_pareto_min_is_pareto_scaled():
+    """min of n Pareto(lam,a) ~ Pareto(lam, n*a): E = lam*n*a/(n*a-1)."""
+    lam, a, n = 2.0, 3.0, 10
+    expect = lam * n * a / (n * a - 1)
+    assert osl.pareto_order_stat(1, n, lam, a) == pytest.approx(expect, rel=1e-9)
+
+
+def test_gamma_ratio_approx():
+    x = 50.0
+    exact = math.exp(math.lgamma(x + 0.7) - math.lgamma(x + 0.2))
+    assert osl.gamma_ratio_approx(x, 0.7, 0.2) == pytest.approx(exact, rel=0.01)
+
+
+# -------------------------------------------------------- eq. (12) / Lemma 1
+@given(
+    n=st.integers(2, 20),
+    data=st.data(),
+    B=st.floats(1.5, 50.0),
+    eps=st.floats(0.01, 0.99),
+)
+@settings(max_examples=40, deadline=None)
+def test_bimodal_order_stat_bounds(n, data, B, eps):
+    k = data.draw(st.integers(1, n))
+    v = osl.bimodal_order_stat(k, n, B, eps)
+    assert 1.0 <= v <= B
+    # monotone in k
+    if k < n:
+        assert v <= osl.bimodal_order_stat(k + 1, n, B, eps) + 1e-12
+
+
+def test_bimodal_sum_vs_mc():
+    rng = np.random.default_rng(1)
+    B, eps, s, n = 10.0, 0.4, 3, 12
+    y = np.where(rng.uniform(size=(300_000, n, s)) < eps, B, 1.0).sum(-1)
+    y.sort(axis=1)
+    for k in (1, 4, 12):
+        mc = y[:, k - 1].mean()
+        assert osl.bimodal_sum_order_stat(k, n, s, B, eps) == pytest.approx(mc, rel=0.01)
+
+
+def test_bimodal_sum_s1_equals_plain():
+    for k in (1, 6, 12):
+        assert osl.bimodal_sum_order_stat(k, 12, 1, 8.0, 0.3) == pytest.approx(
+            osl.bimodal_order_stat(k, 12, 8.0, 0.3), rel=1e-12
+        )
+
+
+# -------------------------------------------------- generic quadrature engine
+@given(
+    n=st.integers(1, 15),
+    data=st.data(),
+)
+@settings(max_examples=20, deadline=None)
+def test_order_stat_survival_is_valid_survival(n, data):
+    k = data.draw(st.integers(1, n))
+    surv = lambda t: np.exp(-np.maximum(t, 0.0))
+    sk = osl.order_stat_survival(surv, k, n)
+    ts = np.linspace(0, 20, 64)
+    vals = sk(ts)
+    assert np.all(vals >= -1e-12) and np.all(vals <= 1 + 1e-12)
+    assert np.all(np.diff(vals) <= 1e-9)  # non-increasing
+    assert vals[0] == pytest.approx(1.0, abs=1e-9)

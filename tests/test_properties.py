@@ -1,0 +1,120 @@
+"""Hypothesis property tests on the system's core invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import order_stats as osl
+from repro.core.coding import (decode_matrix, encode_blocks, decode_blocks,
+                               mds_generator)
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.expectations import expected_completion_time
+from repro.core.planner import divisors, plan
+
+nk = st.integers(2, 12).flatmap(
+    lambda n: st.tuples(st.just(n), st.integers(1, n)))
+
+
+@given(nk)
+@settings(max_examples=40, deadline=None)
+def test_mds_any_k_of_n_decodes(nk_pair):
+    """THE MDS property: any k rows of G are invertible and decode exactly."""
+    n, k = nk_pair
+    G = mds_generator(n, k, dtype=np.float64)
+    rng = np.random.default_rng(n * 100 + k)
+    blocks = rng.normal(size=(k, 4, 3))
+    coded = np.asarray(encode_blocks(G, blocks))
+    survivors = sorted(rng.choice(n, size=k, replace=False).tolist())
+    rec = np.asarray(decode_blocks(G, survivors, coded[survivors]))
+    # encode/decode run in fp32 (jnp x64 off).  Worst-case survivor-set
+    # condition number of the spread-node generator is ~2.2e3 (measured over
+    # n<=12), so round-trip error is bounded by ~2*cond*eps_f32 ~ 5e-4.
+    np.testing.assert_allclose(rec, blocks, rtol=2e-3, atol=1e-5)
+
+
+@given(nk)
+@settings(max_examples=30, deadline=None)
+def test_order_stat_monotone_in_k(nk_pair):
+    """E[Y_{k:n}] is nondecreasing in k for any fixed distribution."""
+    n, k = nk_pair
+    if k >= n:
+        return
+    w = osl.exponential_order_stat(k, n), osl.exponential_order_stat(k + 1, n)
+    assert w[0] <= w[1] + 1e-12
+    p = osl.pareto_order_stat(k, n, 1.0, 2.0), \
+        osl.pareto_order_stat(k + 1, n, 1.0, 2.0)
+    assert p[0] <= p[1] + 1e-12
+    b = osl.bimodal_order_stat(k, n, 10.0, 0.3), \
+        osl.bimodal_order_stat(k + 1, n, 10.0, 0.3)
+    assert b[0] <= b[1] + 1e-12
+
+
+@given(st.integers(1, 10), st.floats(0.01, 0.99), st.floats(1.5, 50.0))
+@settings(max_examples=30, deadline=None)
+def test_bimodal_survival_is_probability(k, eps, B):
+    n = 12
+    p = osl.bimodal_straggle_prob(k, n, eps)
+    assert 0.0 <= p <= 1.0
+    e = osl.bimodal_order_stat(k, n, B, eps)
+    assert 1.0 <= e <= B + 1e-9
+
+
+@given(st.sampled_from([ShiftedExp(1.0, 2.0), ShiftedExp(0.0, 5.0),
+                        Pareto(1.0, 2.5), BiModal(10.0, 0.3)]),
+       st.sampled_from(list(Scaling)))
+@settings(max_examples=24, deadline=None)
+def test_planner_k_is_argmin_of_curve(dist, scaling):
+    n = 12
+    delta = 2.0 if not isinstance(dist, ShiftedExp) else None
+    p = plan(dist, scaling, n, delta=delta)
+    assert p.k in divisors(n)
+    assert abs(p.expected_time - min(p.curve.values())) < 1e-9
+    # expected time of the chosen k must beat (or tie) replication+splitting
+    assert p.expected_time <= p.curve[1] + 1e-9
+    assert p.expected_time <= p.curve[n] + 1e-9
+
+
+@given(st.integers(2, 24), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_birthday_bounds(n, d):
+    """E(n,d) between d (trivial lower) and asymptotic-consistent upper."""
+    e = osl.birthday_expectation(n, d)
+    assert e >= d - 1e-9
+    assert e <= n * (d - 1) + 1 + 1e-6    # pigeonhole upper bound
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.floats(0.05, 0.95),
+       st.floats(2.0, 30.0))
+@settings(max_examples=30, deadline=None)
+def test_bimodal_additive_consistent_with_mc(ks, ss, eps, B):
+    """Lemma 1 closed form == simple direct enumeration for small sizes."""
+    n = ks * ss  # ensure k divides n
+    k, s = ks, n // ks
+    exact = osl.bimodal_sum_order_stat(k, n, s, B, eps)
+    # direct: enumerate order statistic expectation by MC (coarse check)
+    rng = np.random.default_rng(int(eps * 1e4) + n)
+    draws = np.where(rng.random((4000, n, s)) < eps, B, 1.0).sum(axis=-1)
+    draws.sort(axis=1)
+    mc = draws[:, k - 1].mean()
+    assert abs(exact - mc) / max(exact, 1e-9) < 0.08
+
+
+@given(st.integers(2, 10))
+@settings(max_examples=12, deadline=None)
+def test_weight_decode_partition_of_unity(n):
+    """Decode weights always average to a partition of the unique batch."""
+    from repro.core.coding import fractional_repetition_code, gc_decode_weights
+    from repro.data.pipeline import decode_example_weights
+    for c in [d for d in range(1, n + 1) if n % d == 0]:
+        code = fractional_repetition_code(n, c)
+        rng = np.random.default_rng(n * 10 + c)
+        alive = np.ones(n, bool)
+        # knock out c-1 random workers (always decodable)
+        for idx in rng.choice(n, size=c - 1, replace=False):
+            alive[idx] = False
+        a = gc_decode_weights(code, alive)
+        w = decode_example_weights(code, a, per_worker_rows=3,
+                                   unique_rows=3 * code.num_groups)
+        # weighted mean over coded rows == plain mean over unique rows
+        assert abs(w.sum() / len(w) - 1.0) < 1e-6

@@ -1,0 +1,146 @@
+"""Coded-step runtime: decode exactness, fault tolerance, planning, elastic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.coding import gc_decode_weights
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.data import DataConfig
+from repro.data.pipeline import coded_batch, decode_example_weights, synthetic_batch
+from repro.models import api
+from repro.optim import adamw
+from repro.runtime import (CodedStepConfig, CodedTrainer, StragglerSim,
+                           Telemetry, fr_expected_completion, plan_fr,
+                           resize_plan)
+from repro.runtime.coded_step import weighted_loss_fn
+from repro.runtime.elastic import failure_adjusted_model
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=257,
+                  flash_block_kv=16, remat="none",
+                  compute_dtype="float32", param_dtype="float32")
+
+
+def _params():
+    return api.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("n,c,alive", [
+    (4, 2, [1, 0, 1, 1]),
+    (4, 4, [0, 0, 1, 0]),
+    (8, 2, [1, 1, 0, 1, 1, 0, 1, 1]),
+    (6, 1, [1, 1, 1, 1, 1, 1]),
+])
+def test_coded_gradient_exact(n, c, alive):
+    """Coded gradient with stragglers == plain gradient over unique data."""
+    groups = n // c
+    step_cfg = CodedStepConfig(n_workers=n, c=c, unique_batch=2 * groups)
+    data_cfg = DataConfig(vocab_size=257, seq_len=16,
+                          global_batch=step_cfg.unique_batch)
+    code = step_cfg.code
+    toks_c, labs_c = coded_batch(data_cfg, 0, code)
+    a = gc_decode_weights(code, np.asarray(alive, bool))
+    w = decode_example_weights(code, a, step_cfg.per_worker_rows,
+                               step_cfg.unique_batch)
+    params = _params()
+    lf = weighted_loss_fn(CFG)
+    g_coded = jax.grad(lf)(params, jnp.asarray(toks_c), jnp.asarray(labs_c),
+                           jnp.asarray(w))
+    parts = [synthetic_batch(data_cfg, 0, part=j, num_parts=code.num_groups)
+             for j in range(code.num_groups)]
+    toks_u = np.concatenate([p[0] for p in parts])
+    labs_u = np.concatenate([p[1] for p in parts])
+    g_plain = jax.grad(lf)(params, jnp.asarray(toks_u), jnp.asarray(labs_u),
+                           jnp.ones(len(toks_u), np.float32))
+    for a_, b_ in zip(jax.tree.leaves(g_coded), jax.tree.leaves(g_plain)):
+        # fp32 accumulation order differs between layouts: ~1e-4 rel noise
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=5e-4, atol=1e-5)
+
+
+def test_group_wipeout_raises_and_trainer_falls_back():
+    code = CodedStepConfig(n_workers=4, c=2, unique_batch=8).code
+    dead_group = np.array([0, 0, 1, 1], bool)     # group 0 fully straggled
+    with pytest.raises(RuntimeError):
+        gc_decode_weights(code, dead_group)
+    data_cfg = DataConfig(vocab_size=257, seq_len=16, global_batch=8)
+    trainer = CodedTrainer(CFG, data_cfg,
+                           CodedStepConfig(n_workers=4, c=2, unique_batch=8),
+                           adamw.AdamWConfig(lr=1e-3),
+                           alive_fn=lambda s: dead_group, jit=False)
+    params = _params()
+    opt = adamw.init(trainer.opt_cfg, params)
+    params, opt, m = trainer.run_step(params, opt, 0)
+    assert trainer.decode_failures == 1
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_coded_training_converges_under_stragglers():
+    data_cfg = DataConfig(vocab_size=257, seq_len=32, global_batch=8)
+    step_cfg = CodedStepConfig(n_workers=4, c=2, unique_batch=8)
+    sim = StragglerSim(BiModal(10.0, 0.3), Scaling.DATA_DEPENDENT,
+                       n=4, s=2, delta=1.0, seed=1)
+    trainer = CodedTrainer(CFG, data_cfg, step_cfg,
+                           adamw.AdamWConfig(lr=1e-3, warmup_steps=2,
+                                             decay_steps=50),
+                           alive_fn=sim.alive_fn(5.0))
+    params = _params()
+    opt = adamw.init(trainer.opt_cfg, params)
+    losses = []
+    for s in range(12):
+        params, opt, m = trainer.run_step(params, opt, s)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert trainer.stragglers_dropped > 0
+
+
+def test_fr_completion_matches_paper_regimes():
+    """FR completion reproduces the paper's regimes: replication wins for
+    S-Exp x server-dependent (Thm 1); splitting wins under additive scaling
+    when the deterministic part dominates (Sec. IV-C)."""
+    heavy = ShiftedExp(0.0, 10.0)
+    det = ShiftedExp(10.0, 0.1)
+    n = 8
+    e_heavy = {c: fr_expected_completion(heavy, Scaling.SERVER_DEPENDENT, n, c)
+               for c in (1, 8)}
+    assert e_heavy[8] < e_heavy[1]      # replication wins (Thm 1)
+    e_det = {c: fr_expected_completion(det, Scaling.ADDITIVE, n, c)
+             for c in (1, 8)}
+    assert e_det[1] < e_det[8]          # splitting wins (deterministic work)
+
+
+def test_plan_fr_returns_legal_c():
+    p = plan_fr(BiModal(10.0, 0.3), Scaling.DATA_DEPENDENT, 8, delta=1.0)
+    assert 8 % p["c"] == 0
+    assert p["expected_time"] == min(p["curve"].values())
+
+
+def test_elastic_resize_keeps_unique_batch():
+    old = CodedStepConfig(n_workers=8, c=2, unique_batch=16)
+    new = resize_plan(old, 6, dist=BiModal(10.0, 0.3),
+                      scaling=Scaling.DATA_DEPENDENT, delta=1.0)
+    assert new.n_workers == 6
+    assert new.n_workers % new.c == 0
+    assert new.unique_batch % (new.n_workers // new.c) == 0
+
+
+def test_failure_adjusted_model():
+    m = failure_adjusted_model(eps_fail=0.1, base_eps=0.05)
+    assert isinstance(m, BiModal)
+    assert abs(m.eps - 0.15) < 1e-9
+
+
+def test_telemetry_fit_recovers_family():
+    telem = Telemetry(window=4096)
+    key = jax.random.PRNGKey(0)
+    d = BiModal(10.0, 0.25)
+    telem.record_step(np.asarray(d.sample(key, (2048,))))
+    fitted, family = telem.fit()
+    assert family == "bimodal"
+    assert abs(fitted.eps - 0.25) < 0.05
+    stats = telem.straggle_stats()
+    assert stats["straggle_frac"] > 0.15
