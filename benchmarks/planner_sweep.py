@@ -1,0 +1,197 @@
+"""Planner hot-path benchmark: batched k-curve engine vs the seed scalar path.
+
+Measures (1) full-curve latency over every divisor of n for the paper's
+closed-form (distribution x scaling) planner cells at n in {120, 720, 1024},
+and (2) plans/sec over a 100-scenario straggling grid -- the production
+planner workload ("Straggler Mitigation at Scale" regimes).
+
+The baseline is a FROZEN copy of the seed's per-k scalar path (O(n)
+harmonic summation per call, direct ``math.comb`` Bi-Modal sums, one
+independent quadrature per k), so the reported speedup tracks the batched
+engine itself and is stable across future scalar-path cleanups.
+
+Emits ``BENCH_planner.json`` with per-cell latencies and ratios so later
+PRs can track the trajectory.  Acceptance gate: >= 20x on the closed-form
+full-curve workload at n=720.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import batched
+from repro.core import order_stats as osl
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.expectations import completion_curve
+from repro.core.planner import divisors, plan_grid
+
+from .common import Check, emit_json
+
+
+# --------------------------------------------------------------------------
+# Frozen seed scalar path (verbatim semantics of the pre-batched code)
+# --------------------------------------------------------------------------
+
+def _seed_harmonic(n: int) -> float:
+    """Seed harmonic: O(n) Python generator sum per call."""
+    return float(sum(1.0 / j for j in range(1, n + 1)))
+
+
+def _seed_bimodal_straggle_prob(k: int, n: int, eps: float) -> float:
+    """Seed Bi-Modal straggle prob: direct big-int comb x float powers."""
+    return float(
+        sum(math.comb(n, i) * (1 - eps) ** i * eps ** (n - i) for i in range(k))
+    )
+
+
+def _seed_scalar_point(dist, scaling, k: int, n: int, delta=None) -> float:
+    """Seed ``expected_completion_time`` for the closed-form cells."""
+    s = n // k
+    if isinstance(dist, ShiftedExp):
+        hd = _seed_harmonic(n) - _seed_harmonic(n - k)
+        if scaling is Scaling.SERVER_DEPENDENT:
+            return dist.delta + s * dist.W * hd
+        if scaling is Scaling.DATA_DEPENDENT:
+            return s * dist.delta + dist.W * hd
+        # additive: the seed quadrature path is unchanged in order_stats.py
+        return s * dist.delta + osl.erlang_order_stat(k, n, s, dist.W)
+    if isinstance(dist, Pareto):
+        x = osl.pareto_order_stat(k, n, dist.lam, dist.alpha)
+        if scaling is Scaling.SERVER_DEPENDENT:
+            return s * x
+        return s * (delta or 0.0) + x
+    if isinstance(dist, BiModal):
+        x = 1.0 + (dist.B - 1.0) * _seed_bimodal_straggle_prob(k, n, dist.eps)
+        if scaling is Scaling.SERVER_DEPENDENT:
+            return s * x
+        return s * (delta or 0.0) + x
+    raise TypeError(type(dist))
+
+
+def _seed_scalar_curve(dist, scaling, n: int, delta=None) -> dict:
+    return {k: _seed_scalar_point(dist, scaling, k, n, delta)
+            for k in divisors(n)}
+
+
+# --------------------------------------------------------------------------
+# Workloads
+# --------------------------------------------------------------------------
+
+# the six closed-form planner cells (additive quadrature reported separately)
+CLOSED_FORM_CELLS = [
+    ("sexp_server", ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, None),
+    ("sexp_data", ShiftedExp(5.0, 5.0), Scaling.DATA_DEPENDENT, None),
+    ("pareto_server", Pareto(1.0, 2.0), Scaling.SERVER_DEPENDENT, None),
+    ("pareto_data", Pareto(1.0, 3.0), Scaling.DATA_DEPENDENT, 5.0),
+    ("bimodal_server", BiModal(10.0, 0.3), Scaling.SERVER_DEPENDENT, None),
+    ("bimodal_data", BiModal(10.0, 0.3), Scaling.DATA_DEPENDENT, 5.0),
+]
+
+
+def _time_ms(fn, repeat=3):
+    fn()  # warmup (fills the harmonic/GL caches: steady-state planner regime)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _curve_workload(n: int):
+    """Latency of the full closed-form curve workload both ways + agreement."""
+    def batched_all():
+        return [completion_curve(d, sc, n, delta=dl)
+                for _, d, sc, dl in CLOSED_FORM_CELLS]
+
+    def seed_all():
+        return [_seed_scalar_curve(d, sc, n, delta=dl)
+                for _, d, sc, dl in CLOSED_FORM_CELLS]
+
+    t_batched = _time_ms(batched_all)
+    t_seed = _time_ms(seed_all)
+    # numerical agreement of the two paths on this workload
+    err = 0.0
+    for got, ref in zip(batched_all(), seed_all()):
+        for k in got:
+            denom = max(abs(ref[k]), 1e-12)
+            err = max(err, abs(got[k] - ref[k]) / denom)
+    return t_batched, t_seed, err
+
+
+def _quadrature_workload(n: int):
+    """S-Exp additive (per-k Erlang quadrature) -- the non-shareable case."""
+    d = ShiftedExp(1.0, 10.0)
+
+    t_batched = _time_ms(lambda: completion_curve(d, Scaling.ADDITIVE, n), repeat=1)
+    t_seed = _time_ms(lambda: _seed_scalar_curve(d, Scaling.ADDITIVE, n), repeat=1)
+    return t_batched, t_seed
+
+
+def run() -> bool:
+    check = Check("planner_sweep")
+    report = {"closed_form_curves": {}, "quadrature_curves": {},
+              "scenario_grid": {}}
+
+    for n in (120, 720, 1024):
+        t_b, t_s, err = _curve_workload(n)
+        ratio = t_s / max(t_b, 1e-9)
+        report["closed_form_curves"][str(n)] = {
+            "batched_ms": round(t_b, 4), "seed_ms": round(t_s, 4),
+            "speedup": round(ratio, 1), "max_rel_err": err,
+            "num_k": len(divisors(n)), "cells": len(CLOSED_FORM_CELLS),
+        }
+        print(f"  n={n:5d}: full closed-form curves "
+              f"batched {t_b:8.3f} ms | seed {t_s:9.3f} ms | {ratio:7.1f}x "
+              f"| max rel err {err:.2e}")
+        check.expect(f"n={n} batched curve matches seed path (<1e-6 rel)",
+                     err < 1e-6, f"{err:.2e}")
+
+    r720 = report["closed_form_curves"]["720"]["speedup"]
+    check.expect("n=720 full-curve speedup >= 20x (acceptance gate)",
+                 r720 >= 20.0, f"{r720}x")
+
+    for n in (120, 720):
+        t_b, t_s = _quadrature_workload(n)
+        report["quadrature_curves"][str(n)] = {
+            "batched_ms": round(t_b, 3), "seed_ms": round(t_s, 3),
+            "speedup": round(t_s / max(t_b, 1e-9), 2),
+        }
+        print(f"  n={n:5d}: sexp-additive quadrature curve "
+              f"batched {t_b:8.2f} ms | seed {t_s:9.2f} ms | "
+              f"{t_s / max(t_b, 1e-9):5.1f}x")
+
+    # plans/sec over a 100-scenario straggling grid (Bi-Modal eps sweep)
+    n_grid = 120
+    eps_grid = np.linspace(0.02, 0.95, 100)
+    dists = [BiModal(10.0, float(e)) for e in eps_grid]
+
+    t_b = _time_ms(lambda: plan_grid(dists, Scaling.SERVER_DEPENDENT, n_grid))
+    t_s = _time_ms(
+        lambda: [_seed_scalar_curve(d, Scaling.SERVER_DEPENDENT, n_grid)
+                 for d in dists])
+    plans_sec_b = 100.0 / (t_b / 1e3)
+    plans_sec_s = 100.0 / (t_s / 1e3)
+    report["scenario_grid"] = {
+        "n": n_grid, "scenarios": 100,
+        "batched_plans_per_sec": round(plans_sec_b, 1),
+        "seed_plans_per_sec": round(plans_sec_s, 1),
+        "speedup": round(plans_sec_b / plans_sec_s, 1),
+    }
+    print(f"  100-scenario grid (n={n_grid}): "
+          f"{plans_sec_b:,.0f} plans/s batched vs {plans_sec_s:,.0f} seed "
+          f"({plans_sec_b / plans_sec_s:.1f}x)")
+    check.expect("grid planning faster than seed path",
+                 plans_sec_b > plans_sec_s,
+                 f"{plans_sec_b:.0f} vs {plans_sec_s:.0f} plans/s")
+
+    emit_json("BENCH_planner", report)
+    return check.summary()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if run() else 1)

@@ -5,8 +5,8 @@ expected completion times, the k* planner, MDS/gradient coding, and the
 Monte-Carlo simulator.
 """
 from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp, fit_service_time
-from .expectations import expected_completion_time
-from .planner import Plan, Strategy, divisors, plan, strategy_table, theorem_kstar
+from .expectations import completion_curve, expected_completion_time
+from .planner import Plan, Strategy, divisors, plan, plan_grid, strategy_table, theorem_kstar
 from .coding import (
     FractionalRepetitionCode,
     decode_blocks,
@@ -20,6 +20,8 @@ from .coding import (
 )
 from .simulator import (
     completion_curve_mc,
+    completion_curves_grid_mc,
+    curve_compile_count,
     expected_completion_mc,
     job_completion_times,
     sample_task_times,
@@ -28,11 +30,13 @@ from .simulator import (
 
 __all__ = [
     "BiModal", "Pareto", "Scaling", "ServiceTime", "ShiftedExp", "fit_service_time",
-    "expected_completion_time",
-    "Plan", "Strategy", "divisors", "plan", "strategy_table", "theorem_kstar",
+    "completion_curve", "expected_completion_time",
+    "Plan", "Strategy", "divisors", "plan", "plan_grid", "strategy_table",
+    "theorem_kstar",
     "FractionalRepetitionCode", "decode_blocks", "decode_matrix", "encode_blocks",
     "fractional_repetition_code", "gc_decode_weights", "mds_generator",
     "task_size_gradient", "task_size_linear",
-    "completion_curve_mc", "expected_completion_mc", "job_completion_times",
+    "completion_curve_mc", "completion_curves_grid_mc", "curve_compile_count",
+    "expected_completion_mc", "job_completion_times",
     "sample_task_times", "straggler_mask",
 ]

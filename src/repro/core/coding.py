@@ -169,16 +169,19 @@ def gc_decode_weights(code: FractionalRepetitionCode, alive: np.ndarray) -> np.n
     alive = np.asarray(alive, dtype=bool)
     if alive.shape != (code.n,):
         raise ValueError(f"alive must be shape ({code.n},)")
+    # groups are contiguous: one reshape + per-row argmax replaces the
+    # per-group Python loop (argmax of a bool row = lowest-index finisher)
+    by_group = alive.reshape(code.num_groups, code.c)
+    has_finisher = by_group.any(axis=1)
+    if not has_finisher.all():
+        g = int(np.argmin(has_finisher))
+        raise RuntimeError(
+            f"group {g} has no finisher; job cannot decode "
+            f"(needs restart or re-plan)"
+        )
+    first = by_group.argmax(axis=1)
     a = np.zeros(code.n, dtype=np.float32)
-    for g in range(code.num_groups):
-        members = np.arange(g * code.c, (g + 1) * code.c)
-        finishers = members[alive[members]]
-        if finishers.size == 0:
-            raise RuntimeError(
-                f"group {g} has no finisher; job cannot decode "
-                f"(needs restart or re-plan)"
-            )
-        a[finishers[0]] = 1.0
+    a[np.arange(code.num_groups) * code.c + first] = 1.0
     return a
 
 

@@ -24,6 +24,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .batched import harmonic_numbers
+
 __all__ = [
     "harmonic",
     "exponential_order_stat",
@@ -45,11 +47,16 @@ EULER_GAMMA = 0.5772156649015328606
 
 
 def harmonic(n: int) -> float:
-    """H_n = sum_{j=1..n} 1/j (exact summation; n is small in practice)."""
+    """H_n = sum_{j=1..n} 1/j, read from the cached cumulative array.
+
+    The cumulative table (core.batched) makes this O(1) amortized instead
+    of an O(n) summation per call; values are bit-identical to the previous
+    left-to-right scalar sum.
+    """
     if n < 0:
         raise ValueError("n must be >= 0")
     if n <= 10_000:
-        return float(sum(1.0 / j for j in range(1, n + 1)))
+        return float(harmonic_numbers(n)[n])
     # log approximation (paper, App. A-A1) for very large n
     return math.log(n) + EULER_GAMMA + 1.0 / (2 * n)
 
@@ -166,12 +173,13 @@ def gamma_ratio_approx(x: float, beta: float, alpha: float) -> float:
 def bimodal_straggle_prob(k: int, n: int, eps: float) -> float:
     """Pr{X_{k:n} = B} = sum_{i=0}^{k-1} C(n,i) (1-eps)^i eps^(n-i).
 
-    The probability that fewer than k of the n workers are fast.
+    The probability that fewer than k of the n workers are fast.  Routed
+    through the log-stable ``_binom_lt_k``: the direct form multiplies huge
+    ``math.comb(n, i)`` integers by vanishing powers, which overflows float
+    conversion for large n (math.comb(1024, 512) ~ 1e307 alone).
     """
     _check_kn(k, n)
-    return float(
-        sum(math.comb(n, i) * (1 - eps) ** i * eps ** (n - i) for i in range(k))
-    )
+    return _binom_lt_k(n, k, 1.0 - eps)
 
 
 def bimodal_order_stat(k: int, n: int, B: float, eps: float) -> float:
@@ -180,10 +188,24 @@ def bimodal_order_stat(k: int, n: int, B: float, eps: float) -> float:
 
 
 def bimodal_sum_pmf(s: int, B: float, eps: float):
-    """PMF of Y = sum of s i.i.d. Bi-Modal(B,eps):  (value, prob) per eq. (21)."""
+    """PMF of Y = sum of s i.i.d. Bi-Modal(B,eps):  (value, prob) per eq. (21).
+
+    Log-stable terms (same defect class as ``bimodal_straggle_prob``: a raw
+    ``math.comb(s, w)`` big-int overflows float conversion once s ~ 1030).
+    """
     vals = np.array([s - w + w * B for w in range(s + 1)], dtype=np.float64)
+    if eps <= 0.0 or eps >= 1.0:
+        probs = np.zeros(s + 1, dtype=np.float64)
+        probs[s if eps >= 1.0 else 0] = 1.0
+        return vals, probs
+    lp, lq = math.log(eps), math.log(1.0 - eps)
+    lg_s1 = math.lgamma(s + 1)
     probs = np.array(
-        [math.comb(s, w) * (1 - eps) ** (s - w) * eps**w for w in range(s + 1)],
+        [
+            math.exp(lg_s1 - math.lgamma(w + 1) - math.lgamma(s - w + 1)
+                     + (s - w) * lq + w * lp)
+            for w in range(s + 1)
+        ],
         dtype=np.float64,
     )
     return vals, probs

@@ -26,16 +26,17 @@ import dataclasses
 import math
 from typing import List, Optional, Sequence
 
+from .batched import divisors as batched_divisors
 from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp
-from .expectations import expected_completion_time
+from .expectations import completion_curve
 
-__all__ = ["Plan", "Strategy", "divisors", "plan", "theorem_kstar", "strategy_table"]
+__all__ = ["Plan", "Strategy", "divisors", "plan", "plan_grid", "theorem_kstar",
+           "strategy_table"]
 
 
 def divisors(n: int) -> List[int]:
     """All positive divisors of n, ascending (legal k values)."""
-    out = [d for d in range(1, n + 1) if n % d == 0]
-    return out
+    return batched_divisors(n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +110,24 @@ def theorem_kstar(
     return None, None
 
 
+def _make_plan(dist: ServiceTime, scaling: Scaling, n: int,
+               delta: Optional[float], curve: dict) -> Plan:
+    """Arg-min + theorem annotation over an already-computed k-curve."""
+    k_best = min(curve, key=lambda k: (curve[k], k))
+    tk, tname = theorem_kstar(dist, scaling, n, delta)
+    return Plan(
+        n=n,
+        k=k_best,
+        expected_time=curve[k_best],
+        strategy=_classify(k_best, n),
+        code_rate=k_best / n,
+        task_size=n // k_best,
+        curve=curve,
+        theorem_k=tk,
+        theorem_name=tname,
+    )
+
+
 def plan(
     dist: ServiceTime,
     scaling: Scaling,
@@ -127,30 +146,51 @@ def plan(
         ks = [k for k in ks if n // k <= max_task_size]
     if not ks:
         raise ValueError("no legal k after constraints")
-    curve = {
-        k: expected_completion_time(dist, scaling, k, n, delta=delta) for k in ks
-    }
-    k_best = min(curve, key=lambda k: (curve[k], k))
-    tk, tname = theorem_kstar(dist, scaling, n, delta)
-    return Plan(
-        n=n,
-        k=k_best,
-        expected_time=curve[k_best],
-        strategy=_classify(k_best, n),
-        code_rate=k_best / n,
-        task_size=n // k_best,
-        curve=curve,
-        theorem_k=tk,
-        theorem_name=tname,
-    )
+    # one batched pass over the shared order-statistic table (core.batched)
+    # instead of an expected_completion_time call per divisor
+    curve = completion_curve(dist, scaling, n, ks=ks, delta=delta)
+    return _make_plan(dist, scaling, n, delta, curve)
 
 
-def strategy_table(n: int = 12) -> dict:
+def plan_grid(
+    dists: Sequence[ServiceTime],
+    scaling: Scaling,
+    n: int,
+    delta: Optional[float] = None,
+    mc: bool = False,
+    trials: int = 20_000,
+    seed: int = 0,
+) -> List[Plan]:
+    """Plans for a whole scenario grid (one distribution family per call).
+
+    ``mc=False`` (default): each scenario's k-curve comes from the batched
+    analytic engine (``completion_curve``) -- the production planner's
+    many-scenario hot path.  ``mc=True``: the ENTIRE grid's curves are
+    estimated by ``simulator.completion_curves_grid_mc`` in one compiled
+    vmap-over-parameters call with common random numbers (Table-I-style
+    sweeps, one compile per family/scaling block).
+    """
+    ks = divisors(n)
+    if mc:
+        from .simulator import completion_curves_grid_mc
+        curves = completion_curves_grid_mc(
+            dists, scaling, n, ks=ks, trials=trials, seed=seed, delta=delta)
+        curve_dicts = [{k: float(v) for k, v in zip(ks, row)} for row in curves]
+    else:
+        curve_dicts = [completion_curve(d, scaling, n, ks=ks, delta=delta)
+                       for d in dists]
+    return [_make_plan(dist, scaling, n, delta, curve)
+            for dist, curve in zip(dists, curve_dicts)]
+
+
+def strategy_table(n: int = 12, mc: bool = False, trials: int = 20_000) -> dict:
     """Reproduce the qualitative structure of the paper's Table I.
 
     For each (PDF, scaling) we sweep the straggling knob from light to heavy
     and report the sequence of optimal strategies; arrows in the paper's
-    table correspond to changes along each sweep.
+    table correspond to changes along each sweep.  Each sweep goes through
+    ``plan_grid``; with ``mc=True`` every (family, scaling) block is one
+    compiled Monte-Carlo call.
     """
     sweeps = {
         ("shifted_exp", "server"): [ShiftedExp(1.0, w) for w in (0.1, 1.0, 5.0, 10.0)],
@@ -173,11 +213,10 @@ def strategy_table(n: int = 12) -> dict:
     }
     table = {}
     for (fam, sc), dists in sweeps.items():
-        seq = []
-        for d in dists:
-            delta = 5.0 if (fam in ("pareto", "bimodal") and sc == "data") else None
-            p = plan(d, scalings[sc], n, delta=delta)
-            seq.append(p.strategy)
+        delta = 5.0 if (fam in ("pareto", "bimodal") and sc == "data") else None
+        plans = plan_grid(dists, scalings[sc], n, delta=delta, mc=mc,
+                          trials=trials)
+        seq = [p.strategy for p in plans]
         # collapse consecutive repeats: "splitting -> coding -> splitting"
         collapsed = [seq[0]]
         for x in seq[1:]:

@@ -8,6 +8,14 @@ vmapped over trials; used to
   * produce the Pareto-additive curve (paper's own Fig. 9 methodology),
   * empirically verify stochastic dominance (Thm. 5) and the LLN regimes,
   * drive the runtime's straggler mask sampling.
+
+Whole-curve estimation is BATCHED: ``completion_curve_mc`` draws one
+(trials, n) common-random-number sample, sorts it once, and reads every
+order statistic from the sorted matrix inside a single jitted program (one
+compile per curve, counted by ``curve_compile_count``), instead of one
+sample + one compile per k.  ``completion_curves_grid_mc`` additionally
+vmaps the whole curve over a parameter grid, so Table-I-style scenario
+sweeps run as one compiled call per (family, scaling) block.
 """
 from __future__ import annotations
 
@@ -18,13 +26,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .distributions import Scaling, ServiceTime
+from .batched import divisors
+from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp
 
 __all__ = [
     "sample_task_times",
     "job_completion_times",
     "expected_completion_mc",
     "completion_curve_mc",
+    "completion_curves_grid_mc",
+    "curve_compile_count",
     "straggler_mask",
     "empirical_survival",
 ]
@@ -68,6 +79,55 @@ def expected_completion_mc(
     return float(jnp.mean(job_completion_times(t, k)))
 
 
+# --------------------------------------------------------------------------
+# Batched whole-curve MC: one CRN sample, one sort, one compile per curve
+# --------------------------------------------------------------------------
+
+_CURVE_TRACES = 0
+
+
+def curve_compile_count() -> int:
+    """How many times a batched-curve kernel has been TRACED (== compiled).
+
+    The counter increments inside the traced function body, so it ticks
+    once per jit compilation and not per execution -- tests assert a whole
+    curve costs exactly one compile, and a repeated call costs zero.
+    """
+    return _CURVE_TRACES
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dist", "scaling", "n", "ks", "trials", "delta")
+)
+def _curve_kernel(key, dist, scaling, n, ks, trials, delta):
+    """All E[Y_{k:n}] for k in ``ks`` from one common-random-number draw.
+
+    Server-/data-dependent scaling: the task time is an affine map of one
+    k-independent noise matrix, so a single ``jnp.sort`` yields every order
+    statistic and E[Y_{k:n}] = a_k + b_k * mean(Z_{(k)}).  Additive scaling:
+    one (trials, n, s_max) draw prefix-summed over the CU axis gives the
+    task times of EVERY task size s = n/k from the same underlying CUs.
+    """
+    global _CURVE_TRACES
+    _CURVE_TRACES += 1  # trace-time side effect: counts compiles, not calls
+    d = dist.shift if delta is None else float(delta)
+    s_of_k = [n // k for k in ks]
+    if scaling is Scaling.ADDITIVE:
+        draws = dist.sample(key, (trials, n, max(s_of_k)))
+        csum = jnp.cumsum(draws, axis=-1)
+        outs = []
+        for k, s in zip(ks, s_of_k):
+            task_sorted = jnp.sort(csum[..., s - 1], axis=1)
+            outs.append(jnp.mean(task_sorted[:, k - 1]))
+        return jnp.stack(outs)
+    zs = jnp.sort(dist.sample_noise(key, (trials, n)), axis=1)
+    col_means = jnp.mean(zs[:, jnp.asarray([k - 1 for k in ks])], axis=0)
+    s_arr = jnp.asarray(s_of_k, dtype=col_means.dtype)
+    if scaling is Scaling.SERVER_DEPENDENT:
+        return d + s_arr * col_means
+    return s_arr * d + col_means
+
+
 def completion_curve_mc(
     dist: ServiceTime,
     scaling: Scaling,
@@ -77,13 +137,120 @@ def completion_curve_mc(
     seed: int = 0,
     delta: Optional[float] = None,
 ) -> dict:
-    """k -> MC E[Y_{k:n}] over the divisors of n (one figure curve)."""
+    """k -> MC E[Y_{k:n}] over the divisors of n (one figure curve).
+
+    One jit compile and one common-random-number sample for the whole
+    curve (vs one compile + independent sample per k previously); CRN makes
+    the curve smooth in k and the run bit-reproducible for a fixed seed.
+    """
     if ks is None:
-        ks = [d for d in range(1, n + 1) if n % d == 0]
-    return {
-        k: expected_completion_mc(dist, scaling, k, n, trials, seed + k, delta)
-        for k in ks
-    }
+        ks = divisors(n)
+    ks = tuple(int(k) for k in ks)
+    for k in ks:
+        if n % k:
+            raise ValueError(f"k={k} must divide n={n}")
+    key = jax.random.PRNGKey(seed)
+    vals = _curve_kernel(key, dist, scaling, n, ks, int(trials),
+                         None if delta is None else float(delta))
+    return {k: float(v) for k, v in zip(ks, np.asarray(vals))}
+
+
+# --------------------------------------------------------------------------
+# vmap-over-parameter-grid curves: Table-I sweeps as one compiled call
+# --------------------------------------------------------------------------
+
+_FAMILY_OF = {ShiftedExp: "shifted_exp", Pareto: "pareto", BiModal: "bimodal"}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "scaling", "n", "ks", "trials", "delta")
+)
+def _grid_kernel(key, params, family, scaling, n, ks, trials, delta):
+    """(num_scenarios, len(ks)) curve matrix, vmapped over the param grid.
+
+    One base sample (standard exponential / uniform) is shared by every
+    scenario -- common random numbers across the grid as well as across k --
+    and each scenario's inverse-CDF transform, sort, and order-statistic
+    reads happen under a single vmap inside one compiled program.
+    """
+    global _CURVE_TRACES
+    _CURVE_TRACES += 1
+    s_of_k = [n // k for k in ks]
+    kidx = jnp.asarray([k - 1 for k in ks])
+    s_arr = jnp.asarray(s_of_k, dtype=jnp.float32)
+    additive = scaling is Scaling.ADDITIVE
+    shape = (trials, n, max(s_of_k)) if additive else (trials, n)
+    if family == "shifted_exp":
+        base = jax.random.exponential(key, shape)
+    else:
+        # clamp at the 2^-24 quantile, matching Pareto.sample / bernoulli
+        base = jax.random.uniform(key, shape, minval=2.0 ** -24, maxval=1.0)
+
+    def one_curve(p):
+        if family == "shifted_exp":
+            shift, noise = p[0], p[1] * base          # (delta, W)
+        elif family == "pareto":
+            shift, noise = 0.0, p[0] * base ** (-1.0 / p[1])   # (lam, alpha)
+        else:
+            shift, noise = 0.0, jnp.where(base < p[1], p[0], 1.0)  # (B, eps)
+        d = shift if delta is None else delta
+        if additive:
+            csum = jnp.cumsum(shift + noise, axis=-1)
+            cols = []
+            for k, s in zip(ks, s_of_k):
+                cols.append(jnp.mean(jnp.sort(csum[..., s - 1], axis=1)[:, k - 1]))
+            return jnp.stack(cols)
+        col_means = jnp.mean(jnp.sort(noise, axis=1)[:, kidx], axis=0)
+        if scaling is Scaling.SERVER_DEPENDENT:
+            return d + s_arr * col_means
+        return s_arr * d + col_means
+
+    if additive:
+        # sequential map: the additive branch materializes a per-scenario
+        # (trials, n, s_max) cumsum; a full vmap would multiply that by the
+        # grid size and OOM on wide sweeps.  Still one compiled program.
+        return jax.lax.map(one_curve, params)
+    return jax.vmap(one_curve)(params)
+
+
+def completion_curves_grid_mc(
+    dists: Sequence[ServiceTime],
+    scaling: Scaling,
+    n: int,
+    ks: Optional[Sequence[int]] = None,
+    trials: int = 20_000,
+    seed: int = 0,
+    delta: Optional[float] = None,
+) -> np.ndarray:
+    """MC curves for a whole scenario grid in ONE compiled call.
+
+    ``dists`` must share one family (ShiftedExp | Pareto | BiModal); their
+    parameters are stacked into a (num_scenarios, 2) matrix and the curve
+    computation is vmapped over it.  Returns (num_scenarios, len(ks)).
+    Re-sweeping a grid of the same family/shape reuses the compiled kernel
+    (zero recompiles), which is what makes planner-scale scenario diversity
+    cheap.
+    """
+    fams = {type(d) for d in dists}
+    if len(fams) != 1 or next(iter(fams)) not in _FAMILY_OF:
+        raise ValueError(f"dists must share one supported family, got {fams}")
+    family = _FAMILY_OF[next(iter(fams))]
+    if ks is None:
+        ks = divisors(n)
+    ks = tuple(int(k) for k in ks)
+    for k in ks:
+        if n % k:
+            raise ValueError(f"k={k} must divide n={n}")
+    if family == "shifted_exp":
+        params = np.array([[d.delta, d.W] for d in dists], dtype=np.float32)
+    elif family == "pareto":
+        params = np.array([[d.lam, d.alpha] for d in dists], dtype=np.float32)
+    else:
+        params = np.array([[d.B, d.eps] for d in dists], dtype=np.float32)
+    key = jax.random.PRNGKey(seed)
+    out = _grid_kernel(key, jnp.asarray(params), family, scaling, n, ks,
+                       int(trials), None if delta is None else float(delta))
+    return np.asarray(out)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))

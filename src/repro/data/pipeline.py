@@ -99,3 +99,14 @@ def decode_example_weights(code: FractionalRepetitionCode,
     scale = coded_rows / unique_rows
     w = np.repeat(worker_weights.astype(np.float32), per_worker_rows) * scale
     return w
+
+
+def expand_worker_weights(worker_weights: jnp.ndarray, per_worker_rows: int,
+                          scale: float) -> jnp.ndarray:
+    """jnp twin of ``decode_example_weights`` for use INSIDE a jitted step.
+
+    ``jnp.repeat`` with a static repeat count is trace-compatible, so the
+    per-step host-side expansion (and the (coded_rows,) host->device
+    transfer) collapses to shipping the (n,) decode coefficients only.
+    """
+    return jnp.repeat(worker_weights.astype(jnp.float32), per_worker_rows) * scale

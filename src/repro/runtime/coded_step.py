@@ -27,7 +27,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.coding import FractionalRepetitionCode, gc_decode_weights
-from ..data.pipeline import DataConfig, coded_batch, decode_example_weights
+from ..data.pipeline import (DataConfig, coded_batch, decode_example_weights,
+                             expand_worker_weights)
 from ..models import api
 from ..models.layers import cross_entropy_loss
 from ..optim import adamw
@@ -93,6 +94,31 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig) -> Callable:
     return step
 
 
+def make_coded_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                          step_cfg: "CodedStepConfig") -> Callable:
+    """(params, opt_state, tokens, labels, worker_weights) -> ... with the
+    decode-weight expansion INSIDE the step.
+
+    The host ships only the (n_workers,) decode coefficients each step; the
+    repeat-to-examples and mean-normalization scale are constants folded
+    into the compiled program (``expand_worker_weights``), eliminating the
+    per-step host loop and the (coded_rows,) transfer of the seed path.
+    """
+    loss = weighted_loss_fn(cfg)
+    per_worker_rows = step_cfg.per_worker_rows
+    scale = step_cfg.coded_batch_rows / step_cfg.unique_batch
+
+    def step(params, opt_state, tokens, labels, worker_weights):
+        weights = expand_worker_weights(worker_weights, per_worker_rows, scale)
+        lval, grads = jax.value_and_grad(loss)(params, tokens, labels, weights)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = lval
+        return params, opt_state, metrics
+
+    return step
+
+
 def make_eval_step(cfg: ModelConfig) -> Callable:
     def eval_step(params, tokens, labels):
         logits = api.forward(cfg, params, tokens)
@@ -121,13 +147,14 @@ class CodedTrainer:
         self.step_cfg = step_cfg
         self.opt_cfg = opt_cfg
         self.alive_fn = alive_fn
-        step = make_train_step(model_cfg, opt_cfg)
+        step = make_coded_train_step(model_cfg, opt_cfg, step_cfg)
         self.step_fn = jax.jit(
             step, donate_argnums=(0, 1) if donate else ()) if jit else step
         self.decode_failures = 0
         self.stragglers_dropped = 0
 
-    def weights_for(self, alive: np.ndarray) -> np.ndarray:
+    def decode_coefficients(self, alive: np.ndarray) -> np.ndarray:
+        """(n_workers,) decode coefficients a_i for this step's alive mask."""
         code = self.step_cfg.code
         try:
             a = gc_decode_weights(code, alive)
@@ -136,16 +163,20 @@ class CodedTrainer:
             # a whole group straggled: wait for everyone (full barrier)
             self.decode_failures += 1
             a = np.zeros(code.n, np.float32)
-            for g in range(code.num_groups):
-                a[g * code.c] = 1.0     # deterministic: first member per group
+            a[np.arange(code.num_groups) * code.c] = 1.0  # first member per group
+        return a
+
+    def weights_for(self, alive: np.ndarray) -> np.ndarray:
+        """Host-side expanded per-example weights (reference/debug path; the
+        jitted step expands the coefficients in-graph instead)."""
         return decode_example_weights(
-            code, a, self.step_cfg.per_worker_rows,
-            self.step_cfg.unique_batch)
+            self.step_cfg.code, self.decode_coefficients(alive),
+            self.step_cfg.per_worker_rows, self.step_cfg.unique_batch)
 
     def run_step(self, params, opt_state, step: int):
         toks, labs = coded_batch(self.data_cfg, step, self.step_cfg.code)
         alive = (self.alive_fn(step) if self.alive_fn is not None
                  else np.ones(self.step_cfg.n_workers, bool))
-        w = self.weights_for(alive)
+        a = self.decode_coefficients(alive)
         return self.step_fn(params, opt_state, jnp.asarray(toks),
-                            jnp.asarray(labs), jnp.asarray(w))
+                            jnp.asarray(labs), jnp.asarray(a))

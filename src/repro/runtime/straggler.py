@@ -12,6 +12,7 @@ import dataclasses
 import math
 from typing import Callable, Optional
 
+import jax
 import numpy as np
 
 from ..core.distributions import Scaling, ServiceTime
@@ -33,7 +34,6 @@ class StragglerSim:
 
     def sample_times(self, step: int) -> np.ndarray:
         """(n,) task completion times (numpy; host-side path)."""
-        import jax
         key = jax.random.PRNGKey(self.seed * 1_000_003 + step)
         t = self.dist.sample_task(key, (self.n,), self.s, self.scaling,
                                   delta=self.delta)
@@ -101,7 +101,6 @@ def _task_surv(dist: ServiceTime, scaling: Scaling, s: int, t: np.ndarray,
         return np.array([probs[vals > x].sum() for x in np.atleast_1d(t)]
                         ).reshape(t.shape)
     # Pareto additive: MC empirical tail
-    import jax
     key = jax.random.PRNGKey(12345)
     draws = np.asarray(dist.sample(key, (200_000, s))).sum(axis=-1)
     draws.sort()

@@ -1,0 +1,215 @@
+"""Batched order-statistic engine vs the scalar reference path.
+
+Pins the tentpole's contracts: closed-form k-curves are bit-for-bit equal
+to the scalar functions, quadrature curves agree to 1e-9, the MC curve is
+common-random-number deterministic and costs exactly one jit compile, and
+the vectorized gradient-code decode matches the seed per-group loop.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import batched as B
+from repro.core import expectations as E
+from repro.core import order_stats as osl
+from repro.core.coding import fractional_repetition_code, gc_decode_weights
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.expectations import completion_curve, expected_completion_time
+from repro.core.planner import divisors, plan, plan_grid
+from repro.core.simulator import (completion_curve_mc, completion_curves_grid_mc,
+                                  curve_compile_count)
+
+N = 12
+DIVS = divisors(N)
+
+CLOSED_FORM_CASES = [
+    (ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, None),
+    (ShiftedExp(5.0, 5.0), Scaling.DATA_DEPENDENT, None),
+    (ShiftedExp(0.0, 10.0), Scaling.DATA_DEPENDENT, None),
+    (Pareto(1.0, 2.0), Scaling.SERVER_DEPENDENT, None),
+    (Pareto(1.0, 1.5), Scaling.SERVER_DEPENDENT, None),
+    (Pareto(1.0, 3.0), Scaling.DATA_DEPENDENT, 5.0),
+    (BiModal(10.0, 0.4), Scaling.SERVER_DEPENDENT, None),
+    (BiModal(2.0, 0.9), Scaling.SERVER_DEPENDENT, None),
+    (BiModal(10.0, 0.4), Scaling.DATA_DEPENDENT, 5.0),
+    (BiModal(10.0, 0.2), Scaling.ADDITIVE, None),
+    (BiModal(100.0, 0.7), Scaling.ADDITIVE, None),
+]
+
+
+# ------------------------------------------------------- analytic k-curves
+@pytest.mark.parametrize("dist,scaling,delta", CLOSED_FORM_CASES)
+def test_batched_curve_bitexact_vs_scalar(dist, scaling, delta):
+    curve = completion_curve(dist, scaling, N, delta=delta)
+    for k in DIVS:
+        scalar = expected_completion_time(dist, scaling, k, N, delta=delta)
+        assert curve[k] == scalar, (k, curve[k], scalar)
+
+
+def test_batched_curve_bitexact_large_n():
+    n = 720
+    curve = completion_curve(BiModal(10.0, 0.3), Scaling.SERVER_DEPENDENT, n)
+    for k in (1, 16, 240, 720):
+        scalar = expected_completion_time(
+            BiModal(10.0, 0.3), Scaling.SERVER_DEPENDENT, k, n)
+        assert curve[k] == scalar
+
+
+def test_batched_quadrature_curve_1e9():
+    d = ShiftedExp(1.0, 10.0)
+    curve = completion_curve(d, Scaling.ADDITIVE, N)
+    for k in DIVS:
+        scalar = expected_completion_time(d, Scaling.ADDITIVE, k, N)
+        assert curve[k] == pytest.approx(scalar, rel=1e-9)
+
+
+def test_pareto_additive_curve_identical_mc_path():
+    # same deterministic per-k MC estimator and seeds as the scalar path
+    d = Pareto(1.0, 2.0)
+    curve = completion_curve(d, Scaling.ADDITIVE, N, mc_trials=5_000, mc_seed=7)
+    for k in DIVS:
+        assert curve[k] == expected_completion_time(
+            d, Scaling.ADDITIVE, k, N, mc_trials=5_000, mc_seed=7)
+
+
+def test_curve_rejects_non_divisors():
+    with pytest.raises(ValueError):
+        completion_curve(ShiftedExp(1.0, 1.0), Scaling.SERVER_DEPENDENT, 12, ks=[5])
+
+
+# -------------------------------------------- batched primitive invariants
+def test_harmonic_matches_explicit_sum():
+    for n in (0, 1, 7, 400, 720):
+        assert osl.harmonic(n) == float(sum(1.0 / j for j in range(1, n + 1)))
+    H = B.harmonic_numbers(100)
+    assert H[0] == 0.0 and H.size == 101
+    assert H[100] == osl.harmonic(100)
+
+
+def test_binom_lt_curves_matches_scalar():
+    for p in (0.0, 1e-12, 0.3, 0.9999, 1.0):
+        got = B.binom_lt_curves(N, DIVS, np.array([p]), exact_terms=True)[0]
+        ref = [osl._binom_lt_k(N, k, p) for k in DIVS]
+        assert got.tolist() == ref
+
+
+def test_bimodal_straggle_prob_no_overflow_large_n():
+    # the seed's direct math.comb product overflows float conversion here
+    n = 2500
+    v = osl.bimodal_straggle_prob(n // 2, n, 0.3)
+    assert np.isfinite(v) and 0.0 <= v <= 1.0
+    with pytest.raises(OverflowError):
+        float(sum(math.comb(n, i) * 0.7 ** i * 0.3 ** (n - i)
+                  for i in range(n // 2)))
+
+
+def test_expected_order_stats_matches_scalar_quadrature():
+    surv = lambda t: osl.erlang_survival(t, 3, 2.0)
+    got = B.expected_order_stats(surv, DIVS, N, scale=7.0)
+    for m, k in enumerate(DIVS):
+        ref = osl.expected_order_stat(surv, k, N, scale=7.0)
+        assert got[m] == pytest.approx(ref, rel=1e-9)
+
+
+# ----------------------------------------------------------- planner reuse
+def test_plan_consumes_batched_curve():
+    for dist, scaling, delta in [
+        (ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, None),
+        (Pareto(1.0, 1.5), Scaling.SERVER_DEPENDENT, None),
+        (BiModal(10.0, 0.4), Scaling.DATA_DEPENDENT, 5.0),
+    ]:
+        p = plan(dist, scaling, N, delta=delta)
+        assert set(p.curve) == set(DIVS)
+        assert p.expected_time == min(p.curve.values())
+        for k in DIVS:
+            assert p.curve[k] == expected_completion_time(
+                dist, scaling, k, N, delta=delta)
+
+
+def test_plan_grid_matches_individual_plans():
+    dists = [BiModal(10.0, e) for e in (0.05, 0.2, 0.5, 0.9)]
+    grid = plan_grid(dists, Scaling.SERVER_DEPENDENT, N)
+    for d, pg in zip(dists, grid):
+        assert pg.k == plan(d, Scaling.SERVER_DEPENDENT, N).k
+
+
+# ------------------------------------------------------------- MC batching
+def test_mc_curve_one_compile_and_deterministic():
+    d = ShiftedExp(1.0, 5.0)
+    kwargs = dict(trials=20_000, seed=3)
+    c0 = curve_compile_count()
+    a = completion_curve_mc(d, Scaling.SERVER_DEPENDENT, N, **kwargs)
+    compiles = curve_compile_count() - c0
+    assert compiles == 1, f"expected exactly one compile per curve, got {compiles}"
+    b = completion_curve_mc(d, Scaling.SERVER_DEPENDENT, N, **kwargs)
+    assert curve_compile_count() - c0 == 1, "second identical curve recompiled"
+    assert a == b, "common-random-number curve must be run-to-run deterministic"
+
+
+def test_mc_curve_matches_closed_form():
+    d = ShiftedExp(1.0, 5.0)
+    mc = completion_curve_mc(d, Scaling.SERVER_DEPENDENT, N, trials=200_000)
+    for k in DIVS:
+        cf = expected_completion_time(d, Scaling.SERVER_DEPENDENT, k, N)
+        assert mc[k] == pytest.approx(cf, rel=0.02)
+
+
+def test_mc_curve_additive_matches_closed_form():
+    d = ShiftedExp(1.0, 10.0)
+    mc = completion_curve_mc(d, Scaling.ADDITIVE, N, trials=200_000)
+    for k in DIVS:
+        cf = expected_completion_time(d, Scaling.ADDITIVE, k, N)
+        assert mc[k] == pytest.approx(cf, rel=0.02)
+
+
+def test_mc_grid_one_compile_matches_per_dist_curves():
+    dists = [BiModal(10.0, e) for e in (0.1, 0.4, 0.8)]
+    c0 = curve_compile_count()
+    g = completion_curves_grid_mc(dists, Scaling.SERVER_DEPENDENT, N,
+                                  trials=100_000, seed=0)
+    assert curve_compile_count() - c0 == 1
+    assert g.shape == (3, len(DIVS))
+    for i, d in enumerate(dists):
+        for m, k in enumerate(DIVS):
+            cf = expected_completion_time(d, Scaling.SERVER_DEPENDENT, k, N)
+            assert g[i, m] == pytest.approx(cf, rel=0.05)
+    # CRN across the grid: repeat run is bit-identical
+    g2 = completion_curves_grid_mc(dists, Scaling.SERVER_DEPENDENT, N,
+                                   trials=100_000, seed=0)
+    assert (g == g2).all()
+
+
+def test_mc_grid_rejects_mixed_families():
+    with pytest.raises(ValueError):
+        completion_curves_grid_mc([ShiftedExp(1.0, 1.0), Pareto(1.0, 2.0)],
+                                  Scaling.SERVER_DEPENDENT, N)
+
+
+# ----------------------------------------------------- vectorized decoding
+def test_gc_decode_weights_matches_seed_loop():
+    rng = np.random.default_rng(0)
+    for n, c in [(4, 2), (6, 2), (6, 3), (12, 4), (8, 8), (8, 1), (24, 6)]:
+        code = fractional_repetition_code(n, c)
+        for _ in range(100):
+            alive = rng.random(n) < rng.uniform(0.2, 0.95)
+            wiped = not alive.reshape(n // c, c).any(axis=1).all()
+            if wiped:
+                with pytest.raises(RuntimeError):
+                    gc_decode_weights(code, alive)
+                continue
+            a = gc_decode_weights(code, alive)
+            # seed reference: per-group Python loop, lowest-index finisher
+            ref = np.zeros(n, dtype=np.float32)
+            for g in range(code.num_groups):
+                members = np.arange(g * c, (g + 1) * c)
+                finishers = members[alive[members]]
+                ref[finishers[0]] = 1.0
+            assert (a == ref).all()
+            assert a.dtype == np.float32 and a.sum() == code.num_groups
+
+
+def test_gc_decode_weights_all_straggler_group_raises():
+    code = fractional_repetition_code(6, 2)
+    with pytest.raises(RuntimeError, match="group 1"):
+        gc_decode_weights(code, np.array([1, 0, 0, 0, 1, 1], bool))

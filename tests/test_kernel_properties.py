@@ -8,6 +8,9 @@ boundaries, causal/bidirectional -- the places kernels break.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coding import mds_generator

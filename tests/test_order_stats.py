@@ -3,6 +3,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import order_stats as osl
