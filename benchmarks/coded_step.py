@@ -14,14 +14,14 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.api import Planner, Scenario
 from repro.configs.base import ModelConfig
 from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
-from repro.core.planner import plan
 from repro.data import DataConfig
 from repro.models import api
 from repro.optim import adamw
 from repro.runtime import (CodedStepConfig, CodedTrainer, StragglerSim,
-                           fr_expected_completion, plan_fr)
+                           best_fr_policy, fr_expected_completion)
 
 from .common import Check, emit_rows, time_call
 
@@ -41,10 +41,13 @@ def run(**_) -> bool:
         "pareto(1,1.8)": (Pareto(1.0, 1.8), 1.0),
     }
     for name, (dist, delta) in dists.items():
+        scenario = Scenario(dist, Scaling.DATA_DEPENDENT, n, delta=delta)
         # paper geometry (MDS, any-k-of-n)
-        p_mds = plan(dist, Scaling.DATA_DEPENDENT, n, delta=delta)
+        p_mds = Planner().plan(scenario)
         # achievable gradient-code geometry (FR)
-        p_fr = plan_fr(dist, Scaling.DATA_DEPENDENT, n, delta=delta)
+        fr_policy, fr_curve = best_fr_policy(scenario)
+        p_fr = {"c": fr_policy.c, "expected_time": fr_curve[fr_policy.c],
+                "curve": fr_curve}
         for c, e in sorted(p_fr["curve"].items()):
             rows.append(dict(dist=name, geometry="FR", knob=f"c={c}",
                              expected_time=round(e, 4)))

@@ -21,11 +21,11 @@ import time
 
 import numpy as np
 
+from repro.api import MeanCompletionTime, Planner, Scenario
 from repro.core import batched
 from repro.core import order_stats as osl
 from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
-from repro.core.expectations import completion_curve
-from repro.core.planner import divisors, plan_grid
+from repro.core.planner import divisors
 
 from .common import Check, emit_json
 
@@ -101,10 +101,13 @@ def _time_ms(fn, repeat=3):
     return ts[len(ts) // 2]
 
 
+_PLANNER = Planner(MeanCompletionTime())
+
+
 def _curve_workload(n: int):
     """Latency of the full closed-form curve workload both ways + agreement."""
     def batched_all():
-        return [completion_curve(d, sc, n, delta=dl)
+        return [_PLANNER.curve(Scenario(d, sc, n, delta=dl))
                 for _, d, sc, dl in CLOSED_FORM_CELLS]
 
     def seed_all():
@@ -126,7 +129,8 @@ def _quadrature_workload(n: int):
     """S-Exp additive (per-k Erlang quadrature) -- the non-shareable case."""
     d = ShiftedExp(1.0, 10.0)
 
-    t_batched = _time_ms(lambda: completion_curve(d, Scaling.ADDITIVE, n), repeat=1)
+    t_batched = _time_ms(
+        lambda: _PLANNER.curve(Scenario(d, Scaling.ADDITIVE, n)), repeat=1)
     t_seed = _time_ms(lambda: _seed_scalar_curve(d, Scaling.ADDITIVE, n), repeat=1)
     return t_batched, t_seed
 
@@ -169,7 +173,8 @@ def run() -> bool:
     eps_grid = np.linspace(0.02, 0.95, 100)
     dists = [BiModal(10.0, float(e)) for e in eps_grid]
 
-    t_b = _time_ms(lambda: plan_grid(dists, Scaling.SERVER_DEPENDENT, n_grid))
+    scenarios = [Scenario(d, Scaling.SERVER_DEPENDENT, n_grid) for d in dists]
+    t_b = _time_ms(lambda: _PLANNER.sweep(scenarios))
     t_s = _time_ms(
         lambda: [_seed_scalar_curve(d, Scaling.SERVER_DEPENDENT, n_grid)
                  for d in dists])

@@ -22,8 +22,9 @@ from repro.data import DataConfig
 from repro.models import api
 from repro.launch.hlo_analysis import count_params
 from repro.optim import adamw
+from repro.api import FRCompletionTime, Planner, Scenario
 from repro.runtime import (CodedStepConfig, CodedTrainer, StragglerSim,
-                           Telemetry, plan_fr, resize_plan)
+                           Telemetry, resize_plan)
 
 
 def main():
@@ -52,16 +53,18 @@ def main():
     n = 8
     dist = BiModal(8.0, 0.25)
     scaling = Scaling.DATA_DEPENDENT
-    fr = plan_fr(dist, scaling, n, delta=1.0)
-    print(f"initial plan: c* = {fr['c']} "
-          f"E[T] = {fr['expected_time']:.2f} (curve {fr['curve']})")
+    fr = Planner(FRCompletionTime()).plan(Scenario(dist, scaling, n, delta=1.0))
+    policy = fr.policy
+    print(f"initial plan: {policy} (c* = {policy.c}) "
+          f"E[T] = {fr.expected_time:.2f} (k-curve {fr.curve})")
 
-    step_cfg = CodedStepConfig(n_workers=n, c=fr["c"], unique_batch=8)
+    step_cfg = CodedStepConfig.from_policy(policy, unique_batch=8)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=8)
     opt_cfg = adamw.AdamWConfig(lr=6e-4, warmup_steps=20,
                                 decay_steps=args.steps)
-    sim = StragglerSim(dist, scaling, n=n, s=fr["c"], delta=1.0, seed=3)
+    sim = StragglerSim(dist, scaling, n=n, s=policy.task_size, delta=1.0,
+                       seed=3)
     trainer = CodedTrainer(cfg, data_cfg, step_cfg, opt_cfg,
                            alive_fn=sim.alive_fn(deadline=4.0))
     telem = Telemetry()

@@ -7,6 +7,8 @@ Monte-Carlo simulator.
 from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp, fit_service_time
 from .expectations import completion_curve, expected_completion_time
 from .planner import Plan, Strategy, divisors, plan, plan_grid, strategy_table, theorem_kstar
+from .policy import Policy
+from .scenario import Scenario, task_survival
 from .coding import (
     FractionalRepetitionCode,
     decode_blocks,
@@ -32,7 +34,7 @@ __all__ = [
     "BiModal", "Pareto", "Scaling", "ServiceTime", "ShiftedExp", "fit_service_time",
     "completion_curve", "expected_completion_time",
     "Plan", "Strategy", "divisors", "plan", "plan_grid", "strategy_table",
-    "theorem_kstar",
+    "theorem_kstar", "Policy", "Scenario", "task_survival",
     "FractionalRepetitionCode", "decode_blocks", "decode_matrix", "encode_blocks",
     "fractional_repetition_code", "gc_decode_weights", "mds_generator",
     "task_size_gradient", "task_size_linear",

@@ -230,7 +230,7 @@ def completion_curve(
         if scaling is Scaling.SERVER_DEPENDENT:
             vals = s_arr * batched.pareto_order_stat_curve(ks_arr, n, dist.lam, dist.alpha)
         elif scaling is Scaling.DATA_DEPENDENT:
-            vals = s_arr * (delta or 0.0) + batched.pareto_order_stat_curve(
+            vals = s_arr * (0.0 if delta is None else delta) + batched.pareto_order_stat_curve(
                 ks_arr, n, dist.lam, dist.alpha)
         else:
             vals = np.array([
@@ -242,7 +242,7 @@ def completion_curve(
         if scaling is Scaling.SERVER_DEPENDENT:
             vals = s_arr * xkn
         elif scaling is Scaling.DATA_DEPENDENT:
-            vals = s_arr * (delta or 0.0) + xkn
+            vals = s_arr * (0.0 if delta is None else delta) + xkn
         else:
             vals = batched.bimodal_sum_order_stat_curve(
                 ks_arr, n, s_arr, dist.B, dist.eps)
@@ -277,12 +277,12 @@ def expected_completion_time(
         if scaling is Scaling.SERVER_DEPENDENT:
             return pareto_server_dependent(k, n, dist.lam, dist.alpha)
         if scaling is Scaling.DATA_DEPENDENT:
-            return pareto_data_dependent(k, n, dist.lam, dist.alpha, delta or 0.0)
+            return pareto_data_dependent(k, n, dist.lam, dist.alpha, 0.0 if delta is None else delta)
         return pareto_additive_mc(k, n, dist.lam, dist.alpha, mc_trials, mc_seed)
     if isinstance(dist, BiModal):
         if scaling is Scaling.SERVER_DEPENDENT:
             return bimodal_server_dependent(k, n, dist.B, dist.eps)
         if scaling is Scaling.DATA_DEPENDENT:
-            return bimodal_data_dependent(k, n, dist.B, dist.eps, delta or 0.0)
+            return bimodal_data_dependent(k, n, dist.B, dist.eps, 0.0 if delta is None else delta)
         return bimodal_additive(k, n, dist.B, dist.eps)
     raise TypeError(f"unsupported distribution {type(dist).__name__}")

@@ -24,14 +24,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import List, Optional, Sequence
 
 from .batched import divisors as batched_divisors
 from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp
-from .expectations import completion_curve
 
 __all__ = ["Plan", "Strategy", "divisors", "plan", "plan_grid", "theorem_kstar",
            "strategy_table"]
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (repro.api) instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def divisors(n: int) -> List[int]:
@@ -53,19 +59,17 @@ class Plan:
     theorem_k: Optional[float]  # closed-form k* where the paper gives one
     theorem_name: Optional[str]
 
+    @property
+    def policy(self) -> "Policy":
+        """The decision as the runtime's typed ``Policy`` (lossless k<->c)."""
+        from .policy import Policy
+        return Policy(n=self.n, k=self.k)
+
 
 class Strategy:
     REPLICATION = "replication"
     SPLITTING = "splitting"
     CODING = "coding"
-
-
-def _classify(k: int, n: int) -> str:
-    if k == 1:
-        return Strategy.REPLICATION
-    if k == n:
-        return Strategy.SPLITTING
-    return Strategy.CODING
 
 
 def theorem_kstar(
@@ -100,7 +104,9 @@ def theorem_kstar(
                 return (1.0 - dist.eps) * n, "Thm8:r=1-eps"
             return float(n), "Thm8:splitting"
         if scaling is Scaling.DATA_DEPENDENT:
-            d = delta or 0.0
+            # explicit is-None check: delta=0.0 means "zero deterministic
+            # work", not "unset" (the old ``delta or 0.0`` conflated them)
+            d = 0.0 if delta is None else float(delta)
             if dist.eps <= (dist.B - 1.0) / (d + dist.B - 1.0):
                 return (1.0 - dist.eps) * n, "Thm9:r=1-eps"
             return float(n), "Thm9:splitting"
@@ -110,24 +116,6 @@ def theorem_kstar(
     return None, None
 
 
-def _make_plan(dist: ServiceTime, scaling: Scaling, n: int,
-               delta: Optional[float], curve: dict) -> Plan:
-    """Arg-min + theorem annotation over an already-computed k-curve."""
-    k_best = min(curve, key=lambda k: (curve[k], k))
-    tk, tname = theorem_kstar(dist, scaling, n, delta)
-    return Plan(
-        n=n,
-        k=k_best,
-        expected_time=curve[k_best],
-        strategy=_classify(k_best, n),
-        code_rate=k_best / n,
-        task_size=n // k_best,
-        curve=curve,
-        theorem_k=tk,
-        theorem_name=tname,
-    )
-
-
 def plan(
     dist: ServiceTime,
     scaling: Scaling,
@@ -135,21 +123,22 @@ def plan(
     delta: Optional[float] = None,
     candidate_ks: Optional[Sequence[int]] = None,
     max_task_size: Optional[int] = None,
+    mc_trials: int = 100_000,
+    mc_seed: int = 0,
 ) -> Plan:
-    """Exact arg-min of E[Y_{k:n}] over legal k, with theorem annotation.
+    """DEPRECATED shim: use ``repro.api.Planner.plan(Scenario(...))``.
 
-    ``max_task_size`` caps s = n/k (i.e. lower-bounds k) — used by the
-    training runtime when per-worker memory cannot hold s data parts.
+    Exact arg-min of E[Y_{k:n}] over legal k, with theorem annotation;
+    delegates to the unified front door with the default mean objective
+    (plans are bit-identical).
     """
-    ks = list(candidate_ks) if candidate_ks is not None else divisors(n)
-    if max_task_size is not None:
-        ks = [k for k in ks if n // k <= max_task_size]
-    if not ks:
-        raise ValueError("no legal k after constraints")
-    # one batched pass over the shared order-statistic table (core.batched)
-    # instead of an expected_completion_time call per divisor
-    curve = completion_curve(dist, scaling, n, ks=ks, delta=delta)
-    return _make_plan(dist, scaling, n, delta, curve)
+    _deprecated("core.planner.plan()", "Planner.plan(Scenario(...))")
+    from ..api import MeanCompletionTime, Planner, Scenario
+    scenario = Scenario(
+        dist, scaling, n, delta=delta, max_task_size=max_task_size,
+        candidate_ks=None if candidate_ks is None else tuple(candidate_ks))
+    return Planner(MeanCompletionTime(
+        mc_trials=mc_trials, mc_seed=mc_seed)).plan(scenario)
 
 
 def plan_grid(
@@ -161,26 +150,18 @@ def plan_grid(
     trials: int = 20_000,
     seed: int = 0,
 ) -> List[Plan]:
-    """Plans for a whole scenario grid (one distribution family per call).
+    """DEPRECATED shim: use ``repro.api.Planner.sweep([Scenario(...), ...])``.
 
     ``mc=False`` (default): each scenario's k-curve comes from the batched
-    analytic engine (``completion_curve``) -- the production planner's
-    many-scenario hot path.  ``mc=True``: the ENTIRE grid's curves are
-    estimated by ``simulator.completion_curves_grid_mc`` in one compiled
-    vmap-over-parameters call with common random numbers (Table-I-style
-    sweeps, one compile per family/scaling block).
+    analytic engine -- the production planner's many-scenario hot path.
+    ``mc=True``: the ENTIRE grid's curves are estimated in one compiled
+    vmap-over-parameters call with common random numbers.
     """
-    ks = divisors(n)
-    if mc:
-        from .simulator import completion_curves_grid_mc
-        curves = completion_curves_grid_mc(
-            dists, scaling, n, ks=ks, trials=trials, seed=seed, delta=delta)
-        curve_dicts = [{k: float(v) for k, v in zip(ks, row)} for row in curves]
-    else:
-        curve_dicts = [completion_curve(d, scaling, n, ks=ks, delta=delta)
-                       for d in dists]
-    return [_make_plan(dist, scaling, n, delta, curve)
-            for dist, curve in zip(dists, curve_dicts)]
+    _deprecated("core.planner.plan_grid()", "Planner.sweep(scenarios)")
+    from ..api import MeanCompletionTime, Planner, Scenario
+    scenarios = [Scenario(d, scaling, n, delta=delta) for d in dists]
+    return Planner(MeanCompletionTime(mc=mc, trials=trials,
+                                      seed=seed)).sweep(scenarios)
 
 
 def strategy_table(n: int = 12, mc: bool = False, trials: int = 20_000) -> dict:
@@ -189,8 +170,8 @@ def strategy_table(n: int = 12, mc: bool = False, trials: int = 20_000) -> dict:
     For each (PDF, scaling) we sweep the straggling knob from light to heavy
     and report the sequence of optimal strategies; arrows in the paper's
     table correspond to changes along each sweep.  Each sweep goes through
-    ``plan_grid``; with ``mc=True`` every (family, scaling) block is one
-    compiled Monte-Carlo call.
+    ``repro.api.Planner.sweep``; with ``mc=True`` every (family, scaling)
+    block is one compiled Monte-Carlo call.
     """
     sweeps = {
         ("shifted_exp", "server"): [ShiftedExp(1.0, w) for w in (0.1, 1.0, 5.0, 10.0)],
@@ -211,11 +192,13 @@ def strategy_table(n: int = 12, mc: bool = False, trials: int = 20_000) -> dict:
         "data": Scaling.DATA_DEPENDENT,
         "additive": Scaling.ADDITIVE,
     }
+    from ..api import MeanCompletionTime, Planner, Scenario
+    planner = Planner(MeanCompletionTime(mc=mc, trials=trials))
     table = {}
     for (fam, sc), dists in sweeps.items():
         delta = 5.0 if (fam in ("pareto", "bimodal") and sc == "data") else None
-        plans = plan_grid(dists, scalings[sc], n, delta=delta, mc=mc,
-                          trials=trials)
+        plans = planner.sweep(
+            [Scenario(d, scalings[sc], n, delta=delta) for d in dists])
         seq = [p.strategy for p in plans]
         # collapse consecutive repeats: "splitting -> coding -> splitting"
         collapsed = [seq[0]]

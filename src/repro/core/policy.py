@@ -1,0 +1,106 @@
+"""The canonical redundancy decision: ``Policy(n, k)``.
+
+The paper's single decision object is the redundancy level k for an
+[n, k] dispatch; every other quantity the layers speak is a lossless
+re-expression of it:
+
+  * code rate        r = k / n        (planner, figures)
+  * task size        s = n / k        (CUs per worker, Sec. II-D)
+  * replication/FR factor  c = n / k  (runtime.coded_step's ``c``; for the
+    fractional-repetition gradient code each of the k part groups is served
+    by c workers, so the "replication factor" and the task size coincide)
+
+Because k must divide n, ``c = n // k`` is exact and ``Policy.from_c``
+inverts it losslessly — this replaces the ad-hoc k<->c arithmetic that
+previously lived in ``runtime.straggler.plan_fr`` and
+``runtime.elastic.resize_plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from .batched import divisors
+
+__all__ = ["Policy"]
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Policy:
+    """An [n, k] redundancy decision (k divides n)."""
+
+    n: int
+    k: int
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        if not (1 <= self.k <= self.n):
+            raise ValueError(f"require 1 <= k <= n={self.n}, got k={self.k}")
+        if self.n % self.k:
+            raise ValueError(
+                f"k={self.k} must divide n={self.n} (integer task size)")
+
+    # -- lossless re-expressions -------------------------------------------
+    @property
+    def c(self) -> int:
+        """Replication / FR factor c = n/k (runtime.coded_step's knob)."""
+        return self.n // self.k
+
+    @property
+    def task_size(self) -> int:
+        """s = n/k CUs per worker (numerically equal to ``c``)."""
+        return self.n // self.k
+
+    @property
+    def code_rate(self) -> float:
+        """r = k/n (1 = splitting, 1/n = replication)."""
+        return self.k / self.n
+
+    @property
+    def num_groups(self) -> int:
+        """Part groups of the FR code (= k)."""
+        return self.k
+
+    @property
+    def strategy(self) -> str:
+        if self.k == 1:
+            return "replication"
+        if self.k == self.n:
+            return "splitting"
+        return "coding"
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_k(cls, n: int, k: int) -> "Policy":
+        return cls(n=n, k=k)
+
+    @classmethod
+    def from_c(cls, n: int, c: int) -> "Policy":
+        """Invert the runtime's replication factor: k = n/c (exact)."""
+        if c < 1 or n % c:
+            raise ValueError(f"c={c} must be a positive divisor of n={n}")
+        return cls(n=n, k=n // c)
+
+    @classmethod
+    def legal(cls, n: int) -> List["Policy"]:
+        """Every legal policy on n workers, ascending in k."""
+        return [cls(n=n, k=k) for k in divisors(n)]
+
+    @classmethod
+    def nearest_legal(cls, n: int, rate: float, axis: str = "code") -> "Policy":
+        """The legal policy whose rate is nearest ``rate``.
+
+        ``axis="code"`` matches on the code rate k/n; ``axis="replication"``
+        matches on the replication fraction c/n (what ``elastic.resize_plan``
+        preserves across a worker-count change).  Ties resolve to the
+        smaller k (resp. smaller c), matching the legacy inline argmins.
+        """
+        divs = divisors(n)
+        if axis == "code":
+            k = min(divs, key=lambda d: (abs(d / n - rate), d))
+            return cls(n=n, k=k)
+        if axis == "replication":
+            c = min(divs, key=lambda d: (abs(d / n - rate), d))
+            return cls.from_c(n, c)
+        raise ValueError(f"axis must be 'code' or 'replication', got {axis!r}")

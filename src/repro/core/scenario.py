@@ -1,0 +1,151 @@
+"""The typed problem statement: ``Scenario`` = (dist, scaling, n, delta,
+constraints).
+
+One frozen object carries everything the planner, the runtime, and the
+cluster simulator previously took as loose positional arguments — in
+particular the exogenous per-CU deterministic time ``delta`` that the
+paper introduces for Pareto/Bi-Modal under data-dependent scaling
+(Sec. V-B, VI-B).  ShiftedExp carries its own shift internally; a
+Scenario that tries to override it with a conflicting value is rejected
+at construction instead of silently diverging between layers.
+
+``task_survival`` is the single implementation of Pr{Y > t} for a task
+of s CUs under every (distribution x scaling) pair — shared by the
+quantile objective (repro.api) and the FR-coded runtime
+(runtime.straggler), which previously kept a private copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .batched import divisors
+from .distributions import BiModal, Scaling, ServiceTime, ShiftedExp
+from .policy import Policy
+
+__all__ = ["Scenario", "task_survival"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One (service PDF x scaling model x n) planning problem.
+
+    ``delta``          exogenous per-CU deterministic time (Pareto/Bi-Modal
+                       data-dependent paths; ShiftedExp carries its own and
+                       must not be contradicted here).
+    ``max_task_size``  caps s = n/k (lower-bounds k) — per-worker memory.
+    ``candidate_ks``   restricts the searched k values (divisors of n).
+    """
+
+    dist: ServiceTime
+    scaling: Scaling
+    n: int
+    delta: Optional[float] = None
+    max_task_size: Optional[int] = None
+    candidate_ks: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if int(self.n) < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        if not isinstance(self.scaling, Scaling):
+            raise TypeError(f"scaling must be a Scaling, got {self.scaling!r}")
+        if self.delta is not None:
+            if self.delta < 0:
+                raise ValueError(f"delta must be >= 0, got {self.delta}")
+            if isinstance(self.dist, ShiftedExp) and \
+                    float(self.delta) != self.dist.delta:
+                raise ValueError(
+                    "ShiftedExp carries its shift internally "
+                    f"(delta={self.dist.delta}); a Scenario delta of "
+                    f"{self.delta} would contradict it")
+        if self.candidate_ks is not None:
+            object.__setattr__(self, "candidate_ks",
+                               tuple(int(k) for k in self.candidate_ks))
+
+    # -- delta, resolved once ----------------------------------------------
+    @property
+    def effective_delta(self) -> float:
+        """The per-CU deterministic component, resolved with explicit
+        ``is None`` semantics (delta=0.0 means zero, not unset)."""
+        return self.dist.shift if self.delta is None else float(self.delta)
+
+    # -- the legal decision space -------------------------------------------
+    def legal_ks(self) -> List[int]:
+        """Legal k values after constraints (ascending)."""
+        ks = list(self.candidate_ks) if self.candidate_ks is not None \
+            else divisors(self.n)
+        if self.max_task_size is not None:
+            ks = [k for k in ks if self.n // k <= self.max_task_size]
+        if not ks:
+            raise ValueError("no legal k after constraints")
+        return ks
+
+    def legal_policies(self) -> List[Policy]:
+        return [Policy(n=self.n, k=k) for k in self.legal_ks()]
+
+    def task_survival(self, s: int, t: np.ndarray) -> np.ndarray:
+        """Pr{Y > t} for a task of ``s`` CUs under this scenario."""
+        return task_survival(self.dist, self.scaling, s, t, delta=self.delta)
+
+    def with_n(self, n: int) -> "Scenario":
+        """The same problem on a different worker count (constraints kept;
+        an explicit candidate_ks is dropped since the divisors change)."""
+        return dataclasses.replace(self, n=n, candidate_ks=None)
+
+
+# The additive-scaling building blocks depend only on (dist, s), and callers
+# like the quantile objective's bisection evaluate the survival at one t per
+# call: cache the expensive constructions (the s-fold Bi-Modal PMF
+# convolution; the 200k-draw sorted Pareto sample) so repeated evaluations
+# are array lookups.  Distributions are frozen dataclasses, hence hashable;
+# results are bit-identical to the uncached path (same seed, same ops).
+
+@functools.lru_cache(maxsize=256)
+def _bimodal_sum_pmf_cached(B: float, eps: float, s: int):
+    from . import order_stats as osl
+    return osl.bimodal_sum_pmf(s, B, eps)
+
+
+@functools.lru_cache(maxsize=64)
+def _additive_mc_sorted_sums(dist: ServiceTime, s: int) -> np.ndarray:
+    import jax
+    draws = np.asarray(dist.sample(jax.random.PRNGKey(12345),
+                                   (200_000, s))).sum(axis=-1)
+    draws.sort()
+    return draws
+
+
+def task_survival(dist: ServiceTime, scaling: Scaling, s: int, t: np.ndarray,
+                  delta: Optional[float] = None) -> np.ndarray:
+    """Pr{Y > t} for a task of s CUs under the scaling model (closed forms
+    where available, MC otherwise)."""
+    from . import order_stats as osl
+
+    t = np.asarray(t, dtype=np.float64)
+    d = dist.shift if delta is None else float(delta)
+    if scaling is Scaling.SERVER_DEPENDENT:
+        # Y = d + s * Z with Z = X - shift
+        if isinstance(dist, ShiftedExp):
+            z = np.maximum((t - d) / max(s, 1), 0.0)
+            return np.where(t < d, 1.0, np.exp(-z / max(dist.W, 1e-300)))
+        return dist.tail(np.maximum((t - d), 0.0) / s + dist.shift)
+    if scaling is Scaling.DATA_DEPENDENT:
+        if isinstance(dist, ShiftedExp):
+            z = np.maximum(t - s * d, 0.0)
+            return np.where(t < s * d, 1.0, np.exp(-z / max(dist.W, 1e-300)))
+        return dist.tail(t - s * d + dist.shift)
+    # additive
+    if isinstance(dist, ShiftedExp):
+        return osl.erlang_survival(t - s * dist.delta, s, dist.W) \
+            if dist.W > 0 else (t < s * dist.delta).astype(float)
+    if isinstance(dist, BiModal):
+        vals, probs = _bimodal_sum_pmf_cached(dist.B, dist.eps, s)
+        return np.array([probs[vals > x].sum() for x in np.atleast_1d(t)]
+                        ).reshape(t.shape)
+    # Pareto additive: MC empirical tail
+    draws = _additive_mc_sorted_sums(dist, s)
+    idx = np.searchsorted(draws, np.atleast_1d(t), side="right")
+    return (1.0 - idx / draws.size).reshape(t.shape)

@@ -30,8 +30,9 @@ from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
 from repro.data import DataConfig
 from repro.models import api
 from repro.optim import adamw
+from repro.api import Scenario
 from repro.runtime import (CodedStepConfig, CodedTrainer, StragglerSim,
-                           Telemetry, plan_fr)
+                           Telemetry, best_fr_policy)
 
 TINY = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
             vocab_size=512, ssm_state=16, ssm_head_dim=16, num_experts=0,
@@ -42,6 +43,12 @@ SMALL = dict(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
              d_ff=1024, vocab_size=2048, flash_block_kv=128,
              num_experts=0, attn_every=0, embedding_inputs=False,
              head_dim=None)
+
+
+def exo_delta(dist, delta):
+    """Exogenous per-CU delta for a Scenario: ShiftedExp carries its own
+    shift, so only Pareto/Bi-Modal take the override (Sec. V-B, VI-B)."""
+    return None if isinstance(dist, ShiftedExp) else delta
 
 
 def parse_dist(spec: str):
@@ -89,7 +96,10 @@ def main(argv=None):
     c = args.c
     if c == 0:
         if dist is not None:
-            c = plan_fr(dist, scaling, args.n_workers, delta=1.0)["c"]
+            policy, _ = best_fr_policy(
+                Scenario(dist, scaling, args.n_workers,
+                         delta=exo_delta(dist, 1.0)))
+            c = policy.c
         else:
             c = 1
     print(f"redundancy plan: n={args.n_workers} c={c} "
@@ -146,13 +156,14 @@ def main(argv=None):
         if dist is not None and (step + 1) % args.replan_every == 0 \
                 and telem.num_samples >= 32:
             fitted, family = telem.fit()
-            new = plan_fr(fitted, scaling, args.n_workers, delta=1.0)
-            if new["c"] != trainer.step_cfg.c:
-                print(f"re-plan @ {step+1}: fitted {family} -> c* = {new['c']}"
-                      f" (was {trainer.step_cfg.c})")
-                trainer.step_cfg = CodedStepConfig(
-                    n_workers=args.n_workers, c=new["c"],
-                    unique_batch=args.unique_batch)
+            new_policy, _ = best_fr_policy(
+                Scenario(fitted, scaling, args.n_workers,
+                         delta=exo_delta(fitted, 1.0)))
+            if new_policy.c != trainer.step_cfg.c:
+                print(f"re-plan @ {step+1}: fitted {family} -> "
+                      f"c* = {new_policy.c} (was {trainer.step_cfg.c})")
+                trainer.step_cfg = CodedStepConfig.from_policy(
+                    new_policy, unique_batch=args.unique_batch)
     if pending is not None:
         pending.result()
     dt = time.time() - t0

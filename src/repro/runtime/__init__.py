@@ -1,5 +1,6 @@
 from .coded_step import (CodedStepConfig, CodedTrainer, make_coded_train_step,
                          make_eval_step, make_train_step, weighted_loss_fn)  # noqa: F401
 from .elastic import failure_adjusted_model, resize_plan  # noqa: F401
-from .straggler import StragglerSim, fr_expected_completion, plan_fr  # noqa: F401
+from .straggler import (StragglerSim, best_fr_policy, fr_expected_completion,  # noqa: F401
+                        plan_fr)
 from .telemetry import Telemetry  # noqa: F401

@@ -27,6 +27,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.coding import FractionalRepetitionCode, gc_decode_weights
+from ..core.policy import Policy
 from ..data.pipeline import (DataConfig, coded_batch, decode_example_weights,
                              expand_worker_weights)
 from ..models import api
@@ -45,6 +46,16 @@ class CodedStepConfig:
     def __post_init__(self):
         if self.n_workers % self.c:
             raise ValueError("c must divide n_workers")
+
+    @classmethod
+    def from_policy(cls, policy: Policy, unique_batch: int) -> "CodedStepConfig":
+        """Build the runtime config from the planner's typed decision."""
+        return cls(n_workers=policy.n, c=policy.c, unique_batch=unique_batch)
+
+    @property
+    def policy(self) -> Policy:
+        """This config's redundancy decision as a ``Policy`` (k = n/c)."""
+        return Policy.from_c(self.n_workers, self.c)
 
     @property
     def code(self) -> FractionalRepetitionCode:
@@ -142,16 +153,35 @@ class CodedTrainer:
                  alive_fn: Optional[Callable[[int], np.ndarray]] = None,
                  jit: bool = True, donate: bool = True):
         self.model_cfg = model_cfg
-        self.data_cfg = dataclasses.replace(
-            data_cfg, global_batch=step_cfg.unique_batch)
-        self.step_cfg = step_cfg
+        self.data_cfg = data_cfg
         self.opt_cfg = opt_cfg
         self.alive_fn = alive_fn
-        step = make_coded_train_step(model_cfg, opt_cfg, step_cfg)
-        self.step_fn = jax.jit(
-            step, donate_argnums=(0, 1) if donate else ()) if jit else step
+        self._jit = jit
+        self._donate = donate
+        self.step_cfg = step_cfg          # property: builds the jitted step
         self.decode_failures = 0
         self.stragglers_dropped = 0
+
+    @property
+    def step_cfg(self) -> CodedStepConfig:
+        return self._step_cfg
+
+    @step_cfg.setter
+    def step_cfg(self, cfg: CodedStepConfig) -> None:
+        """Swap the redundancy plan (elastic resize / online re-plan).
+
+        ``per_worker_rows`` and the normalization scale are constants folded
+        into the compiled step, so a new config must rebuild ``step_fn`` and
+        re-size the data pipeline — assigning the field alone would keep
+        serving the stale compiled program.
+        """
+        self._step_cfg = cfg
+        self.data_cfg = dataclasses.replace(
+            self.data_cfg, global_batch=cfg.unique_batch)
+        step = make_coded_train_step(self.model_cfg, self.opt_cfg, cfg)
+        self.step_fn = jax.jit(
+            step, donate_argnums=(0, 1) if self._donate else ()) \
+            if self._jit else step
 
     def decode_coefficients(self, alive: np.ndarray) -> np.ndarray:
         """(n_workers,) decode coefficients a_i for this step's alive mask."""

@@ -12,14 +12,13 @@ redundancy (Sec. VI of the paper).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import numpy as np
-
 from ..core.distributions import BiModal, Scaling, ServiceTime
+from ..core.policy import Policy
+from ..core.scenario import Scenario
 from .coded_step import CodedStepConfig
-from .straggler import plan_fr
+from .straggler import best_fr_policy
 
 
 def resize_plan(old: CodedStepConfig, new_n: int,
@@ -29,23 +28,23 @@ def resize_plan(old: CodedStepConfig, new_n: int,
                 keep_unique_batch: bool = True) -> CodedStepConfig:
     """A coded-step config for ``new_n`` workers.
 
-    Re-plans c* for the fitted service model on the new n (falls back to
-    the old code rate rounded to a divisor).  The unique batch is kept so
-    the optimization trajectory is unchanged across resizes.
+    Re-plans the policy for the fitted service model on the new n (falls
+    back to the legal policy nearest the old replication fraction c/n).
+    The unique batch is kept so the optimization trajectory is unchanged
+    across resizes.
     """
     if dist is not None:
-        c = plan_fr(dist, scaling, new_n, delta=delta)["c"]
+        policy, _ = best_fr_policy(Scenario(dist, scaling, new_n, delta=delta))
     else:
-        target_rate = old.c / old.n_workers
-        divs = [d for d in range(1, new_n + 1) if new_n % d == 0]
-        c = min(divs, key=lambda d: abs(d / new_n - target_rate))
+        policy = Policy.nearest_legal(new_n, old.c / old.n_workers,
+                                      axis="replication")
     unique = old.unique_batch if keep_unique_batch else \
         old.unique_batch * new_n // old.n_workers
     # unique batch must split over the new group count
-    g = new_n // c
+    g = policy.num_groups
     if unique % g:
         unique = (unique // g + 1) * g
-    return CodedStepConfig(n_workers=new_n, c=c, unique_batch=unique)
+    return CodedStepConfig.from_policy(policy, unique_batch=unique)
 
 
 def failure_adjusted_model(eps_fail: float, base_eps: float = 0.05,

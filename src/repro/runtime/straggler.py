@@ -10,12 +10,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
+import warnings
+from typing import Callable, Optional, Tuple
 
 import jax
 import numpy as np
 
 from ..core.distributions import Scaling, ServiceTime
+from ..core.policy import Policy
+from ..core.scenario import Scenario, task_survival
 from ..core import order_stats as osl
 
 
@@ -63,49 +66,15 @@ def fr_completion_survival(dist: ServiceTime, scaling: Scaling, n: int,
         raise ValueError("c must divide n")
     g = n // c
 
-    def task_survival(t: np.ndarray) -> np.ndarray:
-        return _task_surv(dist, scaling, c, t, delta)
+    def task_surv(t: np.ndarray) -> np.ndarray:
+        # single shared implementation (core.scenario.task_survival)
+        return task_survival(dist, scaling, c, t, delta)
 
     def surv(t: np.ndarray) -> np.ndarray:
-        s = np.clip(task_survival(t), 0.0, 1.0)
+        s = np.clip(task_surv(t), 0.0, 1.0)
         return 1.0 - (1.0 - s**c) ** g
 
     return surv
-
-
-def _task_surv(dist: ServiceTime, scaling: Scaling, s: int, t: np.ndarray,
-               delta: Optional[float]) -> np.ndarray:
-    """Pr{Y > t} for a task of s CUs under the scaling model (closed forms
-    where available, MC otherwise)."""
-    t = np.asarray(t, dtype=np.float64)
-    d = dist.shift if delta is None else float(delta)
-    from ..core.distributions import BiModal, Pareto, ShiftedExp
-    if scaling is Scaling.SERVER_DEPENDENT:
-        # Y = d + s * Z with Z = X - shift
-        if isinstance(dist, ShiftedExp):
-            z = np.maximum((t - d) / max(s, 1), 0.0)
-            return np.where(t < d, 1.0, np.exp(-z / max(dist.W, 1e-300)))
-        return dist.tail(np.maximum((t - d), 0.0) / s + dist.shift)
-    if scaling is Scaling.DATA_DEPENDENT:
-        if isinstance(dist, ShiftedExp):
-            z = np.maximum(t - s * d, 0.0)
-            return np.where(t < s * d, 1.0, np.exp(-z / max(dist.W, 1e-300)))
-        return dist.tail(t - s * d + dist.shift)
-    # additive
-    if isinstance(dist, ShiftedExp):
-        return osl.erlang_survival(t - s * dist.delta, s, dist.W) \
-            if dist.W > 0 else (t < s * dist.delta).astype(float)
-    if isinstance(dist, BiModal):
-        from ..core.order_stats import bimodal_sum_pmf
-        vals, probs = bimodal_sum_pmf(s, dist.B, dist.eps)
-        return np.array([probs[vals > x].sum() for x in np.atleast_1d(t)]
-                        ).reshape(t.shape)
-    # Pareto additive: MC empirical tail
-    key = jax.random.PRNGKey(12345)
-    draws = np.asarray(dist.sample(key, (200_000, s))).sum(axis=-1)
-    draws.sort()
-    idx = np.searchsorted(draws, np.atleast_1d(t), side="right")
-    return (1.0 - idx / draws.size).reshape(t.shape)
 
 
 def fr_expected_completion(dist: ServiceTime, scaling: Scaling, n: int,
@@ -117,17 +86,41 @@ def fr_expected_completion(dist: ServiceTime, scaling: Scaling, n: int,
     return osl.expected_order_stat(surv, 1, 1, lower=0.0, scale=scale)
 
 
+def best_fr_policy(scenario: Scenario) -> Tuple[Policy, dict]:
+    """(best policy, c-curve) for the FR gradient code on a scenario.
+
+    Scores every legal policy with the FR-geometry objective through the
+    unified front door and arg-mins on the c axis (ties -> smaller c, the
+    legacy ``plan_fr`` convention).  ``max_c`` constraints are expressed as
+    ``Scenario.max_task_size`` (c IS the task size; ``Policy`` makes the
+    conversion lossless).
+    """
+    from ..api import FRCompletionTime, Planner
+    k_curve = Planner(FRCompletionTime()).curve(scenario)
+    c_curve = {Policy(scenario.n, k).c: v for k, v in k_curve.items()}
+    c_best = min(c_curve, key=lambda c: (c_curve[c], c))
+    return Policy.from_c(scenario.n, c_best), c_curve
+
+
 def plan_fr(dist: ServiceTime, scaling: Scaling, n: int,
             delta: Optional[float] = None,
             max_c: Optional[int] = None) -> dict:
-    """Best replication factor c* for the FR gradient code.
+    """DEPRECATED shim: use ``Planner.plan(scenario, FRCompletionTime())``
+    or ``best_fr_policy(scenario)`` (repro.api / runtime.straggler).
 
-    Returns {"c": c*, "expected_time": E, "curve": {c: E_c}} over divisors
-    of n (c=1 splitting ... c=n replication).
+    Returns {"c": c*, "expected_time": E, "curve": {c: E_c}, "policy": ...}
+    over divisors of n (c=1 splitting ... c=n replication).
+
+    Note the Scenario delta contract: ``delta`` is the exogenous per-CU
+    time for Pareto/Bi-Modal; a ShiftedExp carries its own shift, and a
+    contradictory override (accepted silently before) now raises.
     """
-    cs = [c for c in range(1, n + 1) if n % c == 0]
-    if max_c is not None:
-        cs = [c for c in cs if c <= max_c]
-    curve = {c: fr_expected_completion(dist, scaling, n, c, delta) for c in cs}
-    c_best = min(curve, key=lambda c: (curve[c], c))
-    return {"c": c_best, "expected_time": curve[c_best], "curve": curve}
+    warnings.warn(
+        "runtime.straggler.plan_fr() is deprecated; use "
+        "repro.api.Planner.plan(Scenario(...), FRCompletionTime()) or "
+        "runtime.straggler.best_fr_policy(Scenario(...)) instead",
+        DeprecationWarning, stacklevel=2)
+    scenario = Scenario(dist, scaling, n, delta=delta, max_task_size=max_c)
+    policy, curve = best_fr_policy(scenario)
+    return {"c": policy.c, "expected_time": curve[policy.c], "curve": curve,
+            "policy": policy}

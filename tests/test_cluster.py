@@ -64,3 +64,54 @@ def test_latency_nonnegative_and_fifo_consistent():
     res = simulate(ClusterConfig(4, 2, 0.1, num_jobs=300, seed=5), d,
                    Scaling.ADDITIVE)
     assert (res.latencies > 0).all()
+
+
+# --------------------------------------------------------------------------
+# Cancellation semantics: preempt on/off and cancel_overhead
+# --------------------------------------------------------------------------
+
+def test_preempt_false_remnants_run_to_completion():
+    """Without preemption, in-service remnants of a completed job keep the
+    server busy: wasted work shows up and latency can only get worse than
+    the preempting run on the same sample path."""
+    d = BiModal(10.0, 0.3)
+    base = dict(n_workers=8, k=1, arrival_rate=0.08, num_jobs=400, seed=6)
+    pre = simulate(ClusterConfig(**base, preempt=True), d, Scaling.ADDITIVE)
+    nop = simulate(ClusterConfig(**base, preempt=False), d, Scaling.ADDITIVE)
+    assert nop.wasted_frac > 0.0              # remnants counted as waste
+    assert nop.latencies.mean() > pre.latencies.mean()
+
+
+def test_preempt_flag_is_noop_for_splitting():
+    """k = n cancels nothing, so the preempt flag must not change the
+    sample path: both runs are event-for-event identical."""
+    d = ShiftedExp(1.0, 2.0)
+    base = dict(n_workers=8, k=8, arrival_rate=0.05, num_jobs=300, seed=7)
+    a = simulate(ClusterConfig(**base, preempt=True), d,
+                 Scaling.DATA_DEPENDENT)
+    b = simulate(ClusterConfig(**base, preempt=False), d,
+                 Scaling.DATA_DEPENDENT)
+    np.testing.assert_array_equal(a.latencies, b.latencies)
+    assert a.wasted_frac == b.wasted_frac == 0.0
+
+
+def test_cancel_overhead_inflates_latency_under_load():
+    """A nonzero purge cost keeps the preempted server busy past the
+    cancellation instant, so queued work waits longer."""
+    d = BiModal(10.0, 0.3)
+    base = dict(n_workers=8, k=1, arrival_rate=0.08, num_jobs=400, seed=8)
+    free = simulate(ClusterConfig(**base, cancel_overhead=0.0), d,
+                    Scaling.ADDITIVE)
+    costly = simulate(ClusterConfig(**base, cancel_overhead=2.0), d,
+                      Scaling.ADDITIVE)
+    assert costly.latencies.mean() > free.latencies.mean()
+    assert (costly.latencies >= 0).all()
+
+
+def test_cancel_overhead_zero_is_default_path():
+    d = Pareto(1.0, 2.5)
+    base = dict(n_workers=6, k=2, arrival_rate=0.05, num_jobs=300, seed=9)
+    a = simulate(ClusterConfig(**base), d, Scaling.SERVER_DEPENDENT)
+    b = simulate(ClusterConfig(**base, cancel_overhead=0.0), d,
+                 Scaling.SERVER_DEPENDENT)
+    np.testing.assert_array_equal(a.latencies, b.latencies)

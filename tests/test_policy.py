@@ -1,0 +1,130 @@
+"""Policy/Scenario invariants: lossless k<->c conversion, nearest-legal
+rounding, and the Scenario delta contract."""
+import dataclasses
+
+import pytest
+
+from repro.core.batched import divisors
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.policy import Policy
+from repro.core.scenario import Scenario
+
+
+# --------------------------------------------------------------------------
+# Policy: the k<->c round trip (property over every divisor, several n)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 6, 8, 12, 16, 30, 60, 256, 720])
+def test_policy_kc_round_trip_every_divisor(n):
+    for k in divisors(n):
+        p = Policy(n=n, k=k)
+        assert Policy.from_c(n, p.c) == p          # lossless both ways
+        assert Policy.from_k(n, p.k) == p
+        assert p.c * p.k == n                      # exact factorization
+        assert p.task_size == p.c                  # task size IS the FR factor
+        assert p.code_rate == k / n
+        assert p.num_groups == k
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        Policy(n=12, k=5)                          # k must divide n
+    with pytest.raises(ValueError):
+        Policy(n=12, k=0)
+    with pytest.raises(ValueError):
+        Policy(n=12, k=13)
+    with pytest.raises(ValueError):
+        Policy.from_c(12, 5)                       # c must divide n
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        Policy(n=12, k=4).k = 6
+
+
+def test_policy_strategy_labels():
+    assert Policy(12, 1).strategy == "replication"
+    assert Policy(12, 12).strategy == "splitting"
+    assert Policy(12, 4).strategy == "coding"
+
+
+def test_policy_legal_enumeration():
+    pols = Policy.legal(12)
+    assert [p.k for p in pols] == divisors(12)
+    assert all(p.n == 12 for p in pols)
+
+
+def test_nearest_legal_code_rate():
+    # rate 1/2 on n=12 -> k=6 exactly
+    assert Policy.nearest_legal(12, 0.5).k == 6
+    # ties resolve to the smaller k
+    assert Policy.nearest_legal(4, 0.375).k == 1  # |1/4-.375| == |2/4-.375|
+
+
+def test_nearest_legal_replication_matches_legacy_resize_math():
+    """axis='replication' reproduces the inline argmin resize_plan used to
+    carry: min over divisors d of |d/new_n - old_c/old_n|."""
+    for old_n, old_c, new_n in [(8, 2, 6), (8, 4, 12), (12, 3, 8), (6, 6, 4)]:
+        target = old_c / old_n
+        legacy = min(divisors(new_n), key=lambda d: abs(d / new_n - target))
+        assert Policy.nearest_legal(new_n, target, axis="replication").c \
+            == legacy
+
+
+def test_nearest_legal_bad_axis():
+    with pytest.raises(ValueError):
+        Policy.nearest_legal(12, 0.5, axis="nope")
+
+
+# --------------------------------------------------------------------------
+# Scenario: delta held once, constraints, legal support
+# --------------------------------------------------------------------------
+
+def test_scenario_effective_delta_is_none_semantics():
+    bi = BiModal(10.0, 0.3)
+    assert Scenario(bi, Scaling.DATA_DEPENDENT, 12).effective_delta == 0.0
+    assert Scenario(bi, Scaling.DATA_DEPENDENT, 12,
+                    delta=0.0).effective_delta == 0.0
+    assert Scenario(bi, Scaling.DATA_DEPENDENT, 12,
+                    delta=5.0).effective_delta == 5.0
+    # delta=0.0 is "zero", not "unset": the field survives as given
+    assert Scenario(bi, Scaling.DATA_DEPENDENT, 12, delta=0.0).delta == 0.0
+    assert Scenario(bi, Scaling.DATA_DEPENDENT, 12).delta is None
+
+
+def test_scenario_shifted_exp_carries_its_own_delta():
+    se = ShiftedExp(2.0, 1.0)
+    # matching value is allowed, conflicting value is rejected at source
+    assert Scenario(se, Scaling.DATA_DEPENDENT, 12,
+                    delta=2.0).effective_delta == 2.0
+    assert Scenario(se, Scaling.DATA_DEPENDENT, 12).effective_delta == 2.0
+    with pytest.raises(ValueError, match="carries its shift internally"):
+        Scenario(se, Scaling.DATA_DEPENDENT, 12, delta=5.0)
+
+
+def test_scenario_legal_ks_constraints():
+    sc = Scenario(Pareto(1.0, 2.0), Scaling.SERVER_DEPENDENT, 12)
+    assert sc.legal_ks() == divisors(12)
+    capped = Scenario(Pareto(1.0, 2.0), Scaling.SERVER_DEPENDENT, 12,
+                      max_task_size=3)
+    assert capped.legal_ks() == [4, 6, 12]         # s = n/k <= 3
+    picked = Scenario(Pareto(1.0, 2.0), Scaling.SERVER_DEPENDENT, 12,
+                      candidate_ks=(2, 6))
+    assert picked.legal_ks() == [2, 6]
+    with pytest.raises(ValueError, match="no legal k"):
+        Scenario(Pareto(1.0, 2.0), Scaling.SERVER_DEPENDENT, 12,
+                 candidate_ks=(1, 2), max_task_size=3).legal_ks()
+
+
+def test_scenario_legal_policies_and_with_n():
+    sc = Scenario(BiModal(10.0, 0.3), Scaling.SERVER_DEPENDENT, 12)
+    assert [p.k for p in sc.legal_policies()] == divisors(12)
+    moved = sc.with_n(8)
+    assert moved.n == 8 and moved.dist == sc.dist
+    assert [p.k for p in moved.legal_policies()] == divisors(8)
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        Scenario(BiModal(10.0, 0.3), Scaling.SERVER_DEPENDENT, 0)
+    with pytest.raises(ValueError):
+        Scenario(BiModal(10.0, 0.3), Scaling.DATA_DEPENDENT, 12, delta=-1.0)
+    with pytest.raises(TypeError):
+        Scenario(BiModal(10.0, 0.3), "server", 12)

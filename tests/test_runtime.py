@@ -119,6 +119,26 @@ def test_plan_fr_returns_legal_c():
     assert p["expected_time"] == min(p["curve"].values())
 
 
+def test_trainer_resize_mid_run_rebuilds_step():
+    """Assigning a new step_cfg must rebuild the compiled step: the decode
+    expansion's row counts are constants folded into the jitted program, so
+    the stale step would crash (or silently mis-weight) after a resize."""
+    data_cfg = DataConfig(vocab_size=257, seq_len=16, global_batch=8)
+    trainer = CodedTrainer(CFG, data_cfg,
+                           CodedStepConfig(n_workers=8, c=2, unique_batch=8),
+                           adamw.AdamWConfig(lr=1e-3), jit=False)
+    params = _params()
+    opt = adamw.init(trainer.opt_cfg, params)
+    params, opt, m0 = trainer.run_step(params, opt, 0)
+    new_cfg = resize_plan(trainer.step_cfg, 6, dist=BiModal(10.0, 0.3),
+                          scaling=Scaling.DATA_DEPENDENT, delta=1.0)
+    trainer.step_cfg = new_cfg
+    assert trainer.data_cfg.global_batch == new_cfg.unique_batch
+    params, opt, m1 = trainer.run_step(params, opt, 1)   # was a shape crash
+    assert np.isfinite(float(m1["loss"]))
+    assert trainer.step_cfg.policy == new_cfg.policy
+
+
 def test_elastic_resize_keeps_unique_batch():
     old = CodedStepConfig(n_workers=8, c=2, unique_batch=16)
     new = resize_plan(old, 6, dist=BiModal(10.0, 0.3),
