@@ -1,0 +1,134 @@
+"""Batched cluster engine vs the DES oracle: cells/sec on a k x load sweep.
+
+One "cell" is one (load, k) queueing simulation.  The oracle runs one
+Python discrete-event loop per cell; the batched engine runs the WHOLE
+surface — every legal k at every load, cancel-on-complete and preempt
+semantics included — as one compiled lax.scan-over-jobs with vmapped
+lanes.  This bench pins the acceptance gate (>= 20x cells/sec at n=120)
+in ``bench_results/BENCH_cluster.json``, plus a guard that the fast
+engine is not silently wrong (mean-latency parity on a mid-grid cell).
+
+The oracle is timed on a representative SUBSET of cells (spread across
+k and load) and extrapolated to cells/sec — timing all 96 oracle cells
+at n=120 would take minutes by construction, which is the point.
+
+    PYTHONPATH=src python -m benchmarks.cluster_sweep            # full gate
+    PYTHONPATH=src python -m benchmarks.cluster_sweep --smoke    # CI: tiny
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.distributions import Scaling, ShiftedExp
+from repro.core.scenario import Scenario
+from repro.runtime.cluster import ClusterConfig, simulate
+from repro.runtime.cluster_batched import sweep
+
+from .common import Check, emit_json
+
+DIST = ShiftedExp(1.0, 5.0)
+SCALING = Scaling.SERVER_DEPENDENT
+
+
+def _oracle_cell(n, k, lam, num_jobs, warmup):
+    cfg = ClusterConfig(n_workers=n, k=k, arrival_rate=lam,
+                        num_jobs=num_jobs, seed=1, warmup=warmup)
+    return simulate(cfg, DIST, SCALING, backend="oracle")
+
+
+def run(n: int = 120, num_jobs: int = 600, smoke: bool = False,
+        **_) -> bool:
+    if smoke:
+        n, num_jobs = 12, 120
+    check = Check("cluster_sweep")
+    scenario = Scenario(DIST, SCALING, n)
+    ks = scenario.legal_ks()
+    # keep k=1 (n-fold work inflation) at/below saturation so latencies
+    # stay numerically tame; higher-k lanes are then lightly loaded
+    lam_max = 1.0 / (DIST.mean() * n)
+    loads = [lam_max * f for f in (0.2, 0.35, 0.5, 0.65, 0.8, 0.95)]
+    if smoke:
+        loads = loads[:2]
+    warmup = num_jobs // 10
+    cells = len(ks) * len(loads)
+
+    # -- batched: whole surface, one compiled call -------------------------
+    t0 = time.perf_counter()
+    sw = sweep(scenario, loads=loads, num_jobs=num_jobs, seed=1,
+               warmup=warmup)
+    compile_s = time.perf_counter() - t0
+    times = []
+    for s in (2, 3):
+        t0 = time.perf_counter()
+        sw = sweep(scenario, loads=loads, num_jobs=num_jobs, seed=s,
+                   warmup=warmup)
+        times.append(time.perf_counter() - t0)
+    batched_s = min(times)
+    batched_cps = cells / batched_s
+    check.expect("batched sweep covers every (load, k) cell",
+                 sw.mean.shape == (len(loads), len(ks)),
+                 f"{sw.mean.shape}")
+    kstars = sw.kstar()
+    check.expect("k* map well-formed (legal k at every load)",
+                 set(kstars) == set(float(v) for v in loads)
+                 and all(n % v == 0 for v in kstars.values()),
+                 f"{sorted(kstars.values())}")
+
+    # -- oracle: representative subset, extrapolated to cells/sec ----------
+    sub_ks = sorted({ks[0], ks[len(ks) // 2], ks[-1]})
+    sub_loads = [loads[0], loads[-1]]
+    t0 = time.perf_counter()
+    for k in sub_ks:
+        for lam in sub_loads:
+            _oracle_cell(n, k, lam, num_jobs, warmup)
+    oracle_s = time.perf_counter() - t0
+    oracle_cells = len(sub_ks) * len(sub_loads)
+    oracle_cps = oracle_cells / oracle_s
+    speedup = batched_cps / oracle_cps
+
+    # -- guard: the fast engine agrees with the oracle on a mid cell -------
+    k_mid, lam_mid = ks[len(ks) // 2], loads[2 if not smoke else 0]
+    idx_k, idx_l = ks.index(k_mid), loads.index(lam_mid)
+    om = _oracle_cell(n, k_mid, lam_mid, num_jobs, warmup).summary()["mean"]
+    bm = sw.summary(idx_l, idx_k)["mean"]
+    check.expect("mid-cell mean-latency parity (batched within 15%)",
+                 abs(bm - om) / om < 0.15, f"{bm:.3f} vs {om:.3f}")
+
+    gate = 1.0 if smoke else 20.0
+    check.expect(f"batched >= {gate:.0f}x oracle cells/sec",
+                 speedup >= gate,
+                 f"{speedup:.1f}x ({batched_cps:.1f} vs {oracle_cps:.2f} "
+                 f"cells/s)")
+
+    # smoke runs must not clobber the committed full-gate artifact
+    emit_json("BENCH_cluster_smoke" if smoke else "BENCH_cluster", dict(
+        n=n, num_jobs=num_jobs, warmup=warmup, smoke=smoke,
+        ks=ks, loads=loads, cells=cells,
+        batched_seconds=round(batched_s, 4),
+        batched_compile_seconds=round(compile_s, 3),
+        batched_cells_per_sec=round(batched_cps, 2),
+        oracle_cells_timed=oracle_cells,
+        oracle_seconds=round(oracle_s, 3),
+        oracle_cells_per_sec=round(oracle_cps, 4),
+        oracle_note="subset of cells spread over (k, load), extrapolated",
+        speedup=round(speedup, 1),
+        kstar={str(k): v for k, v in kstars.items()},
+    ))
+    return check.summary()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep: compile + run + sanity only (CI)")
+    ap.add_argument("--n", type=int, default=120)
+    ap.add_argument("--num-jobs", type=int, default=600)
+    args = ap.parse_args(argv)
+    return 0 if run(n=args.n, num_jobs=args.num_jobs,
+                    smoke=args.smoke) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,13 +17,17 @@ arrival_rate)`` tuples.  This module fixes the vocabulary:
                     engine (core.batched via core.expectations);
                     ``QuantileCompletionTime(p)`` inverts the order-statistic
                     CDF for tail-aware planning; ``LoadAwareLatency``
-                    delegates to the event-driven queueing simulator
-                    (runtime.cluster) — the first time the cluster simulator
-                    is reachable from the planner; ``FRCompletionTime``
-                    scores the achievable fractional-repetition geometry the
-                    coded training step actually runs.
+                    runs the queueing simulation — by default on the
+                    batched lane engine (runtime.cluster_batched, one
+                    compiled call per curve or per whole load surface),
+                    with ``backend="oracle"`` as the discrete-event escape
+                    hatch; ``FRCompletionTime`` scores the achievable
+                    fractional-repetition geometry the coded training step
+                    actually runs.
   * ``Planner``   — the facade: ``plan(scenario)``, ``curve(scenario)``,
-                    and batched ``sweep(scenarios)``.
+                    batched ``sweep(scenarios)``, and
+                    ``kstar_vs_load(scenario, loads)`` — the whole
+                    load-aware k* map in one compiled call.
 
 The legacy free functions (``core.planner.plan``/``plan_grid``,
 ``runtime.straggler.plan_fr``) survive as thin DeprecationWarning shims
@@ -47,12 +51,16 @@ from .core.batched import binom_lt_curves
 from .core.expectations import completion_curve
 from .core.planner import Plan, theorem_kstar
 from .core.policy import Policy
-from .core.scenario import Scenario, task_survival
+from .core.scenario import (ArrivalProcess, DeterministicArrivals,
+                            MMPPArrivals, PoissonArrivals, Scenario,
+                            task_survival)
 
 __all__ = [
     "Scenario", "Policy", "Plan", "Objective",
     "MeanCompletionTime", "QuantileCompletionTime", "LoadAwareLatency",
     "FRCompletionTime", "Planner",
+    "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
+    "MMPPArrivals",
 ]
 
 
@@ -157,14 +165,22 @@ class QuantileCompletionTime:
 
 @dataclasses.dataclass(frozen=True)
 class LoadAwareLatency:
-    """Job latency under ARRIVALS, by the event-driven cluster simulator.
+    """Job latency under ARRIVALS, by the cluster/queueing simulator.
 
     The paper scores a single job in isolation; under load, redundancy also
     inflates server occupancy, shifting k* (Joshi-Soljanin-Wornell; the
-    "Straggler Mitigation at Scale" regimes).  This objective runs
-    ``runtime.cluster.simulate`` for every candidate k — the queueing
-    simulator reached through the same front door as the closed forms.
-    ``metric`` is one of "mean", "p50", "p95", "p99".
+    "Straggler Mitigation at Scale" regimes).  ``backend="batched"``
+    (default) runs the whole candidate-k curve as ONE compiled lane grid
+    on ``runtime.cluster_batched`` — honoring the scenario's arrival
+    process and heterogeneous worker speeds — while ``backend="oracle"``
+    is the escape hatch onto the reference discrete-event loop (one run
+    per k; Poisson-or-``scenario.arrivals`` arrivals, same semantics).
+    ``metric`` is one of "mean", "p50", "p95", "p99".  ``warmup=None``
+    discards min(num_jobs // 10, 200) transient jobs from the latency
+    stats (the empty-system start otherwise biases tail quantiles);
+    ``reps`` averages that many replications on either backend — common-
+    random-number lanes in the same compiled call (batched) or repeated
+    cells on shifted seeds (oracle), pooled the same way.
     """
 
     arrival_rate: float = 0.05
@@ -173,25 +189,35 @@ class LoadAwareLatency:
     preempt: bool = True
     cancel_overhead: float = 0.0
     seed: int = 0
+    backend: str = "batched"
+    warmup: Optional[int] = None
+    reps: int = 1
     name: str = "load_aware_latency"
 
     def __post_init__(self):
         if self.metric not in ("mean", "p50", "p95", "p99"):
             raise ValueError(f"unknown metric {self.metric!r}")
+        if self.backend not in ("batched", "oracle"):
+            raise ValueError(f"unknown backend {self.backend!r}")
 
     def curve(self, scenario: Scenario, ks: Sequence[int]) -> Dict[int, float]:
-        from .runtime.cluster import ClusterConfig, simulate
-        out: Dict[int, float] = {}
-        for k in ks:
-            cfg = ClusterConfig(
-                n_workers=scenario.n, k=int(k),
-                arrival_rate=self.arrival_rate, num_jobs=self.num_jobs,
-                preempt=self.preempt, cancel_overhead=self.cancel_overhead,
-                seed=self.seed)
-            res = simulate(cfg, scenario.dist, scenario.scaling,
-                           delta=scenario.delta)
-            out[int(k)] = res.summary()[self.metric]
-        return out
+        return self.surface(scenario, [self.arrival_rate],
+                            ks).curve(0, self.metric)
+
+    def surface(self, scenario: Scenario, loads: Sequence[float],
+                ks: Optional[Sequence[int]] = None):
+        """The full (loads x ks) ``ClusterSweep`` — one compiled call on
+        the batched backend, cell-by-cell discrete-event runs on the
+        oracle backend (same result type, same warmup/reps aggregation,
+        so the escape hatch really cross-checks the fast engine)."""
+        from .runtime.cluster import resolve_sweep_backend
+        run = resolve_sweep_backend(self.backend)
+        return run(scenario, loads=list(loads),
+                   ks=list(ks) if ks is not None else None,
+                   num_jobs=self.num_jobs, reps=self.reps,
+                   preempt=self.preempt,
+                   cancel_overhead=self.cancel_overhead,
+                   seed=self.seed, warmup=self.warmup)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +267,23 @@ class Planner:
              objective: Optional[Objective] = None) -> Plan:
         """The arg-min policy, with the paper's theorem annotation."""
         return self._finalize(scenario, self.curve(scenario, objective))
+
+    def kstar_vs_load(self, scenario: Scenario, loads: Sequence[float],
+                      objective: Optional["LoadAwareLatency"] = None
+                      ) -> Dict[float, int]:
+        """load -> k* for a whole load sweep — the beyond-paper surface.
+
+        Every (load, k) queueing cell — each legal k at each mean arrival
+        rate, with the scenario's arrival process, worker speeds, and the
+        objective's cancel/preempt semantics — runs in ONE compiled call
+        on the batched cluster engine; an ``objective`` with
+        ``backend="oracle"`` falls back to per-cell discrete-event runs.
+        """
+        obj = objective if objective is not None else (
+            self.objective if isinstance(self.objective, LoadAwareLatency)
+            else LoadAwareLatency())
+        return obj.surface(scenario, loads,
+                           scenario.legal_ks()).kstar(obj.metric)
 
     def sweep(self, scenarios: Sequence[Scenario],
               objective: Optional[Objective] = None) -> List[Plan]:

@@ -8,7 +8,15 @@ from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp, fi
 from .expectations import completion_curve, expected_completion_time
 from .planner import Plan, Strategy, divisors, plan, plan_grid, strategy_table, theorem_kstar
 from .policy import Policy
-from .scenario import Scenario, task_survival
+from .scenario import (
+    ArrivalProcess,
+    DeterministicArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    Scenario,
+    sample_task_matrix,
+    task_survival,
+)
 from .coding import (
     FractionalRepetitionCode,
     decode_blocks,
@@ -35,6 +43,8 @@ __all__ = [
     "completion_curve", "expected_completion_time",
     "Plan", "Strategy", "divisors", "plan", "plan_grid", "strategy_table",
     "theorem_kstar", "Policy", "Scenario", "task_survival",
+    "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
+    "MMPPArrivals", "sample_task_matrix",
     "FractionalRepetitionCode", "decode_blocks", "decode_matrix", "encode_blocks",
     "fractional_repetition_code", "gc_decode_weights", "mds_generator",
     "task_size_gradient", "task_size_linear",

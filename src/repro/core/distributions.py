@@ -215,10 +215,18 @@ def fit_service_time(samples: np.ndarray, family: str) -> ServiceTime:
         alpha = float(x.size / max(logs.sum(), 1e-12))
         return Pareto(lam=lam, alpha=alpha)
     if family == "bimodal":
-        lo = float(np.median(x))
-        stragglers = x > 2.0 * lo
+        # Estimate the LOW MODE (median splits the modes for eps < 1/2;
+        # the low-cluster mean is robust to per-sample jitter), then
+        # normalize the samples by it BEFORE fitting, so telemetry from a
+        # cluster whose fast mode is m time units maps onto the paper's
+        # unit-mode BiModal convention: the fit is invariant to the
+        # telemetry time scale (fit(c*x) == fit(x) for any c > 0).
+        med = float(np.median(x))
+        low = x[x <= 2.0 * med]
+        lo = float(low.mean()) if low.size else med
+        z = x / max(lo, 1e-12)
+        stragglers = z > 2.0
         eps = float(stragglers.mean())
-        b = float(x[stragglers].mean() / lo) if stragglers.any() else 1.0
-        # Normalize to the paper's unit-mode convention.
+        b = float(z[stragglers].mean()) if stragglers.any() else 1.0
         return BiModal(B=max(b, 1.0), eps=eps)
     raise ValueError(f"unknown family {family!r}")

@@ -13,20 +13,162 @@ at construction instead of silently diverging between layers.
 of s CUs under every (distribution x scaling) pair — shared by the
 quantile objective (repro.api) and the FR-coded runtime
 (runtime.straggler), which previously kept a private copy.
+
+This module is also the shared SAMPLING substrate of the two cluster
+backends (runtime.cluster_oracle, runtime.cluster_batched):
+
+  * ``ArrivalProcess`` and its concrete families (``PoissonArrivals``,
+    ``DeterministicArrivals``, ``MMPPArrivals``) are frozen, hashable
+    dataclasses whose ``times(key, num_jobs, rate)`` is JAX-traceable —
+    the batched engine vmaps it over a load axis with one common key,
+    the oracle materializes it once with numpy.
+  * ``sample_task_matrix`` draws the (num_jobs, n) per-job/per-worker
+    task-time matrix, applying per-worker speed factors — heterogeneous
+    machines — multiplicatively.  Both backends consume the same matrix
+    for a given key, which is what makes exact sample-path parity tests
+    possible.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .batched import divisors
 from .distributions import BiModal, Scaling, ServiceTime, ShiftedExp
 from .policy import Policy
 
-__all__ = ["Scenario", "task_survival"]
+__all__ = [
+    "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
+    "MMPPArrivals", "Scenario", "sample_task_matrix", "task_survival",
+    "validate_worker_speeds",
+]
+
+
+# --------------------------------------------------------------------------
+# Arrival processes (pluggable; JAX-traceable for the batched engine)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """A stationary arrival process with mean rate ``rate`` (jobs/time).
+
+    Subclasses implement ``times``; ``rate`` may be overridden per call
+    with a (possibly traced) scalar so one process object describes the
+    SHAPE of the workload while a load sweep scales its intensity — the
+    batched engine vmaps ``times`` over the load axis under one key.
+    """
+
+    rate: float
+
+    def __post_init__(self):
+        if self.rate <= 0:
+            raise ValueError(f"rate must be > 0, got {self.rate}")
+
+    def times(self, key: jax.Array, num_jobs: int, rate=None) -> jax.Array:
+        """Arrival instants of the first ``num_jobs`` jobs (ascending)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Memoryless arrivals: i.i.d. Exp(1/rate) gaps (the paper refs' M/·)."""
+
+    def times(self, key, num_jobs, rate=None):
+        r = self.rate if rate is None else rate
+        return jnp.cumsum(jax.random.exponential(key, (num_jobs,)) / r)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicArrivals(ArrivalProcess):
+    """Clockwork arrivals: constant gap 1/rate (D/·; zero arrival CV)."""
+
+    def times(self, key, num_jobs, rate=None):
+        r = self.rate if rate is None else rate
+        return jnp.arange(1, num_jobs + 1, dtype=jnp.float32) / r
+
+    # CRN note: deterministic arrivals ignore the key by construction, so
+    # replication lanes share the identical arrival path.
+
+
+@dataclasses.dataclass(frozen=True)
+class MMPPArrivals(ArrivalProcess):
+    """Two-state Markov-modulated Poisson bursts (per-arrival modulation).
+
+    The modulating chain is sampled AT arrivals: after each arrival the
+    state flips with probability ``switch``; gaps are Exp with per-state
+    rates ``rate * slow`` / ``rate * burst``, normalized so the long-run
+    mean rate equals ``rate`` regardless of (slow, burst, switch).  Low
+    ``switch`` means long dwell times — trains of fast arrivals separated
+    by lulls — the straggler-at-scale burst regime the oracle could never
+    sweep at scale.
+    """
+
+    slow: float = 0.25
+    burst: float = 4.0
+    switch: float = 0.05
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.slow <= 0 or self.burst <= 0:
+            raise ValueError("slow and burst multipliers must be > 0")
+        if not (0.0 < self.switch < 1.0):
+            raise ValueError(f"switch must be in (0,1), got {self.switch}")
+
+    def times(self, key, num_jobs, rate=None):
+        r = self.rate if rate is None else rate
+        ke, ks = jax.random.split(key)
+        e = jax.random.exponential(ke, (num_jobs,))
+        flips = jax.random.bernoulli(ks, self.switch, (num_jobs,))
+        state = jnp.cumsum(flips.astype(jnp.int32)) % 2      # start slow
+        # normalize: stationary per-arrival state is 1/2-1/2 (symmetric
+        # flips), so E[gap] = c/2 * (1/slow + 1/burst) / r == 1/r
+        c = 0.5 * (1.0 / self.slow + 1.0 / self.burst)
+        rates = r * c * jnp.where(state == 0, self.slow, self.burst)
+        return jnp.cumsum(e / rates)
+
+
+def validate_worker_speeds(speeds, n: int) -> Tuple[float, ...]:
+    """Coerce/validate per-worker speed factors (length n, positive) — the
+    single contract shared by ``Scenario`` and ``runtime.ClusterConfig``."""
+    out = tuple(float(v) for v in speeds)
+    if len(out) != n:
+        raise ValueError(
+            f"worker_speeds must have length n={n}, got {len(out)}")
+    if any(v <= 0 for v in out):
+        raise ValueError("worker_speeds must be positive")
+    return out
+
+
+# --------------------------------------------------------------------------
+# The shared task-time sampling substrate of both cluster backends
+# --------------------------------------------------------------------------
+
+def sample_task_matrix(
+    dist: ServiceTime,
+    scaling: Scaling,
+    n: int,
+    s: int,
+    num_jobs: int,
+    key: jax.Array,
+    delta: Optional[float] = None,
+    worker_speeds: Optional[Sequence[float]] = None,
+) -> jax.Array:
+    """(num_jobs, n) task service times for tasks of ``s`` CUs.
+
+    ``worker_speeds`` (length n, positive) are multiplicative slowdown
+    factors — worker w serves every task ``speeds[w]`` times its sampled
+    duration (heterogeneous machines).  JAX-traceable; both cluster
+    backends draw from here so a shared key yields the same sample path.
+    """
+    t = dist.sample_task(key, (num_jobs, n), s, scaling, delta=delta)
+    if worker_speeds is not None:
+        t = t * jnp.asarray(worker_speeds, dtype=t.dtype)[None, :]
+    return t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +180,12 @@ class Scenario:
                        must not be contradicted here).
     ``max_task_size``  caps s = n/k (lower-bounds k) — per-worker memory.
     ``candidate_ks``   restricts the searched k values (divisors of n).
+    ``worker_speeds``  length-n positive multiplicative slowdowns — worker w
+                       serves tasks ``speeds[w]`` x slower (heterogeneous
+                       cluster); None means a homogeneous fleet.
+    ``arrivals``       the arrival-process SHAPE for load-aware objectives
+                       (Poisson / deterministic / MMPP bursts); its rate is
+                       rescaled by the load sweep.  None means Poisson.
     """
 
     dist: ServiceTime
@@ -46,6 +194,8 @@ class Scenario:
     delta: Optional[float] = None
     max_task_size: Optional[int] = None
     candidate_ks: Optional[Tuple[int, ...]] = None
+    worker_speeds: Optional[Tuple[float, ...]] = None
+    arrivals: Optional[ArrivalProcess] = None
 
     def __post_init__(self):
         if int(self.n) < 1:
@@ -64,6 +214,14 @@ class Scenario:
         if self.candidate_ks is not None:
             object.__setattr__(self, "candidate_ks",
                                tuple(int(k) for k in self.candidate_ks))
+        if self.worker_speeds is not None:
+            object.__setattr__(
+                self, "worker_speeds",
+                validate_worker_speeds(self.worker_speeds, self.n))
+        if self.arrivals is not None and \
+                not isinstance(self.arrivals, ArrivalProcess):
+            raise TypeError(
+                f"arrivals must be an ArrivalProcess, got {self.arrivals!r}")
 
     # -- delta, resolved once ----------------------------------------------
     @property

@@ -1,3 +1,5 @@
+from .cluster import (ClusterConfig, ClusterResult, latency_vs_redundancy,  # noqa: F401
+                      optimal_k_vs_load, simulate)
 from .coded_step import (CodedStepConfig, CodedTrainer, make_coded_train_step,
                          make_eval_step, make_train_step, weighted_loss_fn)  # noqa: F401
 from .elastic import failure_adjusted_model, resize_plan  # noqa: F401

@@ -1,51 +1,79 @@
-"""Event-driven master/worker cluster simulator (Fig. 1 as a discrete-event
-system), extending the paper from single-job analysis to the QUEUEING
-regime its references study (Joshi-Soljanin-Wornell [18], Gardner et al.).
+"""Cluster/queueing simulation: shared types + the two-backend front door.
 
 The paper computes E[Y_{k:n}] for one job in isolation.  In a real cluster
 jobs ARRIVE; redundancy then has a second cost besides lost parallelism:
 it inflates server occupancy, so the optimal redundancy level shifts with
-LOAD.  This simulator measures that shift end to end:
+LOAD (Joshi-Soljanin-Wornell [18]; Aktas-Soljanin "Straggler Mitigation at
+Scale").  Two backends measure that shift end to end:
 
-  * n workers, each an exclusive server with its own FCFS queue;
-  * jobs arrive (Poisson by default), each of size n CUs;
-  * the master pre-processes each job with an [n, k] strategy (splitting /
-    coding / replication): n tasks of s = n/k CUs, one per worker;
-  * a job completes when any k of its n tasks finish; its remaining tasks
-    are CANCELLED (purged from queues; in-service remnants run to
-    completion unless ``preempt`` -- the paper's any-k barrier plus the
-    cancel-on-complete of redundancy systems);
-  * task service times are drawn from the paper's CU models + scaling.
+  * ``runtime.cluster_oracle`` — the reference discrete-event simulator:
+    a Python heapq event loop, one (scenario, load, k) cell at a time.
+    Trusted, slow, and the ground truth the batched engine is validated
+    against.
+  * ``runtime.cluster_batched`` — the production engine: the exact same
+    dynamics as a fixed-step ``lax.scan`` over jobs, vmapped over
+    (replications x loads x k) lanes with common random numbers, so a
+    whole ``optimal_k_vs_load`` surface runs in ONE compiled call.
 
-Outputs per run: mean/percentile job latency, worker utilization, mean
-wasted work (executed-but-cancelled CU time) -- the quantities that decide
-k* under load.
+System model (Fig. 1 as a queueing system): n workers, each an exclusive
+FCFS server; jobs arrive (Poisson by default, or any
+``core.scenario.ArrivalProcess``), each of size n CUs; the master
+pre-processes each job with an [n, k] strategy into n tasks of s = n/k
+CUs, one per worker; a job completes when any k tasks finish; remnants
+are cancelled (queue purge; in-service remnants preempted when
+``preempt``, each preemption paying ``cancel_overhead`` of busy-but-
+wasted server time).
+
+This module holds the shared config/result types and the dispatching
+entry points (``simulate``, ``latency_vs_redundancy``,
+``optimal_k_vs_load``); the backends import the types from here.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.distributions import Scaling, ServiceTime
+from ..core.scenario import ArrivalProcess, Scenario, validate_worker_speeds
+
+__all__ = [
+    "ClusterConfig", "ClusterResult", "JobStats", "default_warmup",
+    "resolve_sweep_backend", "simulate", "latency_vs_redundancy",
+    "optimal_k_vs_load",
+]
+
+
+def default_warmup(num_jobs: int) -> int:
+    """The shared ``warmup=None`` resolution of every sweep surface —
+    min(num_jobs // 10, 200) transient jobs discarded — so the two
+    backends always summarize the same job window."""
+    return min(num_jobs // 10, 200)
 
 
 @dataclasses.dataclass
 class ClusterConfig:
     n_workers: int
     k: int                        # diversity/parallelism knob (divides n)
-    arrival_rate: float           # jobs / unit time (Poisson)
+    arrival_rate: float           # jobs / unit time (mean rate)
     num_jobs: int = 2000
     preempt: bool = True          # cancel in-service remnant tasks
-    cancel_overhead: float = 0.0  # time to purge a cancelled task
+    cancel_overhead: float = 0.0  # busy-but-wasted time to purge a task
     seed: int = 0
+    warmup: int = 0               # jobs excluded from latency quantiles
+    arrivals: Optional[ArrivalProcess] = None   # None -> Poisson
+    worker_speeds: Optional[Tuple[float, ...]] = None  # heterogeneous fleet
 
     def __post_init__(self):
         if self.n_workers % self.k:
             raise ValueError("k must divide n")
+        if not (0 <= self.warmup < self.num_jobs):
+            raise ValueError(
+                f"warmup must be in [0, num_jobs), got {self.warmup}")
+        if self.worker_speeds is not None:
+            self.worker_speeds = validate_worker_speeds(self.worker_speeds,
+                                                        self.n_workers)
 
 
 @dataclasses.dataclass
@@ -61,162 +89,123 @@ class JobStats:
 
 @dataclasses.dataclass
 class ClusterResult:
-    latencies: np.ndarray
+    latencies: np.ndarray         # per-job, in arrival order (ALL jobs)
     utilization: float
     wasted_frac: float            # cancelled-work time / total busy time
     throughput: float
+    warmup: int = 0               # first W jobs excluded from quantiles
+
+    @property
+    def steady_latencies(self) -> np.ndarray:
+        """Latencies with the warm-up transient discarded: the first
+        ``warmup`` jobs see an emptier-than-steady-state system, so
+        including them biases quantiles (especially p99) optimistic."""
+        return self.latencies[self.warmup:]
 
     def summary(self) -> dict:
+        lat = self.steady_latencies
         q = np.quantile
         return dict(
-            mean=float(self.latencies.mean()),
-            p50=float(q(self.latencies, 0.50)),
-            p95=float(q(self.latencies, 0.95)),
-            p99=float(q(self.latencies, 0.99)),
+            mean=float(lat.mean()),
+            p50=float(q(lat, 0.50)),
+            p95=float(q(lat, 0.95)),
+            p99=float(q(lat, 0.99)),
             utilization=self.utilization,
             wasted_frac=self.wasted_frac,
             throughput=self.throughput,
         )
 
 
-class _Worker:
-    """One exclusive server: FCFS queue of (job_id, service_time)."""
+def _resolve_backend(backend: str):
+    if backend == "oracle":
+        from .cluster_oracle import simulate_oracle
+        return simulate_oracle
+    if backend == "batched":
+        from .cluster_batched import simulate_one
+        return simulate_one
+    raise ValueError(f"backend must be 'oracle' or 'batched', got {backend!r}")
 
-    __slots__ = ("queue", "busy_until", "current", "busy_time",
-                 "wasted_time")
 
-    def __init__(self):
-        self.queue: List[Tuple[int, float]] = []
-        self.busy_until = 0.0
-        self.current: Optional[Tuple[int, float, float]] = None  # job,t0,svc
-        self.busy_time = 0.0
-        self.wasted_time = 0.0
+def resolve_sweep_backend(backend: str):
+    """The (loads x ks) surface runner for a backend name — the single
+    dispatch shared by the module-level sweep entry points and
+    ``api.LoadAwareLatency.surface``."""
+    if backend == "oracle":
+        from .cluster_oracle import sweep_oracle
+        return sweep_oracle
+    if backend == "batched":
+        from .cluster_batched import sweep
+        return sweep
+    raise ValueError(f"backend must be 'oracle' or 'batched', got {backend!r}")
 
 
 def simulate(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
-             delta: Optional[float] = None) -> ClusterResult:
-    """Run the discrete-event simulation; returns latency/utilization stats.
+             delta: Optional[float] = None, backend: str = "oracle",
+             service_times: Optional[np.ndarray] = None,
+             arrival_times: Optional[np.ndarray] = None) -> ClusterResult:
+    """Run one (scenario, load, k) cell; returns latency/utilization stats.
 
-    Implementation: a single event heap of task completions + arrivals.
-    Each worker processes its queue in order; cancellation removes queued
-    tasks of completed jobs and (if ``preempt``) truncates the in-service
-    remnant at the cancellation instant.
+    ``backend="oracle"`` (default, bit-stable with the historical
+    simulator) runs the Python discrete-event loop;
+    ``backend="batched"`` runs the identical dynamics through the JAX
+    lane engine — same sample path for the same config, since both draw
+    from ``core.scenario.sample_task_matrix`` under the same key.
+    ``service_times`` (num_jobs, n) / ``arrival_times`` (num_jobs,)
+    override the sampling entirely (parity tests inject both).
     """
-    rng = np.random.default_rng(cfg.seed)
-    n, k = cfg.n_workers, cfg.k
-    s = n // k
-
-    # pre-sample task service times: (num_jobs, n)
-    import jax
-    key = jax.random.PRNGKey(cfg.seed)
-    svc = np.asarray(dist.sample_task(key, (cfg.num_jobs, n), s, scaling,
-                                      delta=delta), dtype=np.float64)
-    inter = rng.exponential(1.0 / cfg.arrival_rate, size=cfg.num_jobs)
-    arrivals = np.cumsum(inter)
-
-    workers = [_Worker() for _ in range(n)]
-    jobs: Dict[int, JobStats] = {}
-    finished_tasks: Dict[int, int] = {}
-    done_jobs: set = set()
-
-    # event heap: (time, seq, kind, payload)
-    events: List[Tuple[float, int, str, tuple]] = []
-    seq = 0
-    for j, t in enumerate(arrivals):
-        heapq.heappush(events, (float(t), seq, "arrive", (j,)))
-        seq += 1
-
-    def start_next(w: _Worker, widx: int, now: float):
-        nonlocal seq
-        while w.queue:
-            job, st = w.queue.pop(0)
-            if job in done_jobs:
-                continue                      # purged from queue (free)
-            w.current = (job, now, st)
-            w.busy_until = now + st
-            heapq.heappush(events, (w.busy_until, seq, "finish",
-                                    (widx, job)))
-            seq += 1
-            return
-        w.current = None
-
-    completed = 0
-    while events and completed < cfg.num_jobs:
-        now, _, kind, payload = heapq.heappop(events)
-        if kind == "arrive":
-            (j,) = payload
-            jobs[j] = JobStats(arrival=now)
-            finished_tasks[j] = 0
-            for widx, w in enumerate(workers):
-                w.queue.append((j, svc[j, widx]))
-                if w.current is None:
-                    start_next(w, widx, now)
-        else:  # finish
-            widx, job = payload
-            w = workers[widx]
-            if w.current is None or w.current[0] != job:
-                continue                      # stale event (cancelled)
-            _, t0, st = w.current
-            w.busy_time += now - t0
-            if job in done_jobs:
-                w.wasted_time += now - t0     # remnant ran to completion
-            else:
-                finished_tasks[job] += 1
-                if finished_tasks[job] == k:
-                    done_jobs.add(job)
-                    jobs[job].done = now
-                    completed += 1
-                    # cancel: purge queues; preempt in-service remnants
-                    for widx2, w2 in enumerate(workers):
-                        if w2 is w:
-                            continue
-                        if w2.current is not None and w2.current[0] == job:
-                            if cfg.preempt:
-                                _, t02, _ = w2.current
-                                w2.busy_time += now - t02
-                                w2.wasted_time += now - t02
-                                w2.busy_until = now + cfg.cancel_overhead
-                                start_next(w2, widx2,
-                                           now + cfg.cancel_overhead)
-            start_next(w, widx, now)
-
-    horizon = max((j.done for j in jobs.values() if j.done > 0),
-                  default=1.0)
-    lat = np.array([j.latency for j in jobs.values() if j.done > 0])
-    busy = sum(w.busy_time for w in workers)
-    waste = sum(w.wasted_time for w in workers)
-    return ClusterResult(
-        latencies=lat,
-        utilization=busy / (n * horizon),
-        wasted_frac=waste / max(busy, 1e-12),
-        throughput=len(lat) / horizon,
-    )
+    return _resolve_backend(backend)(cfg, dist, scaling, delta=delta,
+                                     service_times=service_times,
+                                     arrival_times=arrival_times)
 
 
 def latency_vs_redundancy(dist: ServiceTime, scaling: Scaling, n: int,
                           arrival_rate: float, num_jobs: int = 2000,
                           delta: Optional[float] = None,
-                          seed: int = 0) -> Dict[int, dict]:
-    """Mean/percentile latency for every legal k at one load level."""
-    out = {}
-    for k in [d for d in range(1, n + 1) if n % d == 0]:
-        cfg = ClusterConfig(n_workers=n, k=k, arrival_rate=arrival_rate,
-                            num_jobs=num_jobs, seed=seed)
-        out[k] = simulate(cfg, dist, scaling, delta=delta).summary()
-    return out
+                          seed: int = 0, backend: str = "oracle",
+                          warmup: int = 0,
+                          arrivals: Optional[ArrivalProcess] = None,
+                          worker_speeds: Optional[Sequence[float]] = None,
+                          **cfg_kwargs) -> Dict[int, dict]:
+    """Mean/percentile latency for every legal k at one load level.
+
+    Both backends take the same knobs — ``arrivals`` / ``worker_speeds``
+    travel via the ``Scenario``, and ``cfg_kwargs`` are the shared sweep
+    parameters (``preempt``, ``cancel_overhead``, ``reps``) — so an
+    oracle cross-check of a batched run is a one-argument change.
+    """
+    run = resolve_sweep_backend(backend)
+    scenario = Scenario(dist, scaling, n, delta=delta, arrivals=arrivals,
+                        worker_speeds=None if worker_speeds is None
+                        else tuple(worker_speeds))
+    sw = run(scenario, loads=[arrival_rate], num_jobs=num_jobs,
+             seed=seed, warmup=warmup, **cfg_kwargs)
+    return {k: sw.summary(0, i) for i, k in enumerate(sw.ks)}
 
 
 def optimal_k_vs_load(dist: ServiceTime, scaling: Scaling, n: int,
-                      loads: List[float], num_jobs: int = 1500,
-                      delta: Optional[float] = None) -> Dict[float, int]:
-    """k* (by mean latency) at each load -- the beyond-paper curve.
+                      loads: Sequence[float], num_jobs: int = 1500,
+                      delta: Optional[float] = None,
+                      backend: str = "batched", metric: str = "mean",
+                      seed: int = 0, warmup: Optional[int] = None,
+                      arrivals: Optional[ArrivalProcess] = None,
+                      worker_speeds: Optional[Sequence[float]] = None,
+                      **cfg_kwargs) -> Dict[float, int]:
+    """k* (by ``metric``) at each load — the beyond-paper surface.
 
-    ``loads`` are offered loads rho ~ arrival_rate * E[single-job work] /
-    capacity; we pass arrival rates directly and report the argmin-k map.
+    ``loads`` are mean arrival rates.  With the default batched backend
+    the ENTIRE (load x k) surface — every legal k at every load, cancel
+    and preempt semantics included — runs in one compiled call with
+    common random numbers across lanes; ``backend="oracle"`` falls back
+    to one discrete-event run per cell (the validation path).  Both
+    backends resolve ``warmup=None`` through the same ``default_warmup``
+    rule, so their statistics cover the same job window.
     """
-    out = {}
-    for lam in loads:
-        curves = latency_vs_redundancy(dist, scaling, n, lam,
-                                       num_jobs=num_jobs, delta=delta)
-        out[lam] = min(curves, key=lambda k: curves[k]["mean"])
-    return out
+    if warmup is None:
+        warmup = default_warmup(num_jobs)
+    run = resolve_sweep_backend(backend)
+    scenario = Scenario(dist, scaling, n, delta=delta, arrivals=arrivals,
+                        worker_speeds=None if worker_speeds is None
+                        else tuple(worker_speeds))
+    sw = run(scenario, loads=list(loads), num_jobs=num_jobs,
+             seed=seed, warmup=warmup, **cfg_kwargs)
+    return sw.kstar(metric)

@@ -1,0 +1,302 @@
+"""Batched JAX cluster engine: a whole (replications x loads x k) grid of
+queueing simulations as ONE compiled program — the production backend the
+discrete-event oracle (``runtime.cluster_oracle``) validates.
+
+Why this is exact, not an approximation: in this system every arriving
+job enqueues one task on EVERY worker and each worker is an exclusive
+FCFS server, so all workers process jobs in arrival order.  Conditioned
+on the task-time matrix S (num_jobs, n) and the arrival instants A, the
+entire discrete-event dynamics collapse to a per-job recurrence over the
+worker free-times F:
+
+    start_w = max(A_j, F_w)                  (FCFS: job j waits for j-1)
+    nat_w   = start_w + S_{j,w}              (natural finish)
+    D_j     = k-th smallest nat_w            (any-k completion; cancelled
+                                              tasks are all LATER, so they
+                                              cannot move the k-th)
+    rank_w < k        -> completed:  F_w = nat_w            (busy)
+    start_w >= D_j    -> purged:     F_w unchanged          (free)
+    otherwise         -> in service at D_j:
+        preempt:    F_w = D_j + cancel_overhead   (busy+wasted, incl. the
+                                                   purge window)
+        no preempt: F_w = nat_w                   (remnant runs out;
+                                                   busy+wasted)
+
+Ties at D are broken by stable sort order (worker index), matching the
+oracle's event order for the common idle-arrival case.  The recurrence
+runs as a fixed-step ``lax.scan`` over jobs whose carry is (F, busy,
+wasted); lane axes are added by ``vmap``: k lanes share one common-
+random-number base noise draw (the same CRN discipline as
+``core.simulator.completion_curves_grid_mc`` — one ``sample_noise`` /
+additive-cumsum table transformed per task size s = n/k), load lanes
+share one arrival key with only the rate swept, and replication lanes
+fold fresh keys.  One jit trace covers the whole surface
+(``sweep_compile_count`` is asserted by tests), which is what makes
+load-aware k* maps as cheap as the closed-form k-curves.
+
+``simulate_one`` is the single-cell path: it draws from the SAME
+substrate as the oracle (``core.scenario.sample_task_matrix`` + the
+legacy arrival stream), so for a given config both backends walk the
+same sample path up to float32 accumulation — the exact-parity tests in
+``tests/test_cluster_batched.py`` pin this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributions import Scaling
+from ..core.scenario import PoissonArrivals, Scenario
+from .cluster import ClusterConfig, ClusterResult, default_warmup
+
+__all__ = ["ClusterSweep", "simulate_one", "sweep", "sweep_compile_count"]
+
+_SWEEP_TRACES = 0
+
+
+def sweep_compile_count() -> int:
+    """How many times the sweep kernel has been TRACED (== compiled).
+
+    Ticks once per jit compilation, not per execution — tests assert a
+    whole (reps x loads x k) surface costs exactly one compile.
+    """
+    return _SWEEP_TRACES
+
+
+# --------------------------------------------------------------------------
+# The lane: one (load, k) queueing simulation as a scan over jobs
+# --------------------------------------------------------------------------
+
+def _scan_lane(A, S, k, cancel_overhead, preempt: bool):
+    """Exact FCFS/any-k/cancel dynamics for one lane.
+
+    A: (num_jobs,) arrivals; S: (num_jobs, n) task times; k: traced int32
+    (no recompile across k lanes); preempt is a Python bool (two traced
+    branches).  Returns (latencies (num_jobs,), busy, wasted).
+    """
+    n = S.shape[1]
+
+    def step(carry, inp):
+        F, busy, wasted = carry
+        a, srow = inp
+        start = jnp.maximum(a, F)
+        nat = start + srow
+        D = jnp.sort(nat)[k - 1]
+        # first k finishers, ties at D broken by worker index (matching
+        # the oracle's event order for simultaneous finishes): all
+        # strictly-earlier finishers complete, plus the first
+        # (k - #earlier) of the ties in index order
+        lt = nat < D
+        eq = nat == D
+        take_eq = k - lt.sum()
+        completed = lt | (eq & (jnp.cumsum(eq) * eq <= take_eq))
+        inservice = (~completed) & (start < D)
+        if preempt:
+            cut = D - start + cancel_overhead
+            run = jnp.where(completed, srow,
+                            jnp.where(inservice, cut, 0.0))
+            waste = jnp.where(inservice, cut, 0.0)
+            F_next = jnp.where(completed, nat,
+                               jnp.where(inservice, D + cancel_overhead, F))
+        else:
+            run = jnp.where(completed | inservice, srow, 0.0)
+            waste = jnp.where(inservice, srow, 0.0)
+            F_next = jnp.where(completed | inservice, nat, F)
+        return (F_next, busy + run.sum(), wasted + waste.sum()), D - a
+
+    zero = jnp.zeros((), S.dtype)
+    (_, busy, wasted), lat = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), (A, S))
+    return lat, busy, wasted
+
+
+@functools.partial(jax.jit, static_argnames=("preempt",))
+def _one_kernel(A, S, k, cancel_overhead, preempt):
+    return _scan_lane(A, S, k, cancel_overhead, preempt)
+
+
+def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
+                 delta: Optional[float] = None,
+                 service_times: Optional[np.ndarray] = None,
+                 arrival_times: Optional[np.ndarray] = None
+                 ) -> ClusterResult:
+    """One cell on the batched engine, sample-path-matched to the oracle.
+
+    Inputs are drawn by the oracle's own ``_draw_inputs`` (shared
+    substrate, same keys), so this is the same trajectory the
+    discrete-event loop walks — the single-cell parity anchor.  ``k``
+    and ``cancel_overhead`` are traced, so sweeping them reuses one
+    compiled kernel per (shape, preempt).
+    """
+    from .cluster_oracle import _draw_inputs
+    svc, arrivals = _draw_inputs(cfg, dist, scaling, delta,
+                                 service_times, arrival_times)
+    lat, busy, wasted = _one_kernel(
+        jnp.asarray(arrivals, jnp.float32), jnp.asarray(svc, jnp.float32),
+        jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead), cfg.preempt)
+    lat = np.asarray(lat, dtype=np.float64)
+    busy = float(busy)
+    horizon = float(np.max(arrivals + lat))
+    return ClusterResult(
+        latencies=lat,
+        utilization=busy / (cfg.n_workers * horizon),
+        wasted_frac=float(wasted) / max(busy, 1e-12),
+        throughput=lat.size / horizon,
+        warmup=cfg.warmup,
+    )
+
+
+# --------------------------------------------------------------------------
+# The surface: vmap lanes over (replications x loads x k), one compile
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "dist", "scaling", "n", "ks", "num_jobs", "reps", "preempt",
+    "arrivals", "delta"))
+def _sweep_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
+                  ks, num_jobs, reps, preempt, arrivals, delta):
+    global _SWEEP_TRACES
+    _SWEEP_TRACES += 1  # trace-time side effect: counts compiles, not calls
+    s_of_k = tuple(n // k for k in ks)
+    k_arr = jnp.asarray(ks, jnp.int32)
+
+    def one_rep(rep_key):
+        k_svc, k_arrv = jax.random.split(rep_key)
+        # -- service: one CRN base draw transformed per k lane -------------
+        if scaling is Scaling.ADDITIVE:
+            draws = dist.sample(k_svc, (num_jobs, n, max(s_of_k)))
+            csum = jnp.cumsum(draws, axis=-1)
+            S_all = jnp.stack([csum[..., s - 1] for s in s_of_k])
+        else:
+            d = dist.shift if delta is None else delta
+            z = dist.sample_noise(k_svc, (num_jobs, n))
+            s_col = jnp.asarray(s_of_k, z.dtype)[:, None, None]
+            S_all = (d + s_col * z) if scaling is Scaling.SERVER_DEPENDENT \
+                else (s_col * d + z)                        # (K, jobs, n)
+        S_all = S_all * speeds[None, None, :]
+        # -- arrivals: one key across load lanes, only the rate sweeps ----
+        A_all = jax.vmap(
+            lambda r: arrivals.times(k_arrv, num_jobs, r))(loads)
+
+        def lane(A, S, k):
+            return _scan_lane(A, S, k, cancel_overhead, preempt)
+
+        over_k = jax.vmap(lane, in_axes=(None, 0, 0))
+        over_loads = jax.vmap(over_k, in_axes=(0, None, None))
+        lat, busy, wasted = over_loads(A_all, S_all, k_arr)
+        return lat, busy, wasted, A_all[:, -1]
+
+    return jax.vmap(one_rep)(jax.random.split(key, reps))
+
+
+@dataclasses.dataclass
+class ClusterSweep:
+    """The (loads x ks) result surface, replication-averaged.
+
+    Latency stats pool replications and post-warmup jobs; utilization,
+    wasted-work fraction, and throughput are per-lane then averaged over
+    replications.  All arrays are (len(loads), len(ks)).
+    """
+
+    loads: Tuple[float, ...]
+    ks: Tuple[int, ...]
+    warmup: int
+    reps: int
+    mean: np.ndarray
+    p50: np.ndarray
+    p95: np.ndarray
+    p99: np.ndarray
+    utilization: np.ndarray
+    wasted_frac: np.ndarray
+    throughput: np.ndarray
+
+    _METRICS = ("mean", "p50", "p95", "p99", "utilization", "wasted_frac",
+                "throughput")
+
+    def metric(self, name: str) -> np.ndarray:
+        if name not in self._METRICS:
+            raise ValueError(f"unknown metric {name!r} "
+                             f"(one of {self._METRICS})")
+        return getattr(self, name)
+
+    def summary(self, load_idx: int, k_idx: int) -> dict:
+        """One cell in ``ClusterResult.summary()``'s dialect."""
+        return {m: float(self.metric(m)[load_idx, k_idx])
+                for m in self._METRICS}
+
+    def curve(self, load_idx: int = 0, metric: str = "mean"
+              ) -> Dict[int, float]:
+        """k -> metric at one load (the planner's objective row)."""
+        vals = self.metric(metric)[load_idx]
+        return {int(k): float(v) for k, v in zip(self.ks, vals)}
+
+    def kstar(self, metric: str = "mean") -> Dict[float, int]:
+        """load -> arg-min k (ties to the smaller k; ks are ascending)."""
+        vals = self.metric(metric)
+        return {float(lam): int(self.ks[int(np.argmin(vals[i]))])
+                for i, lam in enumerate(self.loads)}
+
+
+def sweep(scenario: Scenario, loads: Sequence[float],
+          ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
+          reps: int = 1, preempt: bool = True, cancel_overhead: float = 0.0,
+          seed: int = 0, warmup: Optional[int] = None) -> ClusterSweep:
+    """Every (load, k) queueing cell of a scenario in one compiled call.
+
+    ``loads`` are mean arrival rates; the scenario's ``arrivals`` process
+    (default Poisson) supplies the SHAPE and is rescaled per load lane.
+    ``warmup=None`` discards min(num_jobs // 10, 200) transient jobs from
+    the latency statistics.  Heterogeneous ``scenario.worker_speeds``
+    multiply every lane's task times.  Additive scaling materializes a
+    (num_jobs, n, s_max) CU table per replication — prefer moderate n
+    there; server-/data-dependent scaling needs only (num_jobs, n).
+    """
+    n = scenario.n
+    ks = tuple(scenario.legal_ks()) if ks is None \
+        else tuple(int(k) for k in ks)
+    for k in ks:
+        if k < 1 or n % k:
+            raise ValueError(f"k={k} must divide n={n}")
+    loads = [float(v) for v in loads]
+    if not loads or any(v <= 0 for v in loads):
+        raise ValueError("loads must be positive arrival rates")
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    if warmup is None:
+        warmup = default_warmup(num_jobs)
+    if not (0 <= warmup < num_jobs):
+        raise ValueError(f"warmup must be in [0, num_jobs), got {warmup}")
+    arrivals = scenario.arrivals if scenario.arrivals is not None \
+        else PoissonArrivals(rate=1.0)           # rate overridden per lane
+    speeds = jnp.ones((n,), jnp.float32) if scenario.worker_speeds is None \
+        else jnp.asarray(scenario.worker_speeds, jnp.float32)
+
+    lat, busy, wasted, a_last = _sweep_kernel(
+        jax.random.PRNGKey(seed), jnp.asarray(loads, jnp.float32), speeds,
+        jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
+        ks, int(num_jobs), int(reps), bool(preempt), arrivals,
+        None if scenario.delta is None else float(scenario.delta))
+
+    lat = np.asarray(lat, np.float64)            # (reps, L, K, num_jobs)
+    busy = np.asarray(busy, np.float64)          # (reps, L, K)
+    wasted = np.asarray(wasted, np.float64)
+    a_last = np.asarray(a_last, np.float64)      # (reps, L)
+    horizon = a_last[:, :, None] + lat[..., -1]  # D_last (monotone in j)
+    steady = lat[..., warmup:]
+    L, K = len(loads), len(ks)
+    pooled = np.moveaxis(steady, 0, -2).reshape(L, K, -1)
+    return ClusterSweep(
+        loads=tuple(loads), ks=ks, warmup=int(warmup), reps=int(reps),
+        mean=pooled.mean(axis=-1),
+        p50=np.quantile(pooled, 0.50, axis=-1),
+        p95=np.quantile(pooled, 0.95, axis=-1),
+        p99=np.quantile(pooled, 0.99, axis=-1),
+        utilization=(busy / (n * horizon)).mean(axis=0),
+        wasted_frac=(wasted / np.maximum(busy, 1e-12)).mean(axis=0),
+        throughput=(num_jobs / horizon).mean(axis=0),
+    )

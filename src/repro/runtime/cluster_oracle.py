@@ -1,0 +1,269 @@
+"""The reference discrete-event cluster simulator (the ORACLE).
+
+This is the trusted, slow ground truth the batched lane engine
+(``runtime.cluster_batched``) is validated against: a single heapq event
+loop over arrivals / task finishes / purge-window releases, one
+(scenario, load, k) cell per call.  Semantics:
+
+  * n workers, each an exclusive FCFS server (``collections.deque``
+    queues — O(1) pops, not the O(queue) ``list.pop(0)`` this started
+    with);
+  * every arriving job enqueues one task of s = n/k CUs on every worker,
+    so each worker serves jobs in arrival order;
+  * a job completes when any k tasks finish; its queued tasks are purged
+    for free and (if ``preempt``) in-service remnants are cut at the
+    completion instant, each paying ``cancel_overhead`` of server time
+    that is accounted BUSY and WASTED and that blocks the server — new
+    arrivals cannot seize a worker inside its purge window (a sentinel
+    occupies the server until a ``free`` event releases it);
+  * without ``preempt`` remnants run to completion and their full
+    service time is wasted work.
+
+Accounting notes: utilization is busy time over n x horizon with horizon
+the last job completion; remnants still running past the horizon at the
+end of a non-preempt trace are dropped (their finish events are never
+processed), an O(n / num_jobs) truncation the parity tests absorb in
+tolerance.
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.distributions import Scaling, ServiceTime
+from ..core.scenario import Scenario, sample_task_matrix
+from .cluster import ClusterConfig, ClusterResult, JobStats, default_warmup
+
+__all__ = ["simulate_oracle", "sweep_oracle"]
+
+_SENTINEL = -1   # pseudo job id occupying a server during its purge window
+
+
+class _Worker:
+    """One exclusive server: FCFS queue of (job_id, service_time)."""
+
+    __slots__ = ("queue", "busy_until", "current", "busy_time",
+                 "wasted_time")
+
+    def __init__(self):
+        self.queue: Deque[Tuple[int, float]] = collections.deque()
+        self.busy_until = 0.0
+        self.current: Optional[Tuple[int, float, float]] = None  # job,t0,svc
+        self.busy_time = 0.0
+        self.wasted_time = 0.0
+
+
+def _draw_inputs(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
+                 delta: Optional[float],
+                 service_times: Optional[np.ndarray],
+                 arrival_times: Optional[np.ndarray]):
+    """(num_jobs, n) task times + (num_jobs,) arrivals, shared substrate.
+
+    Task times come from ``core.scenario.sample_task_matrix`` under
+    PRNGKey(seed) — the batched engine's single-cell path draws the
+    identical matrix, which is what makes exact sample-path parity hold.
+    Arrivals: the legacy numpy Poisson stream when ``cfg.arrivals`` is
+    None (bit-stable with the historical simulator), else the pluggable
+    ``ArrivalProcess`` under PRNGKey(seed + 1) rescaled to
+    ``cfg.arrival_rate``.
+    """
+    n = cfg.n_workers
+    if service_times is None:
+        import jax
+        key = jax.random.PRNGKey(cfg.seed)
+        svc = np.asarray(
+            sample_task_matrix(dist, scaling, n, n // cfg.k, cfg.num_jobs,
+                               key, delta=delta,
+                               worker_speeds=cfg.worker_speeds),
+            dtype=np.float64)
+    else:
+        svc = np.asarray(service_times, dtype=np.float64)
+        if svc.shape != (cfg.num_jobs, n):
+            raise ValueError(f"service_times must be {(cfg.num_jobs, n)}, "
+                             f"got {svc.shape}")
+    if arrival_times is None:
+        if cfg.arrivals is None:
+            rng = np.random.default_rng(cfg.seed)
+            inter = rng.exponential(1.0 / cfg.arrival_rate,
+                                    size=cfg.num_jobs)
+            arrivals = np.cumsum(inter)
+        else:
+            import jax
+            arrivals = np.asarray(
+                cfg.arrivals.times(jax.random.PRNGKey(cfg.seed + 1),
+                                   cfg.num_jobs, cfg.arrival_rate),
+                dtype=np.float64)
+    else:
+        arrivals = np.asarray(arrival_times, dtype=np.float64)
+        if arrivals.shape != (cfg.num_jobs,):
+            raise ValueError(f"arrival_times must be {(cfg.num_jobs,)}, "
+                             f"got {arrivals.shape}")
+    return svc, arrivals
+
+
+def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
+                    delta: Optional[float] = None,
+                    service_times: Optional[np.ndarray] = None,
+                    arrival_times: Optional[np.ndarray] = None
+                    ) -> ClusterResult:
+    """Run the discrete-event simulation; returns latency/utilization stats."""
+    n, k = cfg.n_workers, cfg.k
+    svc, arrivals = _draw_inputs(cfg, dist, scaling, delta,
+                                 service_times, arrival_times)
+
+    workers = [_Worker() for _ in range(n)]
+    jobs: Dict[int, JobStats] = {}
+    finished_tasks: Dict[int, int] = {}
+    done_jobs: set = set()
+
+    # event heap: (time, seq, kind, payload)
+    events: List[Tuple[float, int, str, tuple]] = []
+    seq = 0
+    for j, t in enumerate(arrivals):
+        heapq.heappush(events, (float(t), seq, "arrive", (j,)))
+        seq += 1
+
+    def start_next(w: _Worker, widx: int, now: float):
+        nonlocal seq
+        while w.queue:
+            job, st = w.queue.popleft()
+            if job in done_jobs:
+                continue                      # purged from queue (free)
+            w.current = (job, now, st)
+            w.busy_until = now + st
+            heapq.heappush(events, (w.busy_until, seq, "finish",
+                                    (widx, job)))
+            seq += 1
+            return
+        w.current = None
+
+    completed = 0
+    while events and completed < cfg.num_jobs:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "arrive":
+            (j,) = payload
+            jobs[j] = JobStats(arrival=now)
+            finished_tasks[j] = 0
+            for widx, w in enumerate(workers):
+                w.queue.append((j, svc[j, widx]))
+                if w.current is None:
+                    start_next(w, widx, now)
+        elif kind == "free":
+            (widx,) = payload
+            w = workers[widx]
+            if w.current is not None and w.current[0] == _SENTINEL:
+                w.current = None
+                start_next(w, widx, now)
+        else:  # finish
+            widx, job = payload
+            w = workers[widx]
+            if w.current is None or w.current[0] != job:
+                continue                      # stale event (cancelled)
+            _, t0, st = w.current
+            w.busy_time += now - t0
+            if job in done_jobs:
+                w.wasted_time += now - t0     # remnant ran to completion
+            else:
+                finished_tasks[job] += 1
+                if finished_tasks[job] == k:
+                    done_jobs.add(job)
+                    jobs[job].done = now
+                    completed += 1
+                    # cancel: purge queues; preempt in-service remnants.
+                    # cancel_overhead is accounted busy AND wasted, and
+                    # occupies the server until the purge window ends.
+                    for widx2, w2 in enumerate(workers):
+                        if w2 is w:
+                            continue
+                        if w2.current is not None and w2.current[0] == job:
+                            if cfg.preempt:
+                                _, t02, _ = w2.current
+                                oh = cfg.cancel_overhead
+                                w2.busy_time += (now - t02) + oh
+                                w2.wasted_time += (now - t02) + oh
+                                w2.busy_until = now + oh
+                                if oh > 0.0:
+                                    w2.current = (_SENTINEL, now, oh)
+                                    heapq.heappush(
+                                        events,
+                                        (now + oh, seq, "free", (widx2,)))
+                                    seq += 1
+                                else:
+                                    start_next(w2, widx2, now)
+            start_next(w, widx, now)
+
+    horizon = max((j.done for j in jobs.values() if j.done > 0),
+                  default=1.0)
+    lat = np.array([j.latency for j in jobs.values() if j.done > 0])
+    busy = sum(w.busy_time for w in workers)
+    waste = sum(w.wasted_time for w in workers)
+    return ClusterResult(
+        latencies=lat,
+        utilization=busy / (n * horizon),
+        wasted_frac=waste / max(busy, 1e-12),
+        throughput=len(lat) / horizon,
+        warmup=cfg.warmup,
+    )
+
+
+def sweep_oracle(scenario: Scenario, loads, ks=None, num_jobs: int = 1000,
+                 reps: int = 1, preempt: bool = True,
+                 cancel_overhead: float = 0.0, seed: int = 0,
+                 warmup=None):
+    """The (loads x ks) surface on the oracle, cell by cell — the slow
+    validation twin of ``cluster_batched.sweep`` with the same
+    ``ClusterSweep`` result type and defaults (``warmup=None`` resolves
+    through the shared ``cluster.default_warmup``).  ``reps`` runs each
+    cell that many
+    times on shifted seeds; latency stats pool replications and
+    post-warmup jobs, per-lane rates average over replications — the
+    same aggregation as the batched engine.
+    """
+    from .cluster_batched import ClusterSweep
+    n = scenario.n
+    ks = tuple(scenario.legal_ks()) if ks is None \
+        else tuple(int(k) for k in ks)
+    loads = [float(v) for v in loads]
+    if not loads or any(v <= 0 for v in loads):
+        raise ValueError("loads must be positive arrival rates")
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    if warmup is None:
+        warmup = default_warmup(num_jobs)
+    L, K = len(loads), len(ks)
+    shape = (L, K)
+    mean = np.zeros(shape)
+    p50, p95, p99 = np.zeros(shape), np.zeros(shape), np.zeros(shape)
+    util, waste, thru = np.zeros(shape), np.zeros(shape), np.zeros(shape)
+    for i, lam in enumerate(loads):
+        for j, k in enumerate(ks):
+            lats, us, ws, ts = [], [], [], []
+            for r in range(reps):
+                cfg = ClusterConfig(
+                    n_workers=n, k=k, arrival_rate=lam, num_jobs=num_jobs,
+                    preempt=preempt, cancel_overhead=cancel_overhead,
+                    seed=seed + 7919 * r, warmup=warmup,
+                    arrivals=scenario.arrivals,
+                    worker_speeds=scenario.worker_speeds)
+                res = simulate_oracle(cfg, scenario.dist, scenario.scaling,
+                                      delta=scenario.delta)
+                lats.append(res.steady_latencies)
+                us.append(res.utilization)
+                ws.append(res.wasted_frac)
+                ts.append(res.throughput)
+            pooled = np.concatenate(lats)
+            mean[i, j] = pooled.mean()
+            p50[i, j] = np.quantile(pooled, 0.50)
+            p95[i, j] = np.quantile(pooled, 0.95)
+            p99[i, j] = np.quantile(pooled, 0.99)
+            util[i, j] = np.mean(us)
+            waste[i, j] = np.mean(ws)
+            thru[i, j] = np.mean(ts)
+    return ClusterSweep(
+        loads=tuple(loads), ks=ks, warmup=int(warmup), reps=int(reps),
+        mean=mean, p50=p50, p95=p95, p99=p99, utilization=util,
+        wasted_frac=waste, throughput=thru,
+    )

@@ -1,0 +1,359 @@
+"""Batched cluster engine vs the discrete-event oracle.
+
+Three parity layers, strongest first:
+
+  1. EXACT sample-path parity: both backends draw from the shared
+     substrate (core.scenario.sample_task_matrix + the legacy arrival
+     stream) under the same keys, so for one config they walk the same
+     trajectory up to float32 accumulation — asserted per-job.
+  2. Hand-computable micro-scenarios (injected service/arrival arrays)
+     pinning the cancel/preempt/overhead semantics both engines must
+     share, including the purge window BLOCKING new arrivals and
+     cancel_overhead being accounted busy-and-wasted.
+  3. Distributional parity: the sweep engine's own CRN sampling vs
+     independent oracle runs, within MC tolerance, across 7
+     (family x scaling) cells covering preempt on/off and
+     cancel_overhead > 0.
+"""
+import numpy as np
+import pytest
+
+from repro.core.distributions import BiModal, Pareto, Scaling, ShiftedExp
+from repro.core.scenario import (DeterministicArrivals, MMPPArrivals,
+                                 PoissonArrivals, Scenario)
+from repro.runtime.cluster import (ClusterConfig, ClusterResult,
+                                   latency_vs_redundancy, optimal_k_vs_load,
+                                   simulate)
+from repro.runtime.cluster_batched import sweep, sweep_compile_count
+
+N, JOBS, WARM = 8, 1000, 100
+
+
+# --------------------------------------------------------------------------
+# 1. Exact sample-path parity (shared substrate, same keys)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist,scaling,delta", [
+    (ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, None),
+    (Pareto(1.0, 2.0), Scaling.DATA_DEPENDENT, 0.5),
+    (ShiftedExp(1.0, 2.0), Scaling.ADDITIVE, None),
+])
+def test_single_cell_same_seed_same_path(dist, scaling, delta):
+    cfg = ClusterConfig(n_workers=8, k=4, arrival_rate=0.05, num_jobs=400,
+                        seed=3)
+    ro = simulate(cfg, dist, scaling, delta=delta, backend="oracle")
+    rb = simulate(cfg, dist, scaling, delta=delta, backend="batched")
+    np.testing.assert_allclose(rb.latencies, ro.latencies,
+                               rtol=1e-3, atol=2e-2)
+    assert abs(rb.utilization - ro.utilization) < 1e-3
+    assert abs(rb.wasted_frac - ro.wasted_frac) < 1e-3
+    assert abs(rb.throughput - ro.throughput) < 1e-6
+
+
+@pytest.mark.parametrize("preempt,oh", [(True, 0.0), (True, 1.5),
+                                        (False, 0.0)])
+def test_injected_path_parity_cancel_semantics(preempt, oh):
+    """Same injected (svc, arrivals) through both engines: the cancel /
+    preempt / overhead state machines must agree trajectory-for-
+    trajectory, not just in distribution."""
+    rng = np.random.default_rng(42)
+    jobs, n = 300, 6
+    svc = 1.0 + rng.exponential(4.0, size=(jobs, n))
+    arr = np.cumsum(rng.exponential(1 / 0.07, size=jobs))
+    cfg = ClusterConfig(n_workers=n, k=2, arrival_rate=0.07, num_jobs=jobs,
+                        preempt=preempt, cancel_overhead=oh, seed=0)
+    ro = simulate(cfg, ShiftedExp(1.0, 4.0), Scaling.SERVER_DEPENDENT,
+                  backend="oracle", service_times=svc, arrival_times=arr)
+    rb = simulate(cfg, ShiftedExp(1.0, 4.0), Scaling.SERVER_DEPENDENT,
+                  backend="batched", service_times=svc, arrival_times=arr)
+    np.testing.assert_allclose(rb.latencies, ro.latencies,
+                               rtol=1e-3, atol=2e-2)
+    assert abs(rb.utilization - ro.utilization) < 2e-3
+    assert abs(rb.wasted_frac - ro.wasted_frac) < 2e-3
+
+
+def test_purge_window_blocks_arrivals_and_is_busy():
+    """Hand-computed: n=2, k=1, cancel_overhead=2.  Job 0 (arrives t=0,
+    svc [1, 10]) completes at t=1; worker 1 is preempted and BLOCKED
+    until t=3.  Job 1 (arrives t=1.5, svc [5, 0.5]) therefore starts on
+    worker 1 at t=3 and finishes at 3.5 (not 2.0, which a worker seized
+    inside the purge window would give).  Busy time = 1 + (1+2) on job 0
+    + 0.5 + (2+2) on job 1's preempted remnant = 8.5."""
+    svc = np.array([[1.0, 10.0], [5.0, 0.5]])
+    arr = np.array([0.0, 1.5])
+    cfg = ClusterConfig(n_workers=2, k=1, arrival_rate=1.0, num_jobs=2,
+                        preempt=True, cancel_overhead=2.0, seed=0)
+    for backend in ("oracle", "batched"):
+        r = simulate(cfg, ShiftedExp(0.0, 1.0), Scaling.SERVER_DEPENDENT,
+                     backend=backend, service_times=svc, arrival_times=arr)
+        np.testing.assert_allclose(r.latencies, [1.0, 2.0], atol=1e-5)
+        # horizon = 3.5; busy = 8.5 (overhead accounted busy)
+        np.testing.assert_allclose(r.utilization, 8.5 / (2 * 3.5),
+                                   atol=1e-5)
+        # wasted: job0 remnant cut (1+2) + job1 remnant cut (2+2) = 7.0
+        np.testing.assert_allclose(r.wasted_frac, 7.0 / 8.5, atol=1e-5)
+
+
+def test_no_preempt_remnants_run_out_in_both():
+    """Hand-computed no-preempt trace.  Job 0 (t=0, svc [1,4]) completes
+    at 1 on worker 0; worker 1's remnant runs to 4 (wasted), so job 1
+    (t=0.5) waits there, is purged at 4, and finishes on worker 0 at 2.
+    Job 2 (t=6, svc [2, 0.1]) completes at 6.1 on worker 1.  Latencies
+    agree exactly; busy/waste differ ONLY by the documented trace-
+    boundary rule — the oracle drops the final job's remnant (its finish
+    event is never processed), the batched engine counts it in full."""
+    svc = np.array([[1.0, 4.0], [1.0, 1.0], [2.0, 0.1]])
+    arr = np.array([0.0, 0.5, 6.0])
+    cfg = ClusterConfig(n_workers=2, k=1, arrival_rate=1.0, num_jobs=3,
+                        preempt=False, seed=0)
+    expected = {
+        "oracle": (6.1, 4.0),    # job-2 remnant (2.0 on worker 0) dropped
+        "batched": (8.1, 6.0),   # counted: remnants run out in-model
+    }
+    for backend, (busy, waste) in expected.items():
+        r = simulate(cfg, ShiftedExp(0.0, 1.0), Scaling.SERVER_DEPENDENT,
+                     backend=backend, service_times=svc, arrival_times=arr)
+        np.testing.assert_allclose(r.latencies, [1.0, 1.5, 0.1], atol=1e-5)
+        np.testing.assert_allclose(r.utilization, busy / (2 * 6.1),
+                                   atol=1e-5)
+        np.testing.assert_allclose(r.wasted_frac, waste / busy, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# 3. Distributional parity grid (>= 6 family x scaling cells + semantics)
+# --------------------------------------------------------------------------
+
+GRID = [
+    (ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, None, 0.012, True, 0.0),
+    (ShiftedExp(1.0, 2.0), Scaling.ADDITIVE, None, 0.03, True, 0.0),
+    (Pareto(1.0, 2.2), Scaling.SERVER_DEPENDENT, None, 0.04, True, 0.0),
+    (Pareto(1.0, 2.2), Scaling.DATA_DEPENDENT, 0.5, 0.05, True, 0.0),
+    (BiModal(10.0, 0.3), Scaling.ADDITIVE, None, 0.05, True, 0.0),
+    (BiModal(5.0, 0.2), Scaling.SERVER_DEPENDENT, None, 0.04, False, 0.0),
+    (ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, None, 0.012, True, 1.0),
+]
+
+
+@pytest.mark.parametrize("dist,scaling,delta,lam,preempt,oh", GRID)
+def test_distributional_parity(dist, scaling, delta, lam, preempt, oh):
+    """Engine's own CRN sampling vs independent oracle runs: every legal
+    k agrees on mean/p95 latency, utilization, and wasted-work fraction
+    within MC tolerance (tolerances ~2x the observed worst deviation at
+    these sample sizes)."""
+    sc = Scenario(dist, scaling, N, delta=delta)
+    sw = sweep(sc, loads=[lam], num_jobs=JOBS, reps=4, preempt=preempt,
+               cancel_overhead=oh, seed=7, warmup=WARM)
+    for i, k in enumerate(sw.ks):
+        cfg = ClusterConfig(N, k, lam, num_jobs=JOBS, preempt=preempt,
+                            cancel_overhead=oh, seed=11, warmup=WARM)
+        ro = simulate(cfg, dist, scaling, delta=delta,
+                      backend="oracle").summary()
+        bs = sw.summary(0, i)
+        assert abs(bs["mean"] - ro["mean"]) / ro["mean"] < 0.15, (k, bs, ro)
+        assert abs(bs["p95"] - ro["p95"]) / ro["p95"] < 0.35, (k, bs, ro)
+        assert abs(bs["utilization"] - ro["utilization"]) < 0.05, (k, bs, ro)
+        assert abs(bs["wasted_frac"] - ro["wasted_frac"]) < 0.05, (k, bs, ro)
+
+
+def test_sweep_is_one_compile():
+    sc = Scenario(ShiftedExp(1.0, 3.0), Scaling.SERVER_DEPENDENT, 6)
+    before = sweep_compile_count()
+    sw = sweep(sc, loads=[0.01, 0.03, 0.05], num_jobs=200, reps=2, seed=0)
+    assert sweep_compile_count() == before + 1
+    assert sw.mean.shape == (3, len(sw.ks))
+    # same shapes, different loads/seed: zero recompiles
+    sweep(sc, loads=[0.02, 0.04, 0.06], num_jobs=200, reps=2, seed=5)
+    assert sweep_compile_count() == before + 1
+
+
+def test_sweep_crn_is_deterministic():
+    sc = Scenario(BiModal(10.0, 0.3), Scaling.SERVER_DEPENDENT, 8)
+    a = sweep(sc, loads=[0.02, 0.05], num_jobs=300, seed=3)
+    b = sweep(sc, loads=[0.02, 0.05], num_jobs=300, seed=3)
+    np.testing.assert_array_equal(a.mean, b.mean)
+    np.testing.assert_array_equal(a.wasted_frac, b.wasted_frac)
+
+
+# --------------------------------------------------------------------------
+# Warm-up discard
+# --------------------------------------------------------------------------
+
+def test_warmup_discard_in_result_summary():
+    lat = np.concatenate([np.full(10, 100.0), np.full(90, 1.0)])
+    res = ClusterResult(latencies=lat, utilization=0.5, wasted_frac=0.0,
+                        throughput=1.0, warmup=10)
+    assert res.summary()["p50"] == 1.0 and res.summary()["mean"] == 1.0
+    assert res.steady_latencies.size == 90
+    no_warm = ClusterResult(latencies=lat, utilization=0.5, wasted_frac=0.0,
+                            throughput=1.0)
+    assert no_warm.summary()["mean"] > 1.0      # transient mixed in
+
+
+def test_warmup_raises_steady_state_estimate_under_load():
+    """Early jobs see an emptier-than-steady-state system, so discarding
+    the transient must not LOWER the mean-latency estimate."""
+    sc = Scenario(ShiftedExp(1.0, 3.0), Scaling.SERVER_DEPENDENT, 8)
+    cold = sweep(sc, loads=[0.2], ks=[4], num_jobs=1500, seed=1, warmup=0)
+    warm = sweep(sc, loads=[0.2], ks=[4], num_jobs=1500, seed=1, warmup=300)
+    assert warm.mean[0, 0] >= cold.mean[0, 0]
+    with pytest.raises(ValueError):
+        sweep(sc, loads=[0.2], num_jobs=100, warmup=100)
+    with pytest.raises(ValueError):
+        ClusterConfig(n_workers=4, k=2, arrival_rate=0.1, num_jobs=10,
+                      warmup=10)
+
+
+def test_sweep_input_validation_matches_across_backends():
+    """Both surface runners reject bad loads/reps with the same clear
+    ValueError (not a deep ZeroDivisionError or a silent NaN surface)."""
+    from repro.runtime.cluster_oracle import sweep_oracle
+    sc = Scenario(ShiftedExp(1.0, 1.0), Scaling.SERVER_DEPENDENT, 4)
+    for run in (sweep, sweep_oracle):
+        with pytest.raises(ValueError, match="loads"):
+            run(sc, loads=[0.0], num_jobs=50)
+        with pytest.raises(ValueError, match="loads"):
+            run(sc, loads=[], num_jobs=50)
+        with pytest.raises(ValueError, match="reps"):
+            run(sc, loads=[0.1], num_jobs=50, reps=0)
+    with pytest.raises(ValueError, match="backend"):
+        latency_vs_redundancy(ShiftedExp(1.0, 1.0),
+                              Scaling.SERVER_DEPENDENT, 4, 0.1,
+                              num_jobs=50, backend="quantum")
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous workers + pluggable arrivals (batched-only workload shapes)
+# --------------------------------------------------------------------------
+
+def test_heterogeneous_speeds_slow_the_fleet_consistently():
+    fast = Scenario(ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, 8)
+    slow = Scenario(ShiftedExp(1.0, 5.0), Scaling.SERVER_DEPENDENT, 8,
+                    worker_speeds=(1, 1, 1, 1, 1, 1, 3, 3))
+    a = sweep(fast, loads=[0.01], num_jobs=500, seed=0)
+    b = sweep(slow, loads=[0.01], num_jobs=500, seed=0)
+    assert (b.mean >= a.mean - 1e-9).all()
+    assert b.mean.max() > a.mean.max()
+    # and the oracle agrees on the same sample path (shared substrate)
+    cfg = ClusterConfig(8, 4, 0.01, num_jobs=300, seed=2,
+                        worker_speeds=(1, 1, 1, 1, 1, 1, 3, 3))
+    ro = simulate(cfg, fast.dist, fast.scaling, backend="oracle")
+    rb = simulate(cfg, fast.dist, fast.scaling, backend="batched")
+    np.testing.assert_allclose(rb.latencies, ro.latencies,
+                               rtol=1e-3, atol=2e-2)
+
+
+def test_worker_speeds_validation():
+    with pytest.raises(ValueError):
+        Scenario(ShiftedExp(1.0, 1.0), Scaling.ADDITIVE, 4,
+                 worker_speeds=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        Scenario(ShiftedExp(1.0, 1.0), Scaling.ADDITIVE, 2,
+                 worker_speeds=(1.0, -1.0))
+
+
+def test_arrival_process_shapes():
+    import jax
+    key = jax.random.PRNGKey(0)
+    det = DeterministicArrivals(rate=2.0).times(key, 5)
+    np.testing.assert_allclose(np.asarray(det),
+                               [0.5, 1.0, 1.5, 2.0, 2.5], rtol=1e-6)
+    # MMPP normalization: long-run mean rate == requested rate
+    mm = MMPPArrivals(rate=1.0, slow=0.25, burst=4.0, switch=0.05)
+    t = np.asarray(mm.times(key, 40_000, 0.7))
+    assert abs(40_000 / t[-1] - 0.7) / 0.7 < 0.1
+    with pytest.raises(ValueError):
+        MMPPArrivals(rate=1.0, switch=0.0)
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate=0.0)
+
+
+def test_burstiness_orders_tail_latency():
+    """At one mean rate: clockwork < Poisson <= MMPP-burst p99 (burst
+    trains pile queues the memoryless stream never builds)."""
+    base = dict(num_jobs=1200, ks=[4], seed=9, warmup=120)
+    mk = lambda arr: Scenario(ShiftedExp(1.0, 3.0),
+                              Scaling.SERVER_DEPENDENT, 8, arrivals=arr)
+    lam = 0.12
+    det = sweep(mk(DeterministicArrivals(rate=1.0)), loads=[lam], **base)
+    poi = sweep(mk(PoissonArrivals(rate=1.0)), loads=[lam], **base)
+    mmpp = sweep(mk(MMPPArrivals(rate=1.0, slow=0.2, burst=5.0,
+                                 switch=0.02)), loads=[lam], **base)
+    assert det.p99[0, 0] < poi.p99[0, 0] < mmpp.p99[0, 0]
+
+
+# --------------------------------------------------------------------------
+# Dispatchers: backend routing + the typed surface
+# --------------------------------------------------------------------------
+
+def test_latency_vs_redundancy_backend_parity():
+    d = BiModal(10.0, 0.3)
+    oc = latency_vs_redundancy(d, Scaling.ADDITIVE, 12, 0.01, num_jobs=600)
+    bc = latency_vs_redundancy(d, Scaling.ADDITIVE, 12, 0.01, num_jobs=600,
+                               backend="batched")
+    assert set(oc) == set(bc)
+    best_o = min(oc, key=lambda k: oc[k]["mean"])
+    best_b = min(bc, key=lambda k: bc[k]["mean"])
+    assert best_o == best_b
+
+
+def test_optimal_k_vs_load_backends_agree():
+    d = BiModal(10.0, 0.3)
+    loads = [0.01, 0.06]
+    kb = optimal_k_vs_load(d, Scaling.ADDITIVE, 12, loads, num_jobs=600,
+                           backend="batched", warmup=60)
+    ko = optimal_k_vs_load(d, Scaling.ADDITIVE, 12, loads, num_jobs=600,
+                           backend="oracle", warmup=60)
+    assert kb == ko
+    assert set(kb) == set(float(v) for v in loads)
+
+
+def test_dispatchers_route_speeds_and_arrivals_to_both_backends():
+    """worker_speeds / arrivals must reach the lanes on the DEFAULT
+    batched path, not only through ClusterConfig on the oracle path."""
+    d = ShiftedExp(1.0, 3.0)
+    speeds = (1, 1, 1, 1, 1, 1, 4.0, 4.0)
+    slow = optimal_k_vs_load(d, Scaling.SERVER_DEPENDENT, 8, [0.01],
+                             num_jobs=300, worker_speeds=speeds)
+    assert set(slow) == {0.01}
+    het = latency_vs_redundancy(d, Scaling.SERVER_DEPENDENT, 8, 0.01,
+                                num_jobs=300, backend="batched",
+                                worker_speeds=speeds)
+    hom = latency_vs_redundancy(d, Scaling.SERVER_DEPENDENT, 8, 0.01,
+                                num_jobs=300, backend="batched")
+    assert het[1]["mean"] > hom[1]["mean"]    # slow pair visible in lanes
+    bursty = latency_vs_redundancy(
+        d, Scaling.SERVER_DEPENDENT, 8, 0.01, num_jobs=300,
+        backend="batched",
+        arrivals=MMPPArrivals(rate=1.0, slow=0.2, burst=5.0, switch=0.02))
+    assert set(bursty) == set(hom)
+
+
+def test_oracle_surface_is_really_the_oracle():
+    """LoadAwareLatency(backend='oracle').surface must run the discrete-
+    event loop (same numbers as direct oracle cells), not silently fall
+    through to the batched engine."""
+    from repro.api import LoadAwareLatency
+    sc = Scenario(ShiftedExp(1.0, 3.0), Scaling.SERVER_DEPENDENT, 6)
+    obj = LoadAwareLatency(arrival_rate=0.05, num_jobs=300, seed=4,
+                           warmup=30, backend="oracle")
+    surf = obj.surface(sc, [0.05])
+    for j, k in enumerate(surf.ks):
+        cfg = ClusterConfig(6, k, 0.05, num_jobs=300, seed=4, warmup=30)
+        direct = simulate(cfg, sc.dist, sc.scaling,
+                          backend="oracle").summary()
+        assert surf.summary(0, j) == pytest.approx(direct)
+    # and the objective curve agrees with the surface row
+    assert obj.curve(sc, list(surf.ks)) == pytest.approx(
+        {int(k): surf.mean[0, j] for j, k in enumerate(surf.ks)})
+
+
+def test_planner_kstar_vs_load_typed_surface():
+    from repro.api import LoadAwareLatency, Planner, Scenario as Sc
+    sc = Sc(BiModal(10.0, 0.3), Scaling.ADDITIVE, 12)
+    planner = Planner()
+    kmap = planner.kstar_vs_load(sc, [0.01, 0.06],
+                                 LoadAwareLatency(num_jobs=600, reps=2))
+    assert set(kmap) == {0.01, 0.06}
+    assert all(12 % k == 0 for k in kmap.values())
+    # load -> 0 recovers the paper's single-job k*
+    assert kmap[0.01] == planner.plan(sc).k

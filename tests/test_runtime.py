@@ -154,6 +154,27 @@ def test_failure_adjusted_model():
     assert abs(m.eps - 0.15) < 1e-9
 
 
+def test_bimodal_fit_is_scale_invariant():
+    """Telemetry from a cluster whose fast mode is m time units (not 1)
+    must map onto the paper's unit-mode BiModal convention: samples are
+    normalized by the estimated low mode BEFORE fitting, so fit(c*x)
+    == fit(x) for any time scale c > 0."""
+    from repro.core.distributions import fit_service_time
+    rng = np.random.default_rng(0)
+    # jittered two-mode telemetry in "unit" time
+    low = 1.0 + 0.05 * rng.standard_normal(1600)
+    high = 8.0 + 0.3 * rng.standard_normal(400)
+    x = np.concatenate([low, high])
+    base = fit_service_time(x, "bimodal")
+    for scale in (7.3, 173.0, 0.004):
+        scaled = fit_service_time(scale * x, "bimodal")
+        assert abs(scaled.B - base.B) < 1e-9 * max(base.B, 1.0)
+        assert scaled.eps == base.eps
+    # and the fit recovers the generating (B, eps) on non-unit telemetry
+    assert abs(base.B - 8.0) < 0.3
+    assert abs(base.eps - 0.2) < 0.02
+
+
 def test_telemetry_fit_recovers_family():
     telem = Telemetry(window=4096)
     key = jax.random.PRNGKey(0)
