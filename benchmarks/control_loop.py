@@ -1,0 +1,131 @@
+"""Closed-loop control vs static plans: regret on nonstationary traces.
+
+Three regime scripts, each a piecewise-stationary world the controller
+must track (the paper's planner is open-loop: any static plan is optimal
+for at most one regime):
+
+  * families   : S-Exp -> rare catastrophic Bi-Modal -> Pareto (the
+                 acceptance trace; each regime's k* differs)
+  * eps_ramp   : Bi-Modal straggle probability ramps 0.05 -> 0.3 -> 0.7
+                 (coding retires toward splitting, Thm 8)
+  * tail_drift : Pareto tail heavies alpha 5 -> 2.5 -> 1.2 (k* walks
+                 down from splitting toward coding, Thm 6)
+
+For each script the controller replays the trace (common random numbers
+with every static plan and the clairvoyant per-regime oracle) and the
+bench gates:  controller regret <= 15%; on the families script every
+static plan pays >= 2x the controller's regret in at least one regime;
+re-plan latency < 10 ms per drift event on the closed-form path.
+
+    PYTHONPATH=src python -m benchmarks.control_loop            # full gate
+    PYTHONPATH=src python -m benchmarks.control_loop --smoke    # CI: tiny
+
+Emits ``bench_results/BENCH_control.json`` (``_smoke`` variant for CI so
+the committed full-gate artifact is never clobbered).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.api import Scenario
+from repro.control import RedundancyController, replay
+from repro.core import (BiModal, Pareto, Regime, Scaling, ShiftedExp,
+                        sample_regime_trace)
+
+from .common import Check, emit_json
+
+PRIOR = BiModal(10.0, 0.3)
+SCALING = Scaling.SERVER_DEPENDENT
+
+
+def _scripts(steps: int):
+    return {
+        "families": [Regime(ShiftedExp(1.0, 10.0), steps),
+                     Regime(BiModal(1e4, 5e-4), steps),
+                     Regime(Pareto(1.0, 2.5), steps)],
+        "eps_ramp": [Regime(BiModal(10.0, 0.05), steps),
+                     Regime(BiModal(10.0, 0.3), steps),
+                     Regime(BiModal(10.0, 0.7), steps)],
+        "tail_drift": [Regime(Pareto(1.0, 5.0), steps),
+                       Regime(Pareto(1.0, 2.5), steps),
+                       Regime(Pareto(1.0, 1.2), steps)],
+    }
+
+
+def run(n: int = 24, steps_per_regime: int = 600, seed: int = 0,
+        smoke: bool = False, **_) -> bool:
+    if smoke:
+        n, steps_per_regime = 12, 120
+    check = Check("control_loop")
+    regret_gate = 0.15
+    results = {}
+    for name, regimes in _scripts(steps_per_regime).items():
+        trace = sample_regime_trace(regimes, SCALING, n, seed=seed)
+        ctl = RedundancyController(Scenario(PRIOR, SCALING, n))
+        res = replay(trace, ctl)
+        s = res.summary()
+        results[name] = s
+        check.expect(
+            f"[{name}] controller regret <= {regret_gate:.0%} vs "
+            f"clairvoyant per-regime oracle",
+            res.regret <= regret_gate,
+            f"{res.regret:.1%} (oracle k per regime {res.oracle_k})")
+        best_static = min(s["static_regret"].values())
+        print(f"    best static plan regret {best_static:.1%}; controller "
+              f"{res.regret:.1%}; switches {s['switches']}")
+        if name == "families" and not smoke:
+            ratio = min(s["worst_static_regime_regret"].values()) / \
+                max(res.regret, 1e-9)
+            check.expect(
+                "[families] EVERY static plan pays >= 2x the controller's "
+                "regret in at least one regime",
+                all(w >= 2.0 * res.regret for w in
+                    s["worst_static_regime_regret"].values()),
+                f"min worst-regime static regret / controller regret = "
+                f"{ratio:.1f}x")
+        if res.replan_ms:
+            check.expect(
+                f"[{name}] re-plan latency < 10 ms per event "
+                f"(closed-form path)",
+                max(res.replan_ms) < 10.0,
+                f"max {max(res.replan_ms):.2f} ms over "
+                f"{len(res.replan_ms)} events")
+        check.expect(
+            f"[{name}] controller is deterministic (replay reproduces "
+            f"the policy trajectory)",
+            np.array_equal(
+                res.policy_k,
+                replay(trace, RedundancyController(
+                    Scenario(PRIOR, SCALING, n))).policy_k))
+
+    emit_json("BENCH_control_smoke" if smoke else "BENCH_control", dict(
+        n=n, steps_per_regime=steps_per_regime, seed=seed, smoke=smoke,
+        scaling=SCALING.value, prior=str(PRIOR),
+        scripts={k: {kk: vv for kk, vv in v.items() if kk != "replan_ms"}
+                 for k, v in results.items()},
+        replan_ms={k: [round(m, 3) for m in v["replan_ms"]]
+                   for k, v in results.items()},
+        observe_ms_per_step={
+            k: round(v["observe_seconds_per_step"] * 1e3, 3)
+            for k, v in results.items()},
+    ))
+    return check.summary()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traces: wiring + sanity only (CI)")
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--steps-per-regime", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    return 0 if run(n=args.n, steps_per_regime=args.steps_per_regime,
+                    seed=args.seed, smoke=args.smoke) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

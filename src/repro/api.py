@@ -58,7 +58,7 @@ from .core.scenario import (ArrivalProcess, DeterministicArrivals,
 __all__ = [
     "Scenario", "Policy", "Plan", "Objective",
     "MeanCompletionTime", "QuantileCompletionTime", "LoadAwareLatency",
-    "FRCompletionTime", "Planner",
+    "FRCompletionTime", "Planner", "AdaptivePlanner",
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
     "MMPPArrivals",
 ]
@@ -342,3 +342,60 @@ class Planner:
             theorem_k=tk,
             theorem_name=tname,
         )
+
+
+# --------------------------------------------------------------------------
+# The closed-loop planner
+# --------------------------------------------------------------------------
+
+class AdaptivePlanner:
+    """``Planner`` with the loop closed: feed it telemetry, it re-plans.
+
+    Wraps ``repro.control.RedundancyController`` — streaming per-family
+    estimators with exponential forgetting, CUSUM + straggle-EWMA drift
+    detection, windowed exact-likelihood refits, hysteresis-gated
+    closed-form re-planning, and actuation into the runtime:
+
+        >>> ap = AdaptivePlanner(Scenario(prior_dist, scaling, n))
+        >>> for step_times in telemetry_stream:      # doctest: +SKIP
+        ...     event = ap.observe(step_times)       # per-CU times
+        ...     if event and event.switched:
+        ...         redeploy(ap.policy)
+
+    ``scenario.dist`` is the prior: it sets the initial policy until the
+    boot window of real telemetry commits a fitted model.  Attach
+    runtime hooks (``control.TrainerActuator``,
+    ``control.HedgedServeActuator``, or any object with
+    ``apply(policy, model)``) via ``actuators=`` or ``attach``.
+    """
+
+    def __init__(self, scenario: Scenario, objective: Optional[Objective] = None,
+                 config=None, detector=None, actuators: Sequence = ()):
+        from .control.controller import RedundancyController
+        self.controller = RedundancyController(
+            scenario, objective=objective, config=config, detector=detector,
+            actuators=actuators)
+
+    def observe(self, worker_times) -> Optional["ControlEvent"]:
+        """Feed one step's per-CU completion times; returns the commit
+        event when the controller re-planned (else None)."""
+        return self.controller.observe(worker_times)
+
+    def attach(self, actuator) -> "AdaptivePlanner":
+        self.controller.actuators.append(actuator)
+        return self
+
+    @property
+    def policy(self) -> Policy:
+        """The currently committed redundancy decision."""
+        return self.controller.policy
+
+    @property
+    def model(self):
+        """The committed ``FittedModel`` (None until booted)."""
+        return self.controller.model
+
+    @property
+    def events(self):
+        """Every committed control decision so far."""
+        return self.controller.events

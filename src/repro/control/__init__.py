@@ -1,0 +1,37 @@
+"""Closed-loop adaptive redundancy control.
+
+The paper's result — the optimal (n, k) depends sharply on the
+service-time family and scaling model — becomes actionable only when the
+system LEARNS the distribution online and re-plans when it drifts.  This
+package closes that loop on top of the fast engines of PRs 1-3:
+
+  estimators.py   streaming sufficient-statistic estimators for the three
+                  families with exponential forgetting + exact-likelihood
+                  model selection (``OnlineSelector``, ``FittedModel``)
+  detector.py     change-point detection on the service-time stream: CUSUM
+                  on standardized log-survival residuals + a
+                  straggle-fraction EWMA, emitting typed ``DriftEvent``s
+  controller.py   ``RedundancyController``: drift -> windowed refit ->
+                  closed-form re-plan (microseconds) -> hysteresis /
+                  switching-cost gate -> actuation into the runtime
+  replay.py       closed-loop evaluation: replay a ``RegimeTrace`` through
+                  the controller and score regret vs. the clairvoyant
+                  per-regime oracle
+
+The typed front door is ``repro.api.AdaptivePlanner``.
+"""
+from .controller import (ControlEvent, ControllerConfig,  # noqa: F401
+                         HedgedServeActuator, RedundancyController,
+                         TrainerActuator)
+from .detector import DriftDetector, DriftEvent  # noqa: F401
+from .estimators import (BiModalEstimator, FittedModel,  # noqa: F401
+                         OnlineSelector, ParetoEstimator,
+                         ShiftedExpEstimator, fit_window)
+from .replay import ReplayResult, replay  # noqa: F401
+
+__all__ = [
+    "BiModalEstimator", "ControlEvent", "ControllerConfig", "DriftDetector",
+    "DriftEvent", "FittedModel", "HedgedServeActuator", "OnlineSelector",
+    "ParetoEstimator", "RedundancyController", "ReplayResult",
+    "ShiftedExpEstimator", "fit_window", "replay",
+]

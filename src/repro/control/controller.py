@@ -1,0 +1,361 @@
+"""The closed-loop redundancy controller.
+
+Dataflow (DESIGN.md §7):
+
+    telemetry batch --> OnlineSelector (streaming fits, forgetting)
+                    --> DriftDetector (CUSUM + straggle EWMA vs committed model)
+    drift alarm     --> wait for ``refit_samples`` post-change samples
+                    --> one-shot exact-likelihood refit of the post-change
+                        window (``fit_window``)
+                    --> rule-of-three hedge if the fit claims stragglers
+                        are impossible AND its k-curve is flat
+                    --> ``Planner.plan`` on the closed-form path
+                        (microseconds at production n)
+                    --> hysteresis + switching-cost gate
+                    --> actuators (trainer step config, hedged serving, ...)
+
+Decisions are pure functions of the sample stream and the configuration —
+no wall-clock, no internal RNG — so a replayed trace reproduces the exact
+same policy trajectory (pinned by tests).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core.distributions import BiModal, ShiftedExp
+from ..core.policy import Policy
+from ..core.scenario import Scenario
+from .detector import DriftDetector, DriftEvent
+from .estimators import (FittedModel, OnlineSelector, fit_window,
+                         model_median)
+
+__all__ = ["ControlEvent", "ControllerConfig", "RedundancyController",
+           "TrainerActuator", "HedgedServeActuator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Knobs of the control loop (all sample counts are CU samples)."""
+
+    boot_samples: int = 96      # evidence before the first committed plan
+    refit_samples: int = 96     # post-change samples before a drift commit
+    max_window: int = 1024      # refit window cap
+    hysteresis: float = 0.10    # min relative predicted gain to switch k
+    switch_cost: float = 0.0    # absolute time units charged per switch
+    amortize_steps: int = 100   # steps a switch is amortized over
+    refresh_every: int = 1024   # streaming-estimate resync cadence; 0 = off
+    hedge: bool = True          # rule-of-three rare-straggler hedge
+    hedge_B: float = 100.0      # hedge straggler magnitude (plan-insensitive
+                                # beyond ~100x, cf. elastic.failure_adjusted_model)
+    hedge_flat_tol: float = 0.15  # curve spread below which the fit carries
+                                  # no k-preference and the hedge may decide
+    forget: float = 0.999       # streaming estimator forgetting
+    buffer: int = 4096          # telemetry ring for change-point refits
+
+    def __post_init__(self):
+        if self.boot_samples < 2 or self.refit_samples < 2:
+            raise ValueError("boot/refit sample minimums must be >= 2")
+        if not (0.0 <= self.hysteresis):
+            raise ValueError("hysteresis must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlEvent:
+    """One committed control decision (model and/or policy update)."""
+
+    kind: str                   # "boot" | "drift" | "refresh"
+    at: int                     # absolute CU-sample index of the commit
+    model: FittedModel
+    hedged: bool                # planned under the rare-straggler hedge
+    old_policy: Policy
+    new_policy: Policy          # == old_policy when the gate held the switch
+    switched: bool
+    replan_ms: float            # wall time of the Planner.plan call
+    drift: Optional[DriftEvent] = None
+
+    @property
+    def family(self) -> str:
+        return self.model.family
+
+
+class Actuator:
+    """Anything that applies a committed (policy, model) to the runtime."""
+
+    def apply(self, policy: Policy, model: FittedModel) -> None:
+        raise NotImplementedError
+
+
+class TrainerActuator(Actuator):
+    """Re-plans a ``CodedTrainer`` in place: swaps its step config to the
+    new policy (the step_cfg setter rebuilds the jitted step), rounding
+    the unique batch by the shared ``elastic.round_unique_batch``
+    contract."""
+
+    def __init__(self, trainer):
+        self.trainer = trainer
+        # round from the ORIGINAL unique batch on every apply — rounding
+        # from the current (already-rounded) config would ratchet the
+        # global batch monotonically upward across re-plans and never
+        # restore it when a compatible k returns
+        self.base_unique_batch = int(trainer.step_cfg.unique_batch)
+        self.adjustments: List[int] = []    # logged unique-batch roundings
+
+    def apply(self, policy: Policy, model: FittedModel) -> None:
+        from ..runtime.coded_step import CodedStepConfig
+        from ..runtime.elastic import round_unique_batch
+        rounded, adj = round_unique_batch(self.base_unique_batch,
+                                          policy.num_groups)
+        cfg = CodedStepConfig.from_policy(policy, unique_batch=rounded)
+        if cfg == self.trainer.step_cfg:
+            return    # actuators fire on EVERY commit; don't rebuild the
+                      # jitted step when the config is unchanged
+        if adj:
+            self.adjustments.append(adj)
+        self.trainer.step_cfg = cfg
+
+
+class HedgedServeActuator(Actuator):
+    """Re-plans the hedged-serving replica count from the committed model
+    (``launch.serve.plan_replicas``; the hedge gain is a tail RATIO, so
+    the unit-convention BiModal scale cancels)."""
+
+    def __init__(self, max_r: int = 4, cost_weight: float = 0.25):
+        self.max_r = max_r
+        self.cost_weight = cost_weight
+        self.replicas = 1
+
+    def apply(self, policy: Policy, model: FittedModel) -> None:
+        from ..launch.serve import plan_replicas
+        self.replicas = plan_replicas(model.dist, max_r=self.max_r,
+                                      cost_weight=self.cost_weight)
+
+
+class RedundancyController:
+    """Closed-loop (n, k) control for one scenario skeleton.
+
+    ``scenario`` fixes everything but the service-time law: n, the
+    scaling model, exogenous delta, constraints.  Its ``dist`` is the
+    PRIOR — it sets the initial policy until ``boot_samples`` of real
+    telemetry arrive.  ``observe`` is the single entry point: feed it the
+    per-CU completion times of each step and it returns a ``ControlEvent``
+    when (and only when) a commit happened.
+    """
+
+    def __init__(self, scenario: Scenario,
+                 objective=None,
+                 config: Optional[ControllerConfig] = None,
+                 detector: Optional[DriftDetector] = None,
+                 selector: Optional[OnlineSelector] = None,
+                 actuators: Sequence[Actuator] = ()):
+        from ..api import Planner
+        self.scenario = scenario
+        self.config = config or ControllerConfig()
+        self.planner = Planner(objective)
+        self.detector = detector or DriftDetector()
+        self.selector = selector or OnlineSelector(forget=self.config.forget)
+        self.actuators = list(actuators)
+        self._policy = self.planner.plan(scenario).policy
+        self.model: Optional[FittedModel] = None
+        self.events: List[ControlEvent] = []
+        self._buffer = collections.deque(maxlen=self.config.buffer)
+        self._seen = 0
+        self._pending: Optional[DriftEvent] = None
+        self._last_commit = 0
+
+    # -- read side ----------------------------------------------------------
+    @property
+    def policy(self) -> Policy:
+        return self._policy
+
+    @property
+    def num_samples(self) -> int:
+        return self._seen
+
+    @property
+    def switches(self) -> List[ControlEvent]:
+        return [e for e in self.events if e.switched]
+
+    def drift_events(self) -> List[ControlEvent]:
+        return [e for e in self.events if e.kind == "drift"]
+
+    # -- the loop -----------------------------------------------------------
+    def observe(self, worker_times: np.ndarray) -> Optional[ControlEvent]:
+        """Feed one step's per-CU completion times; maybe commit.
+
+        When the scenario carries an exogenous per-CU ``delta`` (known
+        deterministic work), the controller estimates the NOISE
+        distribution: delta is subtracted here once and re-injected at
+        planning time.  Fitting the raw times would absorb delta into the
+        fitted parameters and the re-plan scenario would then add it
+        again — a double count that distorts the whole k-curve.
+        """
+        x = np.asarray(worker_times, dtype=np.float64).ravel()
+        x = x[np.isfinite(x)]
+        if x.size == 0:
+            return None
+        if self.scenario.delta is not None:
+            x = np.maximum(x - self.scenario.delta, 1e-12)
+        start = self._seen
+        self._seen += x.size
+        self._buffer.extend(x.tolist())
+        self.selector.update(x)
+
+        if self.model is None:                           # bootstrapping
+            if self._seen >= self.config.boot_samples:
+                return self._commit("boot", self._window(self._seen))
+            return None
+
+        if self._pending is not None:                    # drift: wait + refit
+            return self._maybe_drift_commit()
+
+        alarm = self.detector.update(x, at=start)
+        if alarm is not None:
+            self._pending = alarm
+            return self._maybe_drift_commit()
+
+        if self.config.refresh_every and \
+                self._seen - self._last_commit >= self.config.refresh_every:
+            model = self.selector.best()
+            if model is not None:
+                return self._commit("refresh", window=None, model=model)
+            self._last_commit = self._seen     # nothing to sync yet
+        return None
+
+    # -- internals ----------------------------------------------------------
+    def _maybe_drift_commit(self) -> Optional[ControlEvent]:
+        """Commit the pending drift once enough GUARANTEED post-change
+        samples exist.  The window is anchored at the ALARM index, not the
+        CUSUM start estimate: the estimate can reach back into pre-change
+        wander (the statistic need not have sat at zero when the change
+        hit), and a contaminated window misfits the family; everything
+        after the alarm is post-change by construction."""
+        if self._seen - self._pending.at < self.config.refit_samples:
+            return None
+        ev = self._commit(
+            "drift", self._window(self._seen - self._pending.at),
+            drift=self._pending)
+        self._pending = None
+        return ev
+
+    def _window(self, length: int) -> np.ndarray:
+        take = min(length, self.config.max_window, len(self._buffer))
+        return np.asarray(list(self._buffer)[-take:], dtype=np.float64)
+
+    def _commit(self, kind: str, window: Optional[np.ndarray],
+                drift: Optional[DriftEvent] = None,
+                model: Optional[FittedModel] = None) -> Optional[ControlEvent]:
+        fitted = model if model is not None else fit_window(window)
+        plan_dist, plan_delta, hedged, unit = self._hedged_plan_dist(fitted)
+        scenario = dataclasses.replace(
+            self.scenario, dist=plan_dist, delta=plan_delta)
+        t0 = time.perf_counter()
+        plan = self.planner.plan(scenario)
+        replan_ms = (time.perf_counter() - t0) * 1e3
+        new = plan.policy
+        old = self._policy
+        switched = False
+        if new.k != old.k:
+            cost_old = plan.curve.get(old.k)
+            cost_new = plan.curve[new.k]
+            if cost_old is None:
+                switched = True          # old k no longer legal: must move
+            else:
+                # the curve is in the plan model's time units (normalized
+                # low-mode or hedge-typical units); switch_cost is in raw
+                # time units, so the absolute gain must be re-scaled
+                gain = cost_old - cost_new
+                rel = gain / max(cost_new, 1e-12)
+                switched = (rel >= self.config.hysteresis and
+                            gain * unit * self.config.amortize_steps
+                            >= self.config.switch_cost)
+        if switched:
+            self._policy = new
+        # actuators see EVERY committed model, not just k switches —
+        # model-dependent actuation (e.g. hedged-serving replicas) must
+        # track a family change even when k* happens to stay put
+        for a in self.actuators:
+            a.apply(self._policy, fitted)
+        self.model = fitted
+        self.detector.rebase(fitted, at=self._seen)
+        if kind == "drift" and window is not None:
+            # restart the streaming estimators from the post-change window
+            self.selector.reset(seed_samples=window)
+        self._last_commit = self._seen
+        event = ControlEvent(
+            kind=kind, at=self._seen, model=fitted, hedged=hedged,
+            old_policy=old, new_policy=self._policy, switched=switched,
+            replan_ms=replan_ms, drift=drift)
+        if kind != "refresh" or switched:
+            # refreshes that change nothing are silent bookkeeping
+            self.events.append(event)
+            return event
+        return None
+
+    def _hedged_plan_dist(self, fitted: FittedModel):
+        """What to PLAN under (the committed model itself is always the
+        fitted one — detection stays calibrated).  Returns
+        ``(dist, delta, hedged, unit)`` where ``unit`` is the raw-time
+        value of one plan-curve unit (the switching-cost gate needs the
+        gain in raw time, and the hedge can change the curve's units).
+
+        The fit lives in NOISE space (``observe`` subtracted any exogenous
+        scenario delta): a ShiftedExp fit folds that delta back into its
+        shift (a Scenario rejects an external delta alongside S-Exp); the
+        other families re-inject it via the scenario, re-expressed in the
+        fit's normalized units for Bi-Modal.
+
+        Rule of three: with m effective samples and no straggler beyond
+        2x the median observed, straggle rates up to ~3/m are statistically
+        indistinguishable from zero.  If additionally the fitted k-curve
+        is flat (spread < ``hedge_flat_tol``: the model expresses NO
+        preference over k, so the argmin is a tie-break artifact), plan
+        against a Bi-Modal straggler of that undetectable rate instead —
+        the paper's Sec. VI failure-as-straggling hedge.  A fit whose
+        curve does discriminate (heavy tail, real straggler mode) is
+        trusted as-is.
+        """
+        cfg = self.config
+        dist = fitted.dist
+        delta = self.scenario.delta
+        unit = fitted.scale       # Bi-Modal curves are in low-mode units
+        if isinstance(dist, ShiftedExp):
+            if delta is not None:
+                dist = ShiftedExp(delta=dist.delta + delta, W=dist.W)
+            delta = None                 # S-Exp carries its shift internally
+        elif delta is not None:
+            delta = delta / fitted.scale
+        if not cfg.hedge:
+            return dist, delta, False, unit
+        m = max(fitted.num_samples, 1.0)
+        bound = 3.0 / m
+        if fitted.straggle_p0() >= bound:
+            return dist, delta, False, unit
+        if isinstance(dist, BiModal):
+            # the fit itself says "straggler mode exists but is rarer than
+            # the evidence can resolve" (e.g. the last straggler decayed
+            # out of the forgetting window): plan with the straggle
+            # probability FLOORED at the rule-of-three bound, keeping the
+            # observed magnitude B — splitting must not look free on
+            # 1/m-resolution evidence.  A well-resolved eps stays as-is
+            # (a B <= 2 fit reaches here with any eps, since tail(2) = 0).
+            eps = min(max(dist.eps, bound), 1.0)
+            return BiModal(B=dist.B, eps=eps), delta, eps != dist.eps, unit
+        probe = self.planner.curve(dataclasses.replace(
+            self.scenario, dist=dist, delta=delta))
+        lo, hi = min(probe.values()), max(probe.values())
+        if hi - lo > cfg.hedge_flat_tol * max(lo, 1e-12):
+            return dist, delta, False, unit
+        # the hedge Bi-Modal's unit mode is the fitted TYPICAL service
+        # time (incl. any folded shift); delta re-expressed on that axis
+        typical = max(fitted.scale * model_median(dist), 1e-12)
+        hedge_delta = float(dist.shift) if dist.shift > 0 \
+            else self.scenario.delta
+        if hedge_delta is not None:
+            hedge_delta = hedge_delta / typical
+        return (BiModal(B=cfg.hedge_B, eps=min(bound, 1.0)), hedge_delta,
+                True, typical)

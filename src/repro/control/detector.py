@@ -1,0 +1,130 @@
+"""Drift detection on the service-time stream.
+
+Two complementary channels, both model-referenced (they watch the stream
+THROUGH the committed ``FittedModel``, so "drift" means "the world no
+longer looks like the model the current plan was derived from"):
+
+  * CUSUM on standardized log-survival residuals.  Under the committed
+    model the mid-distribution survival U_i = pit_mid(x_i) is
+    ~Uniform(0,1), so r_i = -log U_i is ~Exp(1) and z_i = r_i - 1 has
+    mean 0.  Two one-sided CUSUMs accumulate (z - slack) and (-z - slack);
+    either crossing ``threshold`` is an alarm.  Residuals are winsorized
+    at ``cap`` so ONE freak sample can never alarm by itself (a committed
+    heavy-tail model legitimately produces occasional huge residuals);
+    at least two capped spikes in quick succession are required.  The
+    index where the alarming side last sat at zero is the standard CUSUM
+    change-point estimate, handed to the controller so the refit window
+    can exclude pre-change samples.
+
+  * A straggle-fraction EWMA: the fraction of samples beyond 2x the model
+    median, compared against the model-implied fraction.  This is the
+    slow-creep channel — a straggler probability drifting up over
+    thousands of samples moves every residual only slightly (CUSUM's
+    per-sample signal is weak) but walks the EWMA out of its band.
+
+Both channels are plain numpy recursions: deterministic given the sample
+stream, which is what makes controller decisions replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .estimators import FittedModel
+
+__all__ = ["DriftDetector", "DriftEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """A detected change-point on the telemetry stream."""
+
+    kind: str          # "cusum_up" | "cusum_down" | "straggle_ewma"
+    at: int            # absolute sample index of the alarm
+    start: int         # estimated change-point (refit from here on)
+    stat: float        # the statistic that crossed
+    threshold: float
+
+
+@dataclasses.dataclass
+class DriftDetector:
+    threshold: float = 28.0   # CUSUM alarm level: ~4 capped spikes, or ~60
+                              # samples of sustained one-sided drift; high
+                              # enough that a few-percent fit error cannot
+                              # random-walk across it within ~10k samples
+    slack: float = 0.5        # CUSUM allowance (half the min shift to catch)
+    cap: float = 8.0          # winsorized residual r = min(-log U, cap)
+    ewma_alpha: float = 0.02
+    ewma_band: float = 0.05   # minimum |ewma - p0| alarm band: one straggler
+                              # spikes the EWMA by ~alpha, so 0.05 demands
+                              # several near-simultaneous stragglers before a
+                              # rare-straggler model (tiny p0, tiny sigma)
+                              # can alarm, yet a creep to eps ~ 0.1 crosses;
+                              # for mid-range p0 the sigma term below
+                              # dominates anyway
+    ewma_z: float = 10.0      # band widened to ewma_z stationary sigmas (the
+                              # EWMA of a Bernoulli(p0) has std
+                              # sqrt(alpha/(2-alpha) p0 (1-p0)))
+    ewma_min: int = 500       # samples after rebase before EWMA may alarm
+
+    def __post_init__(self):
+        self.model: Optional[FittedModel] = None
+        self._rebase(at=0)
+
+    def _rebase(self, at: int) -> None:
+        self.g_up = 0.0
+        self.g_dn = 0.0
+        self.up_start = at       # where the current + excursion began
+        self.dn_start = at
+        self.p0 = self.model.straggle_p0() if self.model is not None else 0.0
+        a = self.ewma_alpha
+        self.band = max(self.ewma_band,
+                        self.ewma_z * math.sqrt(
+                            a / (2.0 - a) * self.p0 * (1.0 - self.p0)))
+        self.ewma = self.p0
+        self.rebased_at = at
+
+    def rebase(self, model: FittedModel, at: int) -> None:
+        """Adopt a newly committed model; all statistics restart."""
+        self.model = model
+        self._rebase(at)
+
+    def update(self, x: np.ndarray, at: int) -> Optional[DriftEvent]:
+        """Feed a batch whose first sample has absolute index ``at``;
+        returns the first alarm in the batch (statistics stop there — the
+        controller rebases before feeding more)."""
+        if self.model is None:
+            return None
+        x = np.asarray(x, dtype=np.float64).ravel()
+        x = x[np.isfinite(x)]
+        if x.size == 0:
+            return None
+        u = self.model.pit_mid(x)
+        z = np.minimum(-np.log(u), self.cap) - 1.0
+        thresh = self.model.straggle_threshold()
+        a = self.ewma_alpha
+        for i in range(x.size):
+            idx = at + i
+            self.g_up = max(0.0, self.g_up + z[i] - self.slack)
+            if self.g_up == 0.0:
+                self.up_start = idx + 1
+            self.g_dn = max(0.0, self.g_dn - z[i] - self.slack)
+            if self.g_dn == 0.0:
+                self.dn_start = idx + 1
+            if self.g_up > self.threshold:
+                return DriftEvent("cusum_up", at=idx, start=self.up_start,
+                                  stat=self.g_up, threshold=self.threshold)
+            if self.g_dn > self.threshold:
+                return DriftEvent("cusum_down", at=idx, start=self.dn_start,
+                                  stat=self.g_dn, threshold=self.threshold)
+            self.ewma += a * ((1.0 if x[i] > thresh else 0.0) - self.ewma)
+            if idx - self.rebased_at >= self.ewma_min and \
+                    abs(self.ewma - self.p0) > self.band:
+                # change began roughly one EWMA time-constant ago
+                start = max(self.rebased_at, idx - int(math.ceil(1.0 / a)))
+                return DriftEvent("straggle_ewma", at=idx, start=start,
+                                  stat=self.ewma, threshold=self.band)
+        return None

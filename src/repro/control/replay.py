@@ -1,0 +1,168 @@
+"""Closed-loop evaluation: replay a nonstationary trace through the
+controller and score regret against the clairvoyant per-regime oracle.
+
+The trace (``core.scenario.sample_regime_trace``) carries task-time
+tables for EVERY legal task size, all derived from one base draw per
+regime (common random numbers), so the controller's trajectory, every
+static plan, and the oracle are scored on the SAME realized randomness —
+differences are pure policy, not sampling noise.
+
+Step semantics: at step t the controller's current policy (n, k) runs —
+the step completes at the k-th smallest of the n task times at task size
+s = n/k (the paper's Y_{k:n}) — and only then does the controller observe
+the step's per-CU times (s = 1 column of the same tables; the runtime
+recovers CU times from the step barrier since s is known).  Decisions at
+t therefore depend only on data strictly before t.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core.scenario import RegimeTrace
+from .controller import ControlEvent, RedundancyController
+
+__all__ = ["ReplayResult", "replay"]
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Controller / oracle / static completion-time accounting."""
+
+    trace: RegimeTrace
+    ks: Tuple[int, ...]
+    controller_cost: np.ndarray          # (steps,) realized per-step times
+    policy_k: np.ndarray                 # (steps,) k that ran each step
+    events: List[ControlEvent]
+    static_regime_means: Dict[int, np.ndarray]   # k -> (num_regimes,)
+    controller_regime_means: np.ndarray          # (num_regimes,)
+    observe_seconds_per_step: float
+    replan_ms: List[float]
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def num_regimes(self) -> int:
+        return len(self.trace.regimes)
+
+    @property
+    def regime_weights(self) -> np.ndarray:
+        return np.asarray([r.num_steps for r in self.trace.regimes], float)
+
+    @property
+    def oracle_k(self) -> List[int]:
+        """The clairvoyant per-regime arg-min static k."""
+        ks = list(self.ks)
+        return [int(ks[int(np.argmin(
+            [self.static_regime_means[k][r] for k in ks]))])
+            for r in range(self.num_regimes)]
+
+    @property
+    def oracle_regime_means(self) -> np.ndarray:
+        return np.asarray([
+            min(self.static_regime_means[k][r] for k in self.ks)
+            for r in range(self.num_regimes)])
+
+    @property
+    def oracle_mean(self) -> float:
+        w = self.regime_weights
+        return float((self.oracle_regime_means * w).sum() / w.sum())
+
+    @property
+    def controller_mean(self) -> float:
+        return float(self.controller_cost.mean())
+
+    @property
+    def regret(self) -> float:
+        """Relative mean-completion-time excess over the oracle."""
+        return self.controller_mean / self.oracle_mean - 1.0
+
+    def static_mean(self, k: int) -> float:
+        w = self.regime_weights
+        return float((self.static_regime_means[k] * w).sum() / w.sum())
+
+    def static_regret(self, k: int) -> float:
+        return self.static_mean(k) / self.oracle_mean - 1.0
+
+    def static_regime_regret(self, k: int) -> np.ndarray:
+        """Per-regime relative excess of the static-k plan."""
+        return self.static_regime_means[k] / self.oracle_regime_means - 1.0
+
+    def controller_regime_regret(self) -> np.ndarray:
+        return self.controller_regime_means / self.oracle_regime_means - 1.0
+
+    def summary(self) -> dict:
+        return {
+            "steps": int(self.trace.num_steps),
+            "controller_mean": self.controller_mean,
+            "oracle_mean": self.oracle_mean,
+            "regret": self.regret,
+            "oracle_k": self.oracle_k,
+            "static_regret": {int(k): self.static_regret(k) for k in self.ks},
+            "worst_static_regime_regret": {
+                int(k): float(self.static_regime_regret(k).max())
+                for k in self.ks},
+            "switches": [(int(e.at), e.kind, int(e.old_policy.k),
+                          int(e.new_policy.k)) for e in self.events
+                         if e.switched],
+            "observe_seconds_per_step": self.observe_seconds_per_step,
+            "replan_ms": self.replan_ms,
+        }
+
+
+def replay(trace: RegimeTrace,
+           controller: RedundancyController) -> ReplayResult:
+    """Run the controller over a trace; score it, every static plan, and
+    the per-regime oracle on the same sample paths."""
+    n = trace.n
+    if controller.scenario.n != n:
+        raise ValueError(
+            f"controller plans for n={controller.scenario.n}, "
+            f"trace has n={n}")
+    if 1 not in trace.s_values:
+        raise ValueError("trace must include s=1 (the CU telemetry column)")
+    ks = tuple(sorted(n // s for s in trace.s_values if n % s == 0))
+    times = {s: trace.times(s) for s in trace.s_values}
+    steps = trace.num_steps
+    reg_idx = trace.regime_index()
+
+    # -- static plans and the oracle: vectorized over the whole trace ------
+    static_cost = {
+        k: np.partition(times[n // k], k - 1, axis=1)[:, k - 1]
+        for k in ks}
+    num_regimes = len(trace.regimes)
+    static_regime_means = {
+        k: np.asarray([c[reg_idx == r].mean() for r in range(num_regimes)])
+        for k, c in static_cost.items()}
+
+    # -- the closed loop ----------------------------------------------------
+    cost = np.empty(steps)
+    policy_k = np.empty(steps, dtype=np.int64)
+    cu = times[1]
+    observe_s = 0.0
+    for t in range(steps):
+        k = controller.policy.k
+        if k not in static_cost:
+            raise ValueError(
+                f"controller chose k={k} but the trace lacks s={n // k}; "
+                f"sample the trace with that task size (or constrain the "
+                f"controller's scenario.candidate_ks)")
+        policy_k[t] = k
+        cost[t] = static_cost[k][t]
+        t0 = time.perf_counter()
+        controller.observe(cu[t])
+        observe_s += time.perf_counter() - t0
+
+    controller_regime_means = np.asarray(
+        [cost[reg_idx == r].mean() for r in range(num_regimes)])
+    return ReplayResult(
+        trace=trace, ks=ks,
+        controller_cost=cost, policy_k=policy_k,
+        events=list(controller.events),
+        static_regime_means=static_regime_means,
+        controller_regime_means=controller_regime_means,
+        observe_seconds_per_step=observe_s / max(steps, 1),
+        replan_ms=[e.replan_ms for e in controller.events],
+    )

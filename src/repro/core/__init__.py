@@ -4,7 +4,10 @@ Public API re-exports for the service-time models, order statistics,
 expected completion times, the k* planner, MDS/gradient coding, and the
 Monte-Carlo simulator.
 """
-from .distributions import BiModal, Pareto, Scaling, ServiceTime, ShiftedExp, fit_service_time
+from .distributions import (FAMILIES, BiModal, Pareto, Scaling, ServiceTime,
+                            ShiftedExp, bimodal_low_mode, fit_service_time,
+                            sample_resolution, select_service_time,
+                            service_loglik)
 from .expectations import completion_curve, expected_completion_time
 from .planner import Plan, Strategy, divisors, plan, plan_grid, strategy_table, theorem_kstar
 from .policy import Policy
@@ -13,7 +16,10 @@ from .scenario import (
     DeterministicArrivals,
     MMPPArrivals,
     PoissonArrivals,
+    Regime,
+    RegimeTrace,
     Scenario,
+    sample_regime_trace,
     sample_task_matrix,
     task_survival,
 )
@@ -40,11 +46,14 @@ from .simulator import (
 
 __all__ = [
     "BiModal", "Pareto", "Scaling", "ServiceTime", "ShiftedExp", "fit_service_time",
+    "bimodal_low_mode", "sample_resolution", "select_service_time",
+    "service_loglik", "FAMILIES",
     "completion_curve", "expected_completion_time",
     "Plan", "Strategy", "divisors", "plan", "plan_grid", "strategy_table",
     "theorem_kstar", "Policy", "Scenario", "task_survival",
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
     "MMPPArrivals", "sample_task_matrix",
+    "Regime", "RegimeTrace", "sample_regime_trace",
     "FractionalRepetitionCode", "decode_blocks", "decode_matrix", "encode_blocks",
     "fractional_repetition_code", "gc_decode_weights", "mds_generator",
     "task_size_gradient", "task_size_linear",

@@ -28,6 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
+#: Relative half-width of BiModal's atom bands — the single tolerance
+#: shared by logpmf (model selection) and the control loop's PIT.
+ATOM_RTOL = 0.25
+
+#: Service-time families model selection scores, in tie-break order.
+FAMILIES = ("shifted_exp", "pareto", "bimodal")
+
+
 class Scaling(enum.Enum):
     """How a task's service time scales with its size s (number of CUs)."""
 
@@ -51,6 +59,17 @@ class ServiceTime:
 
     def tail(self, x: np.ndarray) -> np.ndarray:
         """Pr{X > x}."""
+        raise NotImplementedError
+
+    def logpdf(self, x: np.ndarray) -> np.ndarray:
+        """Exact log density (or log mass for atomic families) at x.
+
+        Model selection previously differentiated ``tail`` numerically,
+        which is identically ~0 inside Bi-Modal's flat tail steps and
+        noisy at S-Exp's atom boundary; every family now exposes its
+        exact form instead (``service_loglik`` is the dispatcher that
+        also handles Bi-Modal's time-scale normalization).
+        """
         raise NotImplementedError
 
     # -- shift/noise decomposition X = delta + Z used by scaling models -----
@@ -136,6 +155,13 @@ class ShiftedExp(ServiceTime):
             return (x < self.delta).astype(np.float64)
         return np.where(x < self.delta, 1.0, np.exp(-(x - self.delta) / max(self.W, 1e-300)))
 
+    def logpdf(self, x):
+        x = np.asarray(x, dtype=np.float64)
+        if self.W == 0.0:     # degenerate: unit mass at delta
+            return np.where(x == self.delta, 0.0, -np.inf)
+        return np.where(x < self.delta, -np.inf,
+                        -math.log(self.W) - (x - self.delta) / self.W)
+
 
 @dataclasses.dataclass(frozen=True)
 class Pareto(ServiceTime):
@@ -171,6 +197,13 @@ class Pareto(ServiceTime):
         x = np.asarray(x, dtype=np.float64)
         return np.where(x < self.lam, 1.0, (self.lam / np.maximum(x, self.lam)) ** self.alpha)
 
+    def logpdf(self, x):
+        x = np.asarray(x, dtype=np.float64)
+        return np.where(
+            x < self.lam, -np.inf,
+            math.log(self.alpha) + self.alpha * math.log(self.lam)
+            - (self.alpha + 1.0) * np.log(np.maximum(x, self.lam)))
+
 
 @dataclasses.dataclass(frozen=True)
 class BiModal(ServiceTime):
@@ -196,6 +229,119 @@ class BiModal(ServiceTime):
         x = np.asarray(x, dtype=np.float64)
         return np.where(x < 1.0, 1.0, np.where(x < self.B, self.eps, 0.0))
 
+    def atom_match(self, x, rtol: float = ATOM_RTOL):
+        """Classify unit-convention samples against the two atoms.
+
+        Returns ``(near_lo, near_hi)`` boolean masks: a sample within
+        relative distance ``rtol`` of an atom matches it; when the bands
+        overlap (B close to 1) the nearer atom claims the sample.  The
+        SINGLE band rule shared by ``logpmf`` (model selection) and the
+        control loop's mid-distribution PIT (drift detection) — the two
+        must agree on what counts as an atom or detection decalibrates
+        against the very model selection committed.
+        """
+        x = np.asarray(x, dtype=np.float64)
+        d_lo = np.abs(x - 1.0)
+        d_hi = np.abs(x - self.B) / self.B
+        lo_hit = d_lo <= rtol
+        hi_hit = d_hi <= rtol
+        near_hi = hi_hit & (~lo_hit | (d_hi < d_lo))
+        return lo_hit & ~near_hi, near_hi
+
+    def logpmf(self, x, rtol: float = ATOM_RTOL) -> np.ndarray:
+        """Exact log mass under the two-atom law, with a tolerance band.
+
+        A sample within relative distance ``rtol`` of an atom carries that
+        atom's mass (real telemetry jitters around the modes); a sample in
+        neither band is strong evidence AGAINST the bimodal hypothesis and
+        gets a floor mass of 1e-300 (log ~ -690).  The floor is what keeps
+        a two-atom fit from free-riding on unimodal data: a continuous
+        sample stream lands mostly outside both bands and the summed
+        log-likelihood collapses, so model selection rejects it.  Expects
+        samples in the paper's unit-low-mode convention (see
+        ``service_loglik`` for the normalization).
+        """
+        near_lo, near_hi = self.atom_match(x, rtol)
+        p = np.where(near_hi, self.eps, np.where(near_lo, 1.0 - self.eps, 0.0))
+        return np.log(np.maximum(p, 1e-300))
+
+    def logpdf(self, x):
+        """Alias for ``logpmf`` so the ``ServiceTime`` contract is uniform."""
+        return self.logpmf(x)
+
+
+def bimodal_low_mode(samples: np.ndarray) -> float:
+    """Estimate of the fast-mode location of (possibly jittered) two-mode
+    telemetry: the mean of the cluster at/below twice the median.
+
+    The median splits the modes for eps < 1/2 and the low-cluster mean is
+    robust to per-sample jitter.  When straggling dominates (eps > 1/2)
+    the median sits ON the high mode and the median route collapses both
+    modes into one cluster; if that happens (no sample beyond 2x the
+    estimate) a min/max midpoint split is tried instead, and adopted when
+    it exposes a separated second mode.  This is the single normalization
+    shared by ``fit_service_time("bimodal")`` (which maps telemetry onto
+    the paper's unit-low-mode convention) and ``service_loglik`` (which
+    must evaluate the unit-convention fit on the SAME normalized samples).
+    """
+    x = np.asarray(samples, dtype=np.float64)
+    med = float(np.median(x))
+    low = x[x <= 2.0 * med]
+    lo = float(low.mean()) if low.size else med
+    if not np.any(x > 2.0 * lo):
+        # majority-straggler telemetry: retry with a midpoint split
+        mid = 0.5 * (float(x.min()) + float(x.max()))
+        below, above = x[x <= mid], x[x > mid]
+        if below.size and above.size and \
+                float(above.mean()) > 2.0 * float(below.mean()):
+            lo = float(below.mean())
+    return max(lo, 1e-12)
+
+
+def sample_resolution(samples: np.ndarray) -> float:
+    """Measurement resolution of a telemetry window: the median gap of the
+    sorted samples (duplicates count as zero gaps), floored at 1e-12 of the
+    data scale.
+
+    Heavily duplicated telemetry — atomic service times, or clock-quantized
+    timestamps — yields a tiny resolution; spread continuous telemetry
+    yields a gap comparable to 1 / (n * density).  ``service_loglik`` uses
+    it as the interval width for interval likelihoods.
+    """
+    xs = np.sort(np.asarray(samples, dtype=np.float64))
+    scale = max(float(abs(xs[-1])), float(xs[-1] - xs[0]), 1e-9)
+    if xs.size < 2:
+        return 1e-12 * scale
+    return max(float(np.median(np.diff(xs))), 1e-12 * scale)
+
+
+def service_loglik(dist: ServiceTime, samples: np.ndarray) -> float:
+    """Exact log-likelihood of raw telemetry under a fitted model, as an
+    INTERVAL likelihood at the data's measurement resolution.
+
+    Continuous families score log(f(x) * h) with h = ``sample_resolution``
+    — the probability of the observation interval, not the density.  The h
+    term cancels when comparing continuous families against each other, but
+    it is what makes mass-vs-density comparisons well-posed: a continuous
+    fit cannot win by piling unbounded density on a duplicated sample value
+    (Pareto's ``lam = x.min()`` MLE does exactly that on atomic data, where
+    h collapses and the interval probability collapses with it).
+
+    A ``BiModal`` fit lives in the paper's unit-low-mode convention while
+    the samples are on the cluster's time scale, so they are normalized by
+    ``bimodal_low_mode`` first — the same transform ``fit_service_time``
+    applied, making fit and scoring consistent.  The atoms carry mass
+    directly (no interval width applies).
+    """
+    x = np.asarray(samples, dtype=np.float64)
+    if isinstance(dist, BiModal):
+        return float(dist.logpmf(x / bimodal_low_mode(x)).sum())
+    h = sample_resolution(x)
+    # an interval PROBABILITY cannot exceed 1: the clip stops a density
+    # spike (e.g. Pareto alpha -> inf on near-constant data) from scoring
+    # better than a point mass ever could
+    return float(np.sum(np.minimum(dist.logpdf(x) + math.log(h), 0.0)))
+
 
 def fit_service_time(samples: np.ndarray, family: str) -> ServiceTime:
     """Fit a service-time model from per-task telemetry (method of moments /
@@ -215,18 +361,48 @@ def fit_service_time(samples: np.ndarray, family: str) -> ServiceTime:
         alpha = float(x.size / max(logs.sum(), 1e-12))
         return Pareto(lam=lam, alpha=alpha)
     if family == "bimodal":
-        # Estimate the LOW MODE (median splits the modes for eps < 1/2;
-        # the low-cluster mean is robust to per-sample jitter), then
-        # normalize the samples by it BEFORE fitting, so telemetry from a
-        # cluster whose fast mode is m time units maps onto the paper's
-        # unit-mode BiModal convention: the fit is invariant to the
-        # telemetry time scale (fit(c*x) == fit(x) for any c > 0).
-        med = float(np.median(x))
-        low = x[x <= 2.0 * med]
-        lo = float(low.mean()) if low.size else med
-        z = x / max(lo, 1e-12)
+        # Normalize by the estimated low mode BEFORE fitting
+        # (``bimodal_low_mode``), so telemetry from a cluster whose fast
+        # mode is m time units maps onto the paper's unit-mode BiModal
+        # convention: the fit is invariant to the telemetry time scale
+        # (fit(c*x) == fit(x) for any c > 0).
+        z = x / bimodal_low_mode(x)
         stragglers = z > 2.0
         eps = float(stragglers.mean())
         b = float(z[stragglers].mean()) if stragglers.any() else 1.0
         return BiModal(B=max(b, 1.0), eps=eps)
     raise ValueError(f"unknown family {family!r}")
+
+
+def select_service_time(samples: np.ndarray,
+                        families: Tuple[str, ...] = FAMILIES
+                        ) -> Tuple[ServiceTime, str]:
+    """Fit every candidate family and pick the best by exact
+    log-likelihood (``service_loglik``) — the SINGLE selection policy
+    behind ``runtime.telemetry.Telemetry.fit`` and the control loop's
+    change-point refits (``control.estimators.fit_window``).
+
+    A zero-straggler "bimodal" is a single atom that would explain any
+    tight unimodal cluster vacuously (log-mass ~0 beats any
+    density*interval), so it only competes when the window actually
+    contains a second mode.  Ties resolve to the earlier family in
+    ``families``.
+    """
+    x = np.asarray(samples, dtype=np.float64).ravel()
+    x = x[np.isfinite(x)]
+    if x.size < 2:
+        raise ValueError(f"need at least 2 samples, got {x.size}")
+    best = None
+    for family in families:
+        try:
+            d = fit_service_time(x, family)
+        except Exception:
+            continue
+        if isinstance(d, BiModal) and not (0.0 < d.eps < 1.0):
+            continue
+        ll = service_loglik(d, x)
+        if best is None or ll > best[2]:
+            best = (d, family, ll)
+    if best is None:
+        raise ValueError("no service-time family could be fitted")
+    return best[0], best[1]

@@ -44,7 +44,8 @@ from .policy import Policy
 
 __all__ = [
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
-    "MMPPArrivals", "Scenario", "sample_task_matrix", "task_survival",
+    "MMPPArrivals", "Regime", "RegimeTrace", "Scenario",
+    "sample_regime_trace", "sample_task_matrix", "task_survival",
     "validate_worker_speeds",
 ]
 
@@ -307,3 +308,146 @@ def task_survival(dist: ServiceTime, scaling: Scaling, s: int, t: np.ndarray,
     draws = _additive_mc_sorted_sums(dist, s)
     idx = np.searchsorted(draws, np.atleast_1d(t), side="right")
     return (1.0 - idx / draws.size).reshape(t.shape)
+
+
+# --------------------------------------------------------------------------
+# Regime-switching nonstationary traces (the control loop's world model)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Regime:
+    """One stationary segment of a nonstationary workload.
+
+    ``dist``           the CU service-time law holding for this segment.
+    ``num_steps``      how many job steps the segment lasts.
+    ``delta``          exogenous per-CU deterministic time (``Scenario``
+                       semantics: ShiftedExp carries its own shift and a
+                       contradictory override is rejected).
+    ``worker_speeds``  length-n multiplicative slowdowns — a scheduled
+                       FLEET change (machines degrading / being swapped)
+                       rather than a distribution change.
+    """
+
+    dist: ServiceTime
+    num_steps: int
+    delta: Optional[float] = None
+    worker_speeds: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if int(self.num_steps) < 1:
+            raise ValueError(f"num_steps must be >= 1, got {self.num_steps}")
+        if self.delta is not None:
+            if self.delta < 0:
+                raise ValueError(f"delta must be >= 0, got {self.delta}")
+            if isinstance(self.dist, ShiftedExp) and \
+                    float(self.delta) != self.dist.delta:
+                raise ValueError(
+                    "ShiftedExp carries its shift internally "
+                    f"(delta={self.dist.delta}); a Regime delta of "
+                    f"{self.delta} would contradict it")
+
+    def effective_delta(self) -> float:
+        return self.dist.shift if self.delta is None else float(self.delta)
+
+    def scenario(self, scaling: Scaling, n: int, **kwargs) -> Scenario:
+        """This regime as a stationary planning problem."""
+        return Scenario(self.dist, scaling, n, delta=self.delta,
+                        worker_speeds=self.worker_speeds, **kwargs)
+
+
+@dataclasses.dataclass
+class RegimeTrace:
+    """A sampled nonstationary trace: per-regime task-time tables, one per
+    candidate task size s, all derived from one base draw per regime.
+
+    ``tables[r][s]`` is the (num_steps, n) matrix of task times in regime
+    ``r`` for tasks of ``s`` CUs.  Because all s share the regime's base
+    noise (the CRN discipline of ``sample_task_matrix`` /
+    ``cluster_batched``), a controller choosing k and a clairvoyant oracle
+    choosing a different k walk the SAME underlying randomness — regret
+    comparisons are paired, not independently sampled.
+    """
+
+    regimes: Tuple[Regime, ...]
+    scaling: Scaling
+    n: int
+    seed: int
+    s_values: Tuple[int, ...]
+    tables: Tuple[dict, ...]            # per regime: {s: (steps, n) float64}
+
+    @property
+    def num_steps(self) -> int:
+        return sum(r.num_steps for r in self.regimes)
+
+    def boundaries(self) -> List[Tuple[int, int]]:
+        """[start, end) step range of each regime."""
+        out, at = [], 0
+        for r in self.regimes:
+            out.append((at, at + r.num_steps))
+            at += r.num_steps
+        return out
+
+    def regime_index(self) -> np.ndarray:
+        """(num_steps,) index of the regime governing each step."""
+        return np.repeat(np.arange(len(self.regimes)),
+                         [r.num_steps for r in self.regimes])
+
+    def times(self, s: int) -> np.ndarray:
+        """(num_steps, n) task times at task size ``s``, concatenated
+        across regimes."""
+        if s not in self.s_values:
+            raise ValueError(f"s={s} not sampled (have {self.s_values})")
+        return np.concatenate([t[s] for t in self.tables], axis=0)
+
+
+def sample_regime_trace(
+    regimes: Sequence[Regime],
+    scaling: Scaling,
+    n: int,
+    seed: int = 0,
+    s_values: Optional[Sequence[int]] = None,
+) -> RegimeTrace:
+    """Sample a piecewise-stationary trace of per-worker task times.
+
+    For every regime ONE base noise draw is taken (key =
+    ``fold_in(PRNGKey(seed), regime_index)``) and transformed per task
+    size exactly as the batched engines do: server-/data-dependent tables
+    reuse one ``sample_noise`` draw scaled per s, additive tables are a
+    cumsum over a (steps, n, s_max) CU table sliced per s.  Fleet changes
+    (``Regime.worker_speeds``) multiply the regime's tables.
+
+    ``s_values`` defaults to the divisors of n — every legal task size, so
+    any policy the controller might pick (and the clairvoyant per-regime
+    oracle) can be scored on the same trace.  Memory is
+    O(steps * n * len(s_values)) (plus s_max CU draws for additive).
+    """
+    regimes = tuple(regimes)
+    if not regimes:
+        raise ValueError("need at least one regime")
+    s_vals = tuple(divisors(n)) if s_values is None \
+        else tuple(sorted({int(s) for s in s_values}))
+    if any(s < 1 for s in s_vals):
+        raise ValueError(f"task sizes must be >= 1, got {s_vals}")
+    key = jax.random.PRNGKey(seed)
+    tables = []
+    for r_idx, reg in enumerate(regimes):
+        k_r = jax.random.fold_in(key, r_idx)
+        steps = reg.num_steps
+        d = reg.effective_delta()
+        if scaling is Scaling.ADDITIVE:
+            draws = reg.dist.sample(k_r, (steps, n, max(s_vals)))
+            csum = np.asarray(jnp.cumsum(draws, axis=-1), np.float64)
+            per_s = {s: csum[..., s - 1] for s in s_vals}
+        else:
+            z = np.asarray(reg.dist.sample_noise(k_r, (steps, n)), np.float64)
+            if scaling is Scaling.SERVER_DEPENDENT:
+                per_s = {s: d + s * z for s in s_vals}
+            else:                                   # data-dependent
+                per_s = {s: s * d + z for s in s_vals}
+        if reg.worker_speeds is not None:
+            speeds = np.asarray(
+                validate_worker_speeds(reg.worker_speeds, n), np.float64)
+            per_s = {s: t * speeds[None, :] for s, t in per_s.items()}
+        tables.append(per_s)
+    return RegimeTrace(regimes=regimes, scaling=scaling, n=n, seed=int(seed),
+                       s_values=s_vals, tables=tuple(tables))

@@ -12,13 +12,34 @@ redundancy (Sec. VI of the paper).
 """
 from __future__ import annotations
 
-from typing import Optional
+import logging
+from typing import Optional, Tuple
 
 from ..core.distributions import BiModal, Scaling, ServiceTime
 from ..core.policy import Policy
 from ..core.scenario import Scenario
 from .coded_step import CodedStepConfig
 from .straggler import best_fr_policy
+
+logger = logging.getLogger(__name__)
+
+
+def round_unique_batch(unique_batch: int, num_groups: int) -> Tuple[int, int]:
+    """Round ``unique_batch`` UP to a multiple of ``num_groups``.
+
+    The coded step splits the unique batch over the k part groups, so the
+    batch must divide evenly.  Returns ``(rounded, adjustment)`` with
+    ``adjustment = rounded - unique_batch`` (0 when no rounding happened)
+    — the single rounding contract shared by ``resize_plan`` and the
+    control loop's trainer actuator, so a silent global-batch change can
+    never hide again: callers get the adjustment back and this module
+    logs it.
+    """
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+    rem = unique_batch % num_groups
+    rounded = unique_batch if rem == 0 else unique_batch + (num_groups - rem)
+    return rounded, rounded - unique_batch
 
 
 def resize_plan(old: CodedStepConfig, new_n: int,
@@ -31,7 +52,10 @@ def resize_plan(old: CodedStepConfig, new_n: int,
     Re-plans the policy for the fitted service model on the new n (falls
     back to the legal policy nearest the old replication fraction c/n).
     The unique batch is kept so the optimization trajectory is unchanged
-    across resizes.
+    across resizes — EXCEPT when it does not divide the new group count:
+    it is then rounded up to the next multiple (``round_unique_batch``),
+    which changes the global batch; the adjustment is logged here and
+    visible to callers as ``result.unique_batch - old.unique_batch``.
     """
     if dist is not None:
         policy, _ = best_fr_policy(Scenario(dist, scaling, new_n, delta=delta))
@@ -40,10 +64,12 @@ def resize_plan(old: CodedStepConfig, new_n: int,
                                       axis="replication")
     unique = old.unique_batch if keep_unique_batch else \
         old.unique_batch * new_n // old.n_workers
-    # unique batch must split over the new group count
-    g = policy.num_groups
-    if unique % g:
-        unique = (unique // g + 1) * g
+    unique, adjustment = round_unique_batch(unique, policy.num_groups)
+    if adjustment:
+        logger.warning(
+            "resize_plan: unique_batch %d does not split over %d part "
+            "groups; rounded up to %d (global batch grows by %d)",
+            unique - adjustment, policy.num_groups, unique, adjustment)
     return CodedStepConfig.from_policy(policy, unique_batch=unique)
 
 

@@ -3,26 +3,56 @@
 The paper's planner needs the service-time PDF and scaling model.  In
 production neither is known a priori: this module keeps a sliding window of
 per-worker task times (from the step barrier), fits each candidate family
-by maximum likelihood / method of moments, selects the best fit by
-log-likelihood, and hands the fitted model to ``core.planner.plan`` /
-``runtime.straggler.plan_fr`` -- the paper's Table I as a control loop.
+by maximum likelihood / method of moments, selects the best fit by EXACT
+log-likelihood (``core.distributions.service_loglik``), and hands the
+fitted model to the planner -- the paper's Table I as a control loop.
+
+This is the one-shot windowed fit.  The streaming counterpart with
+exponential forgetting and drift detection lives in ``repro.control``
+(estimators/detector/controller); both route model selection through the
+same exact per-family ``logpdf``/``logpmf``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
-from typing import Deque, Optional, Tuple
+from typing import Deque, Tuple, Union
 
 import numpy as np
 
-from ..core.distributions import (BiModal, Pareto, Scaling, ServiceTime,
-                                  ShiftedExp, fit_service_time)
+from ..core.distributions import (FAMILIES, ServiceTime,  # noqa: F401
+                                  select_service_time)
+
+
+@dataclasses.dataclass(frozen=True)
+class StraggleStats:
+    """Typed straggle summary of one telemetry window."""
+
+    median: float
+    p99: float
+    straggle_frac: float        # fraction of samples above 2x median
+    straggle_magnitude: float   # mean straggler time / median
+    num_samples: int
+
+
+@dataclasses.dataclass(frozen=True)
+class InsufficientTelemetry:
+    """Typed "not enough data" result — returned instead of NaN-laden
+    stats when the window is empty or shorter than the minimum (the seed
+    path warned via ``np.median([])`` and propagated NaNs downstream)."""
+
+    have: int
+    needed: int
+
+    def __bool__(self) -> bool:   # `if stats:` reads as "usable"
+        return False
 
 
 @dataclasses.dataclass
 class Telemetry:
     window: int = 512
+    min_samples: int = 8
 
     def __post_init__(self):
         self._times: Deque[float] = collections.deque(maxlen=self.window)
@@ -44,37 +74,29 @@ class Telemetry:
 
     # -- model selection ----------------------------------------------------
 
-    def _loglik(self, dist: ServiceTime, x: np.ndarray) -> float:
-        """Approximate log-likelihood via the tail function (finite diff)."""
-        eps = 1e-6 * max(x.std(), 1e-9)
-        f = (dist.tail(x - eps) - dist.tail(x + eps)) / (2 * eps)
-        return float(np.log(np.maximum(f, 1e-300)).sum())
-
     def fit(self) -> Tuple[ServiceTime, str]:
-        """Best-fitting family among the paper's three, by log-likelihood."""
-        if self.num_samples < 8:
-            raise ValueError("not enough telemetry samples")
-        x = self.samples()
-        best = None
-        for family in ("shifted_exp", "pareto", "bimodal"):
-            try:
-                d = fit_service_time(x, family)
-            except Exception:
-                continue
-            ll = self._loglik(d, x)
-            if best is None or ll > best[2]:
-                best = (d, family, ll)
-        assert best is not None
-        return best[0], best[1]
+        """Best-fitting family among the paper's three, by exact
+        log-likelihood (``core.distributions.select_service_time``; the
+        seed's finite-difference density was identically ~0 on Bi-Modal's
+        step tail, so bimodal could essentially never win selection)."""
+        if self.num_samples < self.min_samples:
+            raise ValueError(
+                f"not enough telemetry samples "
+                f"({self.num_samples} < {self.min_samples})")
+        return select_service_time(self.samples())
 
-    def straggle_stats(self) -> dict:
+    def straggle_stats(self) -> Union[StraggleStats, InsufficientTelemetry]:
+        if self.num_samples < self.min_samples:
+            return InsufficientTelemetry(have=self.num_samples,
+                                         needed=self.min_samples)
         x = self.samples()
         med = float(np.median(x))
         stragglers = x > 2.0 * med
-        return {
-            "median": med,
-            "p99": float(np.quantile(x, 0.99)),
-            "straggle_frac": float(stragglers.mean()),
-            "straggle_magnitude": float(x[stragglers].mean() / med)
+        return StraggleStats(
+            median=med,
+            p99=float(np.quantile(x, 0.99)),
+            straggle_frac=float(stragglers.mean()),
+            straggle_magnitude=float(x[stragglers].mean() / med)
             if stragglers.any() else 1.0,
-        }
+            num_samples=x.size,
+        )

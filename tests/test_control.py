@@ -1,0 +1,480 @@
+"""The adaptive redundancy control loop: streaming estimation, drift
+detection, closed-loop re-planning, and regret on nonstationary traces."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import AdaptivePlanner, Scenario
+from repro.control import (BiModalEstimator, DriftDetector, OnlineSelector,
+                           ParetoEstimator, RedundancyController,
+                           ShiftedExpEstimator, TrainerActuator, fit_window,
+                           replay)
+from repro.control.controller import ControllerConfig
+from repro.core import (BiModal, Pareto, Regime, Scaling, ShiftedExp,
+                        sample_regime_trace)
+
+N = 12
+SERVER = Scaling.SERVER_DEPENDENT
+PRIOR = Scenario(BiModal(10.0, 0.3), SERVER, N)
+
+# The acceptance trace: three regimes whose optimal k differ sharply
+# (replication -> mid-rate coding -> coding/splitting).
+ACCEPTANCE_REGIMES = [Regime(ShiftedExp(1.0, 10.0), 400),
+                      Regime(BiModal(1e4, 5e-4), 400),
+                      Regime(Pareto(1.0, 2.5), 400)]
+
+
+def _stream(dist, num, seed=0):
+    return np.asarray(dist.sample(jax.random.PRNGKey(seed), (num,)),
+                      np.float64)
+
+
+# ==========================================================================
+# Regime traces (core.scenario.sample_regime_trace)
+# ==========================================================================
+
+class TestRegimeTrace:
+    def test_shapes_boundaries_and_regime_index(self):
+        tr = sample_regime_trace(ACCEPTANCE_REGIMES, SERVER, N, seed=0)
+        assert tr.num_steps == 1200
+        assert tr.boundaries() == [(0, 400), (400, 800), (800, 1200)]
+        idx = tr.regime_index()
+        assert idx.shape == (1200,)
+        assert (idx[:400] == 0).all() and (idx[800:] == 2).all()
+        assert tr.times(1).shape == (1200, N)
+
+    def test_crn_discipline_shares_base_noise_across_task_sizes(self):
+        """Server-dependent tables must satisfy times(s) = d + s*z with ONE
+        z per regime — the common-random-number pairing that makes regret
+        comparisons paired rather than independently sampled."""
+        tr = sample_regime_trace([Regime(ShiftedExp(1.0, 10.0), 50)],
+                                 SERVER, N, seed=3)
+        z1 = tr.times(1) - 1.0
+        for s in (2, 3, 6, 12):
+            np.testing.assert_allclose(tr.times(s) - 1.0, s * z1, rtol=1e-12)
+
+    def test_deterministic_given_seed(self):
+        a = sample_regime_trace(ACCEPTANCE_REGIMES, SERVER, N, seed=7)
+        b = sample_regime_trace(ACCEPTANCE_REGIMES, SERVER, N, seed=7)
+        for r in range(3):
+            for s in a.s_values:
+                np.testing.assert_array_equal(a.tables[r][s], b.tables[r][s])
+        c = sample_regime_trace(ACCEPTANCE_REGIMES, SERVER, N, seed=8)
+        assert not np.array_equal(a.tables[0][1], c.tables[0][1])
+
+    def test_fleet_change_applies_worker_speeds(self):
+        slow = (1.0,) * 10 + (4.0, 4.0)
+        base = sample_regime_trace([Regime(ShiftedExp(1.0, 2.0), 80)],
+                                   SERVER, N, seed=1)
+        het = sample_regime_trace(
+            [Regime(ShiftedExp(1.0, 2.0), 80, worker_speeds=slow)],
+            SERVER, N, seed=1)
+        np.testing.assert_allclose(het.times(1),
+                                   base.times(1) * np.asarray(slow), rtol=1e-12)
+
+    def test_additive_tables_are_cu_cumsums(self):
+        tr = sample_regime_trace([Regime(BiModal(10.0, 0.3), 30)],
+                                 Scaling.ADDITIVE, 6, seed=2)
+        assert (tr.times(3) >= tr.times(2)).all()
+        assert (tr.times(2) >= tr.times(1)).all()
+
+    def test_unknown_task_size_raises(self):
+        tr = sample_regime_trace([Regime(ShiftedExp(1.0, 1.0), 10)],
+                                 SERVER, N, seed=0, s_values=[1, 2])
+        with pytest.raises(ValueError, match="not sampled"):
+            tr.times(6)
+
+    def test_sexp_regime_delta_contract(self):
+        with pytest.raises(ValueError, match="contradict"):
+            Regime(ShiftedExp(2.0, 1.0), 10, delta=1.0)
+
+
+# ==========================================================================
+# Streaming estimators + model selection
+# ==========================================================================
+
+class TestEstimators:
+    def test_shifted_exp_round_trip(self):
+        est = ShiftedExpEstimator()
+        x = _stream(ShiftedExp(2.0, 5.0), 3000)
+        for i in range(0, x.size, 24):
+            est.update(x[i:i + 24])
+        d = est.dist()
+        assert abs(d.delta - 2.0) < 0.05
+        assert abs(d.W - 5.0) < 0.5
+
+    def test_pareto_round_trip(self):
+        est = ParetoEstimator()
+        x = _stream(Pareto(1.5, 3.0), 3000)
+        for i in range(0, x.size, 24):
+            est.update(x[i:i + 24])
+        d = est.dist()
+        assert abs(d.lam - 1.5) < 0.05
+        assert abs(d.alpha - 3.0) < 0.4
+
+    def test_bimodal_round_trip_and_scale(self):
+        est = BiModalEstimator()
+        x = 37.0 * _stream(BiModal(8.0, 0.2), 3000)
+        for i in range(0, x.size, 24):
+            est.update(x[i:i + 24])
+        d = est.dist()
+        assert abs(d.B - 8.0) < 0.5
+        assert abs(d.eps - 0.2) < 0.04
+        assert abs(est.scale - 37.0) < 2.0
+
+    def test_forgetting_tracks_a_mid_stream_shift(self):
+        """Exponential forgetting is the point: after a parameter shift the
+        estimate converges to the NEW regime instead of averaging both."""
+        est = ShiftedExpEstimator(forget=0.999)
+        for i in range(0, 3000, 24):
+            est.update(_stream(ShiftedExp(1.0, 2.0), 3000, seed=0)[i:i + 24])
+        for i in range(0, 3000, 24):
+            est.update(_stream(ShiftedExp(5.0, 8.0), 3000, seed=1)[i:i + 24])
+        d = est.dist()
+        assert abs(d.delta - 5.0) < 0.1
+        assert abs(d.W - 8.0) < 1.0
+
+    @pytest.mark.parametrize("dist,family", [
+        (ShiftedExp(1.0, 10.0), "shifted_exp"),
+        (Pareto(1.0, 2.5), "pareto"),
+        (BiModal(10.0, 0.25), "bimodal"),
+        (BiModal(10.0, 0.7), "bimodal"),    # majority-straggler regime
+    ])
+    def test_selector_identifies_family(self, dist, family):
+        sel = OnlineSelector()
+        x = _stream(dist, 2400)
+        for i in range(0, x.size, 24):
+            sel.update(x[i:i + 24])
+        best = sel.best()
+        assert best is not None and best.family == family
+
+    def test_selector_identifies_scaled_jittered_bimodal(self):
+        """The satellite regression at the streaming layer: real telemetry
+        jitters around the modes and lives on an arbitrary time scale; the
+        exact-logpmf route must still recover bimodal (the seed's
+        finite-difference density was ~0 on the step tail)."""
+        rng = np.random.default_rng(0)
+        x = 37.0 * np.concatenate([1 + 0.05 * rng.standard_normal(2400),
+                                   8 + 0.3 * rng.standard_normal(600)])
+        rng.shuffle(x)
+        sel = OnlineSelector()
+        for i in range(0, x.size, 24):
+            sel.update(x[i:i + 24])
+        best = sel.best()
+        assert best.family == "bimodal"
+        assert abs(best.dist.B - 8.0) < 0.5
+        assert abs(best.dist.eps - 0.2) < 0.04
+
+    def test_fit_window_rejects_vacuous_bimodal(self):
+        """A tight unimodal cluster must not be 'explained' by a
+        zero-straggler two-atom fit (log-mass ~0 would beat any density)."""
+        m = fit_window(_stream(ShiftedExp(10.0, 0.5), 500))
+        assert m.family == "shifted_exp"
+
+    def test_fit_window_rare_catastrophic_straggler(self):
+        m = fit_window(_stream(BiModal(1e4, 5e-4), 8000))
+        assert m.family == "bimodal"
+        assert m.dist.B > 1e3
+
+    def test_pit_mid_is_calibrated(self):
+        """E[-log U] ~ 1 under the fitted model for every family — the
+        detector's residual standardization."""
+        for dist in (ShiftedExp(1.0, 10.0), Pareto(1.0, 2.5),
+                     BiModal(10.0, 0.3), BiModal(10.0, 0.7)):
+            x = _stream(dist, 4000, seed=5)
+            m = fit_window(x[:500])
+            r = -np.log(m.pit_mid(x[500:]))
+            assert abs(r.mean() - 1.0) < 0.25, (dist, r.mean())
+
+
+# ==========================================================================
+# Drift detection
+# ==========================================================================
+
+class TestDetector:
+    def _fit(self, dist, seed=0):
+        return fit_window(_stream(dist, 300, seed=seed))
+
+    @pytest.mark.parametrize("pre,post", [
+        (ShiftedExp(1.0, 10.0), BiModal(1e4, 5e-4)),
+        (BiModal(1e4, 5e-4), Pareto(1.0, 2.5)),
+        (Pareto(1.0, 2.5), ShiftedExp(1.0, 10.0)),
+        (BiModal(10.0, 0.05), BiModal(10.0, 0.3)),   # eps creep
+        (Pareto(1.0, 5.0), Pareto(1.0, 1.5)),        # tail heavies
+    ])
+    def test_detects_regime_change_quickly(self, pre, post):
+        det = DriftDetector()
+        det.rebase(self._fit(pre), at=0)
+        ev = det.update(_stream(post, 4000, seed=1), at=0)
+        assert ev is not None
+        assert ev.at < 600          # lag well under a 10k-sample regime
+        assert ev.start <= ev.at
+
+    @pytest.mark.parametrize("dist", [
+        ShiftedExp(1.0, 10.0), ShiftedExp(10.0, 0.5), Pareto(1.0, 2.5),
+        BiModal(10.0, 0.3), BiModal(1e4, 5e-4),
+    ])
+    def test_no_false_alarm_on_stationary_10k(self, dist):
+        """Acceptance guard at the detector layer: >= 10k stationary
+        samples, zero alarms."""
+        x = _stream(dist, 12000, seed=2)
+        det = DriftDetector()
+        det.rebase(fit_window(x[:300]), at=0)
+        assert det.update(x[300:], at=300) is None
+
+    def test_single_freak_sample_cannot_alarm(self):
+        """Winsorized residuals: one catastrophic outlier under a
+        continuous model spikes the CUSUM below threshold and decays."""
+        det = DriftDetector()
+        det.rebase(self._fit(ShiftedExp(1.0, 10.0)), at=0)
+        x = _stream(ShiftedExp(1.0, 10.0), 1000, seed=3)
+        x[500] = 1e7
+        assert det.update(x, at=0) is None
+
+    def test_change_point_estimate_brackets_the_onset(self):
+        pre = _stream(ShiftedExp(1.0, 10.0), 2000, seed=4)
+        post = _stream(BiModal(1e4, 5e-4), 2000, seed=5)
+        det = DriftDetector()
+        det.rebase(fit_window(pre[:300]), at=0)
+        ev = det.update(np.concatenate([pre[300:], post]), at=300)
+        assert ev is not None
+        assert ev.at >= 2000                  # alarmed after the onset
+        assert ev.at - 2000 < 300             # ... promptly
+
+
+# ==========================================================================
+# The controller
+# ==========================================================================
+
+class TestController:
+    def test_boot_commits_after_evidence(self):
+        ctl = RedundancyController(PRIOR)
+        x = _stream(ShiftedExp(1.0, 10.0), 480)
+        events = [ctl.observe(x[i:i + 12]) for i in range(0, 480, 12)]
+        commits = [e for e in events if e is not None]
+        assert commits and commits[0].kind == "boot"
+        assert commits[0].at == ControllerConfig().boot_samples
+        assert ctl.model is not None and ctl.model.family == "shifted_exp"
+        assert ctl.policy.k == 1              # Thm 1: replication
+
+    def test_hysteresis_holds_marginal_wiggles(self):
+        """A small parameter wobble whose re-plan gain is under the
+        hysteresis band must not churn the policy."""
+        cfg = ControllerConfig(hysteresis=0.5, refresh_every=256)
+        ctl = RedundancyController(PRIOR, config=cfg)
+        for i in range(0, 2400, 12):
+            ctl.observe(_stream(BiModal(10.0, 0.28), 2400, seed=6)[i:i + 12])
+        boot_k = ctl.policy.k
+        for i in range(0, 2400, 12):
+            ctl.observe(_stream(BiModal(11.0, 0.33), 2400, seed=7)[i:i + 12])
+        assert ctl.policy.k == boot_k
+        assert not [e for e in ctl.events if e.switched and e.kind != "boot"]
+
+    def test_replan_latency_under_10ms(self):
+        ctl = RedundancyController(PRIOR)
+        for i in range(0, 1200, 12):
+            ctl.observe(_stream(ShiftedExp(1.0, 10.0), 1200)[i:i + 12])
+        assert ctl.events
+        assert all(e.replan_ms < 10.0 for e in ctl.events)
+
+    def test_rule_of_three_hedge_on_rare_stragglers(self):
+        """All-fast telemetry fits a degenerate model whose k-curve is
+        flat; the controller must plan against the undetectable straggle
+        rate (paper Sec. VI failure-as-straggling) instead of letting a
+        tie-break pick an extreme k."""
+        ctl = RedundancyController(PRIOR)
+        ones = np.ones(12)
+        for _ in range(40):
+            ctl.observe(ones)
+        boot = ctl.events[0]
+        assert boot.hedged
+        assert 1 < ctl.policy.k < N           # mid-rate coding, not a tie-break
+
+    def test_hedge_floors_bimodal_eps_instead_of_replacing_it(self):
+        """REGRESSION: a streaming BiModal fit with B <= 2 has
+        straggle_p0() == 0 for ANY eps (tail(2) = 0), so the hedge branch
+        fires — it must keep a well-resolved eps, not crush it to 3/m."""
+        from repro.control.estimators import FittedModel
+        ctl = RedundancyController(PRIOR)
+        fitted = FittedModel(dist=BiModal(B=1.8, eps=0.4), family="bimodal",
+                             scale=1.0, num_samples=300.0)
+        dist, _, hedged, _ = ctl._hedged_plan_dist(fitted)
+        assert dist.eps == pytest.approx(0.4)      # floored, not replaced
+        assert not hedged                          # floor did not bind
+        rare = FittedModel(dist=BiModal(B=100.0, eps=1e-6), family="bimodal",
+                           scale=1.0, num_samples=300.0)
+        dist, _, hedged, _ = ctl._hedged_plan_dist(rare)
+        assert dist.eps == pytest.approx(3.0 / 300.0)   # floor binds
+        assert hedged
+
+    def test_bimodal_delta_is_rescaled_for_planning(self):
+        """A unit-convention BiModal fit with time-scale 2 must see the
+        exogenous delta in the SAME normalized units."""
+        base = Scenario(BiModal(10.0, 0.3), Scaling.DATA_DEPENDENT, N,
+                        delta=1.0)
+        ctl = RedundancyController(base)
+        fitted = dataclasses.replace(
+            fit_window(2.0 * _stream(BiModal(8.0, 0.25), 500)), scale=2.0)
+        dist, delta, hedged, unit = ctl._hedged_plan_dist(fitted)
+        assert not hedged
+        assert delta == pytest.approx(0.5)
+        assert unit == pytest.approx(2.0)   # curve units -> raw time
+
+    def test_exogenous_delta_is_not_double_counted(self):
+        """REGRESSION: per-CU telemetry already contains the exogenous
+        delta; the controller must fit the NOISE (subtract delta once)
+        and re-inject it at planning time, not let the fit absorb it AND
+        pass scenario.delta again."""
+        base = Scenario(Pareto(1.0, 2.5), Scaling.DATA_DEPENDENT, N,
+                        delta=5.0)
+        ctl = RedundancyController(base)
+        cu = 5.0 + _stream(Pareto(1.0, 2.5), 1200, seed=13)
+        for i in range(0, 1200, 12):
+            ctl.observe(cu[i:i + 12])
+        assert ctl.model is not None
+        assert ctl.model.family == "pareto"
+        assert ctl.model.dist.lam == pytest.approx(1.0, abs=0.1)  # noise fit
+        # and a ShiftedExp fit folds the exogenous delta into its shift
+        base_s = Scenario(ShiftedExp(5.0, 10.0), Scaling.DATA_DEPENDENT, N)
+        ctl2 = RedundancyController(
+            dataclasses.replace(base_s, dist=Pareto(1.0, 2.5), delta=5.0))
+        fitted = fit_window(_stream(ShiftedExp(1.0, 10.0), 500))
+        dist, delta, _, _ = ctl2._hedged_plan_dist(fitted)
+        assert isinstance(dist, ShiftedExp)
+        assert dist.delta == pytest.approx(fitted.dist.delta + 5.0)
+        assert delta is None
+
+    def test_trainer_actuator_applies_policy_with_rounding(self):
+        """The switch actuates into the trainer config, and a unique batch
+        that does not split over the new group count is rounded by the
+        shared ``elastic.round_unique_batch`` contract (visibly)."""
+        from repro.runtime.coded_step import CodedStepConfig
+
+        class StubTrainer:
+            step_cfg = CodedStepConfig(n_workers=12, c=12, unique_batch=9)
+
+        stub = StubTrainer()
+        act = TrainerActuator(stub)
+        # prior: replication (k=1); stream: Bi-Modal -> k*=6, so the boot
+        # commit must switch and re-plan the trainer
+        ctl = RedundancyController(
+            Scenario(ShiftedExp(1.0, 10.0), SERVER, N), actuators=[act])
+        x = _stream(BiModal(10.0, 0.3), 480)
+        for i in range(0, 480, 12):
+            ctl.observe(x[i:i + 12])
+        assert ctl.switches and ctl.policy.k in (4, 6)   # mid-rate coding
+        assert stub.step_cfg.policy == ctl.policy
+        assert stub.step_cfg.unique_batch == 12      # 9 rounded up to 12
+        assert act.adjustments == [3]
+
+    def test_trainer_actuator_rounds_from_original_batch_every_apply(self):
+        """REGRESSION: rounding from the current (already-rounded) config
+        would ratchet the global batch upward across re-plans; each apply
+        must round from the ORIGINAL unique batch, restoring it exactly
+        when a compatible k returns."""
+        from repro.core.policy import Policy
+        from repro.runtime.coded_step import CodedStepConfig
+
+        class StubTrainer:
+            step_cfg = CodedStepConfig(n_workers=12, c=12, unique_batch=8)
+
+        stub = StubTrainer()
+        act = TrainerActuator(stub)
+        model = fit_window(_stream(BiModal(10.0, 0.3), 200))
+        act.apply(Policy(12, 3), model)          # 8 -> 9 (3 groups)
+        assert stub.step_cfg.unique_batch == 9
+        act.apply(Policy(12, 4), model)          # 8 divides 4 groups: restore
+        assert stub.step_cfg.unique_batch == 8
+        assert act.adjustments == [1]
+
+
+# ==========================================================================
+# Closed-loop replay: the acceptance criteria
+# ==========================================================================
+
+class TestReplayAcceptance:
+    @pytest.fixture(scope="class")
+    def result(self):
+        trace = sample_regime_trace(ACCEPTANCE_REGIMES, SERVER, N, seed=0)
+        return replay(trace, RedundancyController(PRIOR))
+
+    def test_regret_within_15_percent_of_clairvoyant_oracle(self, result):
+        assert result.regret <= 0.15, result.summary()
+
+    def test_every_static_plan_pays_double_somewhere(self, result):
+        """Each static k must incur >= 2x the controller's overall regret
+        in at least one regime — no single open-loop plan competes."""
+        floor = 2.0 * max(result.regret, 1e-9)
+        for k in result.ks:
+            assert result.static_regime_regret(k).max() >= floor, (
+                k, result.static_regime_regret(k), result.regret)
+
+    def test_oracle_ks_actually_differ_across_regimes(self, result):
+        assert len(set(result.oracle_k)) >= 2
+
+    def test_controller_tracks_each_regime(self, result):
+        assert (result.controller_regime_regret() <= 0.25).all(), \
+            result.controller_regime_regret()
+
+    def test_decisions_are_deterministic_under_crn_replay(self, result):
+        again = replay(result.trace, RedundancyController(PRIOR))
+        np.testing.assert_array_equal(result.policy_k, again.policy_k)
+        np.testing.assert_array_equal(result.controller_cost,
+                                      again.controller_cost)
+        assert [(e.kind, e.at, e.old_policy, e.new_policy, e.switched)
+                for e in result.events] == \
+               [(e.kind, e.at, e.old_policy, e.new_policy, e.switched)
+                for e in again.events]
+
+    def test_replan_latency_under_10ms_per_drift(self, result):
+        drift_ms = [e.replan_ms for e in result.events if e.kind == "drift"]
+        assert drift_ms and max(drift_ms) < 10.0
+
+    def test_no_replan_on_stationary_trace(self):
+        """Acceptance guard through the WHOLE loop: >= 10k stationary CU
+        samples -> no drift events and no post-boot policy churn."""
+        trace = sample_regime_trace([Regime(ShiftedExp(1.0, 10.0), 900)],
+                                    SERVER, N, seed=5)    # 10800 samples
+        ctl = RedundancyController(PRIOR)
+        res = replay(trace, ctl)
+        assert ctl.num_samples >= 10_000
+        assert not [e for e in res.events if e.kind == "drift"]
+        assert not [e for e in res.events
+                    if e.switched and e.kind != "boot"]
+
+
+# ==========================================================================
+# The typed front door
+# ==========================================================================
+
+class TestAdaptivePlanner:
+    def test_facade_observe_policy_events(self):
+        ap = AdaptivePlanner(Scenario(ShiftedExp(1.0, 10.0), SERVER, 8))
+        assert ap.policy.k == 1               # prior plan (Thm 1)
+        assert ap.model is None
+        flip = _stream(BiModal(8.0, 0.25), 1200, seed=9)
+        switched = []
+        for i in range(0, 1200, 8):
+            ev = ap.observe(flip[i:i + 8])
+            if ev is not None and ev.switched:
+                switched.append(ev)
+        assert ap.model is not None
+        assert ap.events and switched
+        assert ap.policy.k == switched[-1].new_policy.k
+
+    def test_attach_actuator_receives_commits(self):
+        hits = []
+
+        class Recorder:
+            def apply(self, policy, model):
+                hits.append((policy, model.family))
+
+        ap = AdaptivePlanner(Scenario(ShiftedExp(1.0, 10.0), SERVER, 8))
+        ap.attach(Recorder())
+        x = _stream(BiModal(8.0, 0.25), 600, seed=9)
+        for i in range(0, 600, 8):
+            ap.observe(x[i:i + 8])
+        assert hits
+        assert hits[-1][0] == ap.policy

@@ -184,4 +184,171 @@ def test_telemetry_fit_recovers_family():
     assert family == "bimodal"
     assert abs(fitted.eps - 0.25) < 0.05
     stats = telem.straggle_stats()
-    assert stats["straggle_frac"] > 0.15
+    assert stats.straggle_frac > 0.15
+
+
+# -- exact likelihoods (the model-selection substrate) ----------------------
+
+def test_logpdf_matches_numerical_tail_derivative():
+    """The continuous families' exact logpdf must agree with -d/dx tail."""
+    from repro.core.distributions import Pareto as P, ShiftedExp as S
+    xs = np.linspace(1.05, 30.0, 200)
+    for dist in (S(1.0, 10.0), S(0.0, 2.5), P(1.0, 2.5), P(0.5, 1.2)):
+        eps = 1e-6
+        num = (dist.tail(xs - eps) - dist.tail(xs + eps)) / (2 * eps)
+        np.testing.assert_allclose(np.exp(dist.logpdf(xs)), num,
+                                   rtol=1e-4, atol=1e-12)
+
+
+def test_logpdf_support_boundaries():
+    assert ShiftedExp(2.0, 1.0).logpdf(np.array([1.9]))[0] == -np.inf
+    assert Pareto(1.5, 2.0).logpdf(np.array([1.4]))[0] == -np.inf
+    assert ShiftedExp(2.0, 0.0).logpdf(np.array([2.0]))[0] == 0.0  # atom
+
+
+def test_bimodal_logpmf_masses_bands_and_floor():
+    d = BiModal(10.0, 0.25)
+    ll = d.logpmf(np.array([1.0, 1.1, 10.0, 9.0, 5.0]))
+    assert ll[0] == ll[1] == pytest.approx(np.log(0.75))   # low band
+    assert ll[2] == ll[3] == pytest.approx(np.log(0.25))   # high band
+    assert ll[4] < -600                                    # between modes
+
+
+def test_telemetry_selects_bimodal_on_jittered_scaled_telemetry():
+    """REGRESSION (satellite 1): the seed's finite-difference density is
+    identically ~0 inside Bi-Modal's flat tail steps, so jittered bimodal
+    telemetry could essentially never be selected as bimodal; the exact
+    logpmf route recovers it, on any time scale."""
+    rng = np.random.default_rng(1)
+    x = np.concatenate([1 + 0.05 * rng.standard_normal(1600),
+                        8 + 0.3 * rng.standard_normal(400)])
+    rng.shuffle(x)
+    for scale in (1.0, 173.0):
+        telem = Telemetry(window=4096)
+        telem.record_step(scale * x)
+        fitted, family = telem.fit()
+        assert family == "bimodal", family
+        assert abs(fitted.B - 8.0) < 0.5
+        assert abs(fitted.eps - 0.2) < 0.03
+
+
+def test_telemetry_selects_bimodal_with_rare_catastrophic_stragglers():
+    """A Pareto fit piles unbounded density on the duplicated fast mode
+    (lam = x.min()); the interval likelihood at the data's measurement
+    resolution keeps mass-vs-density comparisons honest."""
+    telem = Telemetry(window=8192)
+    telem.record_step(np.asarray(BiModal(1e4, 5e-4).sample(
+        jax.random.PRNGKey(4), (8000,))))
+    _, family = telem.fit()
+    assert family == "bimodal"
+
+
+def test_telemetry_rejects_vacuous_bimodal_on_tight_unimodal_data():
+    telem = Telemetry(window=4096)
+    telem.record_step(np.asarray(ShiftedExp(10.0, 0.5).sample(
+        jax.random.PRNGKey(9), (2000,))))
+    _, family = telem.fit()
+    assert family == "shifted_exp"
+
+
+# -- telemetry guards (satellite 2) -----------------------------------------
+
+def test_straggle_stats_insufficient_data_is_typed_not_nan():
+    from repro.runtime import InsufficientTelemetry, StraggleStats
+    telem = Telemetry()
+    with np.testing.suppress_warnings() as sup:
+        sup.record(RuntimeWarning)      # any np.median([]) warning = failure
+        res = telem.straggle_stats()
+        assert not sup.log
+    assert isinstance(res, InsufficientTelemetry)
+    assert not res                          # falsy: "not usable"
+    assert res.have == 0 and res.needed == telem.min_samples
+    telem.record_step(np.full(3, 2.0))
+    assert isinstance(telem.straggle_stats(), InsufficientTelemetry)
+    telem.record_step(np.full(8, 2.0))
+    stats = telem.straggle_stats()
+    assert isinstance(stats, StraggleStats)
+    assert stats and stats.num_samples == 11
+    assert np.isfinite(stats.median) and np.isfinite(stats.p99)
+
+
+def test_telemetry_fit_raises_on_short_window():
+    telem = Telemetry()
+    telem.record_step(np.ones(4))
+    with pytest.raises(ValueError, match="not enough telemetry"):
+        telem.fit()
+
+
+# -- fit_service_time round trips (satellite 4) -----------------------------
+
+@pytest.mark.parametrize("dist,family,check", [
+    (ShiftedExp(2.0, 5.0), "shifted_exp",
+     lambda d: abs(d.delta - 2.0) < 0.05 and abs(d.W - 5.0) < 0.3),
+    (Pareto(1.5, 3.0), "pareto",
+     lambda d: abs(d.alpha - 3.0) < 0.25),
+    (BiModal(8.0, 0.2), "bimodal",
+     lambda d: abs(d.B - 8.0) < 0.3 and abs(d.eps - 0.2) < 0.03),
+])
+def test_fit_service_time_round_trip(dist, family, check):
+    from repro.core.distributions import fit_service_time
+    x = np.asarray(dist.sample(jax.random.PRNGKey(11), (4000,)), np.float64)
+    fitted = fit_service_time(x, family)
+    assert check(fitted), fitted
+
+
+def test_pareto_fit_lam_bias_bound():
+    """lam_hat = x.min() over-estimates lam by E[min/lam - 1] =
+    1/(n alpha - 1); pin that one-sided bias bracket."""
+    lam, alpha, n = 1.5, 3.0, 4000
+    from repro.core.distributions import fit_service_time
+    for seed in range(5):
+        x = np.asarray(Pareto(lam, alpha).sample(
+            jax.random.PRNGKey(100 + seed), (n,)), np.float64)
+        fitted = fit_service_time(x, "pareto")
+        assert lam <= fitted.lam <= lam * (1.0 + 20.0 / (n * alpha - 1))
+
+
+def test_bimodal_fit_majority_straggler_regime():
+    """eps > 1/2 puts the median ON the high mode; the midpoint-split
+    fallback in bimodal_low_mode must still find the fast mode."""
+    from repro.core.distributions import fit_service_time
+    x = np.asarray(BiModal(10.0, 0.7).sample(jax.random.PRNGKey(2), (3000,)),
+                   np.float64)
+    fitted = fit_service_time(x, "bimodal")
+    assert abs(fitted.B - 10.0) < 0.5
+    assert abs(fitted.eps - 0.7) < 0.04
+
+
+# -- elastic rounding contract (satellite 3) --------------------------------
+
+def test_round_unique_batch_contract():
+    from repro.runtime.elastic import round_unique_batch
+    assert round_unique_batch(16, 4) == (16, 0)
+    assert round_unique_batch(9, 6) == (12, 3)
+    assert round_unique_batch(1, 8) == (8, 7)
+    with pytest.raises(ValueError):
+        round_unique_batch(8, 0)
+
+
+def test_resize_plan_logs_unique_batch_adjustment(caplog):
+    """REGRESSION (satellite 3): resize_plan silently rounded the unique
+    batch up to a group multiple, changing the global batch; the rounding
+    is now shared, returned via the config, and logged."""
+    import logging
+    # resizing 8 -> 6 workers with this model plans c*=3 (2 part groups);
+    # unique_batch=9 does NOT split over 2 groups, so rounding MUST fire
+    old = CodedStepConfig(n_workers=8, c=2, unique_batch=9)
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.elastic"):
+        new = resize_plan(old, 6, dist=BiModal(10.0, 0.3),
+                          scaling=Scaling.DATA_DEPENDENT, delta=1.0)
+    assert (new.n_workers, new.c) == (6, 3)
+    assert new.unique_batch == 10                # 9 rounded up to 2 groups
+    assert any("rounded up" in r.getMessage() for r in caplog.records)
+    # and a divisible batch stays bit-identical, silently
+    caplog.clear()
+    old2 = CodedStepConfig(n_workers=8, c=2, unique_batch=12)
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.elastic"):
+        new2 = resize_plan(old2, 6, dist=BiModal(10.0, 0.3),
+                           scaling=Scaling.DATA_DEPENDENT, delta=1.0)
+    assert new2.unique_batch == 12
+    assert not caplog.records
