@@ -1,0 +1,79 @@
+"""Load-aware adaptive control on a queued cluster, end to end.
+
+A stationary service-time law, a NON-stationary workload: the Poisson
+arrival rate flips light -> heavy -> light while n FCFS workers serve
+[n, k]-redundant jobs whose remnants cannot be preempted.  The
+single-job planner (the paper's objective) is blind to this — its k*
+never moves.  The load-aware ``AdaptivePlanner`` estimates the arrival
+rate and burstiness from job timestamps, detects the flips with a block
+CUSUM, and re-plans through the batched cluster engine at the estimated
+load — each steady-state re-plan a warm compiled-surface-cache call.
+
+    PYTHONPATH=src python examples/adaptive_load.py
+    PYTHONPATH=src python examples/adaptive_load.py --steps 150   # smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.api import AdaptivePlanner, LoadAwareLatency, Planner, Scenario
+from repro.control import replay
+from repro.control.controller import RedundancyController
+from repro.core import BiModal, Regime, Scaling, ShiftedExp, \
+    sample_regime_trace
+from repro.core.scenario import PoissonArrivals
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--steps", type=int, default=400,
+                    help="steps per regime")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n, steps = args.n, args.steps
+    service = ShiftedExp(1.0, 10.0)
+    scaling = Scaling.SERVER_DEPENDENT
+    trace = sample_regime_trace(
+        [Regime(service, steps, arrivals=PoissonArrivals(0.001)),
+         Regime(service, steps, arrivals=PoissonArrivals(0.03)),
+         Regime(service, steps, arrivals=PoissonArrivals(0.001))],
+        scaling, n, seed=args.seed)
+
+    single_job_k = Planner().plan(Scenario(service, scaling, n)).policy.k
+    print(f"single-job k* (the paper's objective, load-blind): "
+          f"k={single_job_k}")
+
+    prior = Scenario(BiModal(10.0, 0.3), scaling, n)
+    planner = AdaptivePlanner(
+        prior, objective=LoadAwareLatency(num_jobs=600, reps=2,
+                                          backend="cached", preempt=False))
+    res = replay(trace, planner.controller, preempt=False)
+
+    print(f"\nregimes (steps per regime: {steps}):")
+    for r, (lo, hi) in enumerate(trace.boundaries()):
+        ks = sorted(set(int(k) for k in res.policy_k[lo:hi]))
+        rate = trace.regimes[r].arrivals.rate
+        print(f"  regime {r}: Poisson rate {rate:g}  ->  controller ran "
+              f"k in {ks} (clairvoyant oracle: k={res.oracle_k[r]})")
+    print("\ncommits:")
+    for e in res.events:
+        arr = "" if e.arrival is None else \
+            f"  rate~{e.arrival.rate:.4f} disp~{e.arrival.dispersion:.2f}"
+        cache = " [cached surface]" if e.cached else " [closed form]"
+        print(f"  step {e.at // n:4d}  {e.kind:5s}  k {e.old_policy.k:2d}"
+              f" -> {e.new_policy.k:2d}  {e.replan_ms:7.1f} ms{cache}{arr}")
+
+    print(f"\nload-aware regret vs per-regime oracle: {res.regret:.1%}")
+    sj = RedundancyController(prior)
+    res_sj = replay(trace, sj, preempt=False)
+    print(f"single-job-objective controller regret:  {res_sj.regret:.0%}")
+    if res.regret < 0.5 * res_sj.regret:
+        print("-> closing the loop on LOAD, not just the service law, "
+              "is what pays under arrivals.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

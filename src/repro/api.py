@@ -197,7 +197,7 @@ class LoadAwareLatency:
     def __post_init__(self):
         if self.metric not in ("mean", "p50", "p95", "p99"):
             raise ValueError(f"unknown metric {self.metric!r}")
-        if self.backend not in ("batched", "oracle"):
+        if self.backend not in ("batched", "oracle", "cached"):
             raise ValueError(f"unknown backend {self.backend!r}")
 
     def curve(self, scenario: Scenario, ks: Sequence[int]) -> Dict[int, float]:
@@ -367,6 +367,18 @@ class AdaptivePlanner:
     runtime hooks (``control.TrainerActuator``,
     ``control.HedgedServeActuator``, or any object with
     ``apply(policy, model)``) via ``actuators=`` or ``attach``.
+
+    ``objective="load_aware"`` (or a ``LoadAwareLatency`` instance) closes
+    the loop on LOAD as well: pass each job's arrival ``timestamp`` to
+    ``observe`` and the controller estimates the arrival rate and
+    burstiness, detects load drift with a block CUSUM, and re-plans
+    through the batched cluster engine at the estimated load — a warm
+    compiled-surface-cache call, so steady-state re-plans stay in the
+    milliseconds (DESIGN.md §7):
+
+        >>> ap = AdaptivePlanner(scenario, objective="load_aware")
+        >>> for t, step_times in jobs:               # doctest: +SKIP
+        ...     ap.observe(step_times, timestamp=t)
     """
 
     def __init__(self, scenario: Scenario, objective: Optional[Objective] = None,
@@ -376,10 +388,12 @@ class AdaptivePlanner:
             scenario, objective=objective, config=config, detector=detector,
             actuators=actuators)
 
-    def observe(self, worker_times) -> Optional["ControlEvent"]:
-        """Feed one step's per-CU completion times; returns the commit
-        event when the controller re-planned (else None)."""
-        return self.controller.observe(worker_times)
+    def observe(self, worker_times,
+                timestamp: Optional[float] = None) -> Optional["ControlEvent"]:
+        """Feed one step's per-CU completion times (plus, in load-aware
+        mode, the job's arrival instant); returns the commit event when
+        the controller re-planned (else None)."""
+        return self.controller.observe(worker_times, timestamp=timestamp)
 
     def attach(self, actuator) -> "AdaptivePlanner":
         self.controller.actuators.append(actuator)
@@ -394,6 +408,12 @@ class AdaptivePlanner:
     def model(self):
         """The committed ``FittedModel`` (None until booted)."""
         return self.controller.model
+
+    @property
+    def arrival_model(self):
+        """The committed ``ArrivalModel`` (None until the load side has
+        booted — requires timestamps and a load-aware objective)."""
+        return self.controller.arrival_model
 
     @property
     def events(self):

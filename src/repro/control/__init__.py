@@ -23,15 +23,17 @@ The typed front door is ``repro.api.AdaptivePlanner``.
 from .controller import (ControlEvent, ControllerConfig,  # noqa: F401
                          HedgedServeActuator, RedundancyController,
                          TrainerActuator)
-from .detector import DriftDetector, DriftEvent  # noqa: F401
-from .estimators import (BiModalEstimator, FittedModel,  # noqa: F401
-                         OnlineSelector, ParetoEstimator,
-                         ShiftedExpEstimator, fit_window)
+from .detector import (DriftDetector, DriftEvent,  # noqa: F401
+                       LoadDriftDetector)
+from .estimators import (ArrivalEstimator, ArrivalModel,  # noqa: F401
+                         BiModalEstimator, FittedModel, OnlineSelector,
+                         ParetoEstimator, ShiftedExpEstimator, fit_window)
 from .replay import ReplayResult, replay  # noqa: F401
 
 __all__ = [
-    "BiModalEstimator", "ControlEvent", "ControllerConfig", "DriftDetector",
-    "DriftEvent", "FittedModel", "HedgedServeActuator", "OnlineSelector",
+    "ArrivalEstimator", "ArrivalModel", "BiModalEstimator", "ControlEvent",
+    "ControllerConfig", "DriftDetector", "DriftEvent", "FittedModel",
+    "HedgedServeActuator", "LoadDriftDetector", "OnlineSelector",
     "ParetoEstimator", "RedundancyController", "ReplayResult",
     "ShiftedExpEstimator", "fit_window", "replay",
 ]

@@ -4,13 +4,21 @@ Dataflow (DESIGN.md §7):
 
     telemetry batch --> OnlineSelector (streaming fits, forgetting)
                     --> DriftDetector (CUSUM + straggle EWMA vs committed model)
+    job timestamps  --> ArrivalEstimator (decayed rate + dispersion)
+                    --> LoadDriftDetector (block CUSUM vs committed model)
     drift alarm     --> wait for ``refit_samples`` post-change samples
+                        (``arrival_refit_gaps`` clean gaps for a load alarm)
                     --> one-shot exact-likelihood refit of the post-change
-                        window (``fit_window``)
+                        window (``fit_window``; a load alarm re-commits the
+                        arrival model instead — the service fit is kept)
                     --> rule-of-three hedge if the fit claims stragglers
                         are impossible AND its k-curve is flat
                     --> ``Planner.plan`` on the closed-form path
-                        (microseconds at production n)
+                        (microseconds at production n) — or, in the
+                        load-aware objective mode with an arrival model
+                        committed, one warm ``runtime.surface_cache``
+                        queueing surface at the estimated rate
+                        (milliseconds; the compiled-surface cache)
                     --> hysteresis + switching-cost gate
                     --> actuators (trainer step config, hedged serving, ...)
 
@@ -30,9 +38,9 @@ import numpy as np
 from ..core.distributions import BiModal, ShiftedExp
 from ..core.policy import Policy
 from ..core.scenario import Scenario
-from .detector import DriftDetector, DriftEvent
-from .estimators import (FittedModel, OnlineSelector, fit_window,
-                         model_median)
+from .detector import DriftDetector, DriftEvent, LoadDriftDetector
+from .estimators import (ArrivalEstimator, ArrivalModel, FittedModel,
+                         OnlineSelector, fit_window, model_median)
 
 __all__ = ["ControlEvent", "ControllerConfig", "RedundancyController",
            "TrainerActuator", "HedgedServeActuator"]
@@ -56,19 +64,41 @@ class ControllerConfig:
                                   # no k-preference and the hedge may decide
     forget: float = 0.999       # streaming estimator forgetting
     buffer: int = 4096          # telemetry ring for change-point refits
+    arrival_forget: float = 0.998   # arrival-estimator forgetting
+    arrival_min_gaps: int = 16  # gaps before the first arrival commit
+    arrival_refit_gaps: int = 48    # clean post-alarm gaps before a load
+                                    # commit (the estimator is reset at the
+                                    # alarm, so these are post-change)
+    arrival_refresh_gaps: int = 256     # periodic load-recommit cadence (a
+                                        # slow drift the CUSUM won't alarm
+                                        # on still reaches the plan); 0=off
+    arrival_block: int = 12     # gaps per load-CUSUM block
 
     def __post_init__(self):
         if self.boot_samples < 2 or self.refit_samples < 2:
             raise ValueError("boot/refit sample minimums must be >= 2")
         if not (0.0 <= self.hysteresis):
             raise ValueError("hysteresis must be >= 0")
+        if not (0.0 < self.arrival_forget <= 1.0):
+            raise ValueError(
+                f"arrival_forget must be in (0, 1], got {self.arrival_forget}")
+        if self.arrival_min_gaps < 2 or self.arrival_block < 2:
+            raise ValueError("arrival_min_gaps and arrival_block must be >= 2")
+        if self.arrival_refresh_gaps < 0:
+            raise ValueError(
+                f"arrival_refresh_gaps must be >= 0 (0 = off), "
+                f"got {self.arrival_refresh_gaps}")
+        if self.arrival_refit_gaps < self.arrival_min_gaps:
+            raise ValueError(
+                "arrival_refit_gaps must be >= arrival_min_gaps "
+                f"({self.arrival_refit_gaps} < {self.arrival_min_gaps})")
 
 
 @dataclasses.dataclass(frozen=True)
 class ControlEvent:
     """One committed control decision (model and/or policy update)."""
 
-    kind: str                   # "boot" | "drift" | "refresh"
+    kind: str                   # "boot" | "drift" | "refresh" | "load"
     at: int                     # absolute CU-sample index of the commit
     model: FittedModel
     hedged: bool                # planned under the rare-straggler hedge
@@ -77,6 +107,12 @@ class ControlEvent:
     switched: bool
     replan_ms: float            # wall time of the Planner.plan call
     drift: Optional[DriftEvent] = None
+    arrival: Optional[ArrivalModel] = None  # arrival model planned under
+    cached: bool = False        # re-planned on a compiled-surface cache
+                                # queueing curve (vs the closed form)
+    warm: bool = False          # ... and that call HIT a warm executable
+                                # (False on the first compile of a new
+                                # (family, ..., bucket) surface key)
 
     @property
     def family(self) -> str:
@@ -144,6 +180,21 @@ class RedundancyController:
     telemetry arrive.  ``observe`` is the single entry point: feed it the
     per-CU completion times of each step and it returns a ``ControlEvent``
     when (and only when) a commit happened.
+
+    ``objective`` selects the planning mode.  Any ordinary ``Objective``
+    (or None, the paper's mean) re-plans on the single-job closed form.
+    The string ``"load_aware"`` — or a ``LoadAwareLatency`` instance for
+    explicit queueing knobs — turns on LOAD-AWARE control: pass job
+    arrival ``timestamp``s to ``observe`` and the controller estimates
+    the arrival process (rate + burstiness with exponential forgetting),
+    watches it with a block-CUSUM load-drift channel, and once an
+    arrival model is committed every re-plan routes through the batched
+    cluster engine at the estimated load (a warm compiled-surface-cache
+    call, ``runtime.surface_cache``) instead of the closed form — under
+    arrivals, redundancy also consumes service capacity, so the
+    single-job optimum systematically over-provisions.  Until the first
+    arrival commit (or when timestamps are never supplied) it plans with
+    the closed form, exactly like the single-job mode.
     """
 
     def __init__(self, scenario: Scenario,
@@ -152,10 +203,24 @@ class RedundancyController:
                  detector: Optional[DriftDetector] = None,
                  selector: Optional[OnlineSelector] = None,
                  actuators: Sequence[Actuator] = ()):
-        from ..api import Planner
+        from ..api import LoadAwareLatency, Planner
         self.scenario = scenario
         self.config = config or ControllerConfig()
-        self.planner = Planner(objective)
+        if isinstance(objective, str):
+            if objective != "load_aware":
+                raise ValueError(
+                    f"unknown objective mode {objective!r} "
+                    f"(the only string mode is 'load_aware')")
+            # controller defaults: short surfaces, a couple of CRN reps —
+            # a warm cached re-plan in single-digit milliseconds
+            objective = LoadAwareLatency(num_jobs=600, reps=2,
+                                         backend="cached")
+        if isinstance(objective, LoadAwareLatency):
+            self.load_objective: Optional[LoadAwareLatency] = objective
+            self.planner = Planner()     # closed form until arrivals commit
+        else:
+            self.load_objective = None
+            self.planner = Planner(objective)
         self.detector = detector or DriftDetector()
         self.selector = selector or OnlineSelector(forget=self.config.forget)
         self.actuators = list(actuators)
@@ -166,6 +231,16 @@ class RedundancyController:
         self._seen = 0
         self._pending: Optional[DriftEvent] = None
         self._last_commit = 0
+        # -- the arrival (load) side ----------------------------------------
+        self.arrival_estimator = ArrivalEstimator(
+            forget=self.config.arrival_forget,
+            min_gaps=self.config.arrival_min_gaps,
+            block=self.config.arrival_block)
+        self.load_detector = LoadDriftDetector()
+        self.arrival_model: Optional[ArrivalModel] = None
+        self._pending_load: Optional[DriftEvent] = None
+        self._gaps_seen = 0
+        self._last_load_commit = 0
 
     # -- read side ----------------------------------------------------------
     @property
@@ -184,8 +259,14 @@ class RedundancyController:
         return [e for e in self.events if e.kind == "drift"]
 
     # -- the loop -----------------------------------------------------------
-    def observe(self, worker_times: np.ndarray) -> Optional[ControlEvent]:
+    def observe(self, worker_times: np.ndarray,
+                timestamp: Optional[float] = None) -> Optional[ControlEvent]:
         """Feed one step's per-CU completion times; maybe commit.
+
+        ``timestamp`` is the job's absolute arrival instant (any monotone
+        clock): it feeds the arrival-rate estimator and the load-drift
+        channel.  Omitting it leaves the load side dormant — the
+        controller then behaves exactly like the single-job mode.
 
         When the scenario carries an exogenous per-CU ``delta`` (known
         deterministic work), the controller estimates the NOISE
@@ -197,18 +278,44 @@ class RedundancyController:
         x = np.asarray(worker_times, dtype=np.float64).ravel()
         x = x[np.isfinite(x)]
         if x.size == 0:
-            return None
+            # the job still ARRIVED even if its step produced no finite
+            # telemetry (failed/timed-out step): dropping the timestamp
+            # would merge two arrivals into one doubled gap and bias the
+            # rate estimate low
+            return self._observe_arrival(timestamp)
         if self.scenario.delta is not None:
             x = np.maximum(x - self.scenario.delta, 1e-12)
         start = self._seen
         self._seen += x.size
         self._buffer.extend(x.tolist())
         self.selector.update(x)
+        load_event = self._observe_arrival(timestamp)
 
         if self.model is None:                           # bootstrapping
-            if self._seen >= self.config.boot_samples:
-                return self._commit("boot", self._window(self._seen))
-            return None
+            if self._seen < self.config.boot_samples:
+                return None
+            if self.load_objective is not None and timestamp is not None \
+                    and not self.arrival_estimator.ready:
+                # timestamps ARE flowing (this very observation carries
+                # one): hold the boot until the arrival model can commit
+                # alongside, so the very first committed plan is
+                # load-aware — a closed-form boot can pick a single-job k
+                # (e.g. full replication) whose un-preempted remnants
+                # poison the queue long after the load-aware re-plan
+                # corrects it.  A caller that STOPS supplying timestamps
+                # falls through to the closed-form boot on the next
+                # timestamp-less observation instead of wedging forever.
+                return None
+            return self._commit("boot", self._window(self._seen))
+        if load_event is not None:
+            # the service channel still sees this batch: a load commit no
+            # longer rebases the service detector (see _commit), so its
+            # statistics keep accumulating; a service alarm raised here
+            # is parked and committed by the normal drift path
+            alarm = self.detector.update(x, at=start)
+            if alarm is not None and self._pending is None:
+                self._pending = alarm
+            return load_event
 
         if self._pending is not None:                    # drift: wait + refit
             return self._maybe_drift_commit()
@@ -224,6 +331,55 @@ class RedundancyController:
             if model is not None:
                 return self._commit("refresh", window=None, model=model)
             self._last_commit = self._seen     # nothing to sync yet
+        return None
+
+    def _observe_arrival(self, timestamp: Optional[float]
+                         ) -> Optional[ControlEvent]:
+        """The load side of one observation: estimator update, load-drift
+        CUSUM, and (maybe) a "load" commit.  Returns the commit event, or
+        None.  A no-op without a timestamp or a load-aware objective."""
+        if timestamp is None:
+            return None
+        est = self.arrival_estimator
+        had_last = est.primed
+        est.observe(timestamp)
+        if not had_last:
+            return None                        # first instant: no gap yet
+        gap_idx = self._gaps_seen
+        self._gaps_seen += 1
+        if self.load_objective is None:
+            return None                        # estimation only, no control
+        if self.arrival_model is None:
+            # arrival boot: commit as soon as the evidence floor is met
+            # AND the service side has booted (plans need both models)
+            if est.ready and self.model is not None:
+                return self._commit("load", window=None, model=self.model)
+            return None
+        if self._pending_load is None:
+            alarm = self.load_detector.update(
+                np.asarray([est.last_gap]), at=gap_idx)
+            if alarm is not None:
+                self._pending_load = alarm
+                est.reset()          # clean post-change gap accumulation
+                return None
+            if self.config.arrival_refresh_gaps and \
+                    self._gaps_seen - self._last_load_commit >= \
+                    self.config.arrival_refresh_gaps and \
+                    self.load_detector.charge < 0.25:
+                # periodic resync to the decayed estimate: slow drifts
+                # (e.g. burstiness bleeding away after a burst regime)
+                # reach the plan without ever alarming; silent unless
+                # the policy actually moves.  Held off while a CUSUM side
+                # is charged — the recommit would rebase away evidence an
+                # in-progress change has banked
+                return self._commit("load", window=None, model=self.model,
+                                    quiet=True)
+            return None
+        if est.num_gaps >= self.config.arrival_refit_gaps:
+            ev = self._commit("load", window=None, model=self.model,
+                              drift=self._pending_load)
+            self._pending_load = None
+            return ev
         return None
 
     # -- internals ----------------------------------------------------------
@@ -248,13 +404,41 @@ class RedundancyController:
 
     def _commit(self, kind: str, window: Optional[np.ndarray],
                 drift: Optional[DriftEvent] = None,
-                model: Optional[FittedModel] = None) -> Optional[ControlEvent]:
+                model: Optional[FittedModel] = None,
+                quiet: bool = False) -> Optional[ControlEvent]:
         fitted = model if model is not None else fit_window(window)
         plan_dist, plan_delta, hedged, unit = self._hedged_plan_dist(fitted)
         scenario = dataclasses.replace(
             self.scenario, dist=plan_dist, delta=plan_delta)
+        if kind == "load" or (kind == "boot" and
+                              self.load_objective is not None and
+                              self.arrival_estimator.ready):
+            # a "load" commit is exactly a post-alarm (or boot/refresh)
+            # re-estimate of the arrival model; a boot in load-aware mode
+            # commits both models at once so the first plan is already
+            # load-aware.  Other commit kinds keep the COMMITTED arrival
+            # model — it is the load detector's reference, and rebasing
+            # it on every service refresh would reset the CUSUM faster
+            # than a real load change can accumulate evidence (the load
+            # channel would be blind).
+            self.arrival_model = self.arrival_estimator.model()
+            self.load_detector.rebase(self.arrival_model,
+                                      at=self._gaps_seen)
+            self._last_load_commit = self._gaps_seen
         t0 = time.perf_counter()
-        plan = self.planner.plan(scenario)
+        cached = warm = False
+        if self.load_objective is not None and self.arrival_model is not None:
+            from ..api import Planner
+            cached = self.load_objective.backend == "cached"
+            if cached:
+                from ..runtime.surface_cache import surface_cache_stats
+                misses0 = surface_cache_stats()["misses"]
+            plan = Planner._finalize(
+                scenario, self._load_aware_curve(scenario, unit))
+            if cached:
+                warm = surface_cache_stats()["misses"] == misses0
+        else:
+            plan = self.planner.plan(scenario)
         replan_ms = (time.perf_counter() - t0) * 1e3
         new = plan.policy
         old = self._policy
@@ -281,20 +465,58 @@ class RedundancyController:
         for a in self.actuators:
             a.apply(self._policy, fitted)
         self.model = fitted
-        self.detector.rebase(fitted, at=self._seen)
+        if kind != "load":
+            # a load commit re-plans under an UNCHANGED service model:
+            # rebasing the service detector would zero the CUSUM/EWMA
+            # evidence a concurrent service drift has banked (the mirror
+            # of keeping the committed arrival model across service
+            # commits above)
+            self.detector.rebase(fitted, at=self._seen)
         if kind == "drift" and window is not None:
             # restart the streaming estimators from the post-change window
             self.selector.reset(seed_samples=window)
-        self._last_commit = self._seen
+        if kind != "load":
+            # the service-refresh clock ticks on SERVICE-model commits
+            # only: a load commit reuses the stale committed service
+            # model, so letting it reset the clock would starve the
+            # periodic selector resync whenever load commits fire more
+            # often than refresh_every samples (the third asymmetry,
+            # mirroring the two detector-rebase rules above)
+            self._last_commit = self._seen
         event = ControlEvent(
             kind=kind, at=self._seen, model=fitted, hedged=hedged,
             old_policy=old, new_policy=self._policy, switched=switched,
-            replan_ms=replan_ms, drift=drift)
-        if kind != "refresh" or switched:
-            # refreshes that change nothing are silent bookkeeping
+            replan_ms=replan_ms, drift=drift, arrival=self.arrival_model,
+            cached=cached, warm=warm)
+        if (kind != "refresh" and not quiet) or switched:
+            # refreshes (and quiet load resyncs) that change nothing are
+            # silent bookkeeping
             self.events.append(event)
             return event
         return None
+
+    def _load_aware_curve(self, scenario: Scenario, unit: float):
+        """k -> queueing latency at the committed arrival model, via the
+        sweep backend of the load objective (the compiled-surface cache
+        by default — a warm call for steady-state re-plans).
+
+        The plan scenario may live in normalized time units (Bi-Modal's
+        unit-low-mode convention, or the hedge's typical-time unit):
+        ``unit`` raw seconds per curve unit.  The arrival RATE is
+        measured in raw time, so it converts as rate_curve = rate_raw *
+        unit — one job per 20 s is one job per 2 curve units when the
+        unit is 10 s.
+        """
+        from ..runtime.cluster import resolve_sweep_backend
+        obj = self.load_objective
+        am = self.arrival_model
+        run = resolve_sweep_backend(obj.backend)
+        sc = dataclasses.replace(scenario, arrivals=am.process())
+        sw = run(sc, loads=[am.rate * unit], ks=sc.legal_ks(),
+                 num_jobs=obj.num_jobs, reps=obj.reps, preempt=obj.preempt,
+                 cancel_overhead=obj.cancel_overhead, seed=obj.seed,
+                 warmup=obj.warmup)
+        return sw.curve(0, obj.metric)
 
     def _hedged_plan_dist(self, fitted: FittedModel):
         """What to PLAN under (the committed model itself is always the

@@ -33,9 +33,9 @@ from typing import Optional
 
 import numpy as np
 
-from .estimators import FittedModel
+from .estimators import ArrivalModel, FittedModel
 
-__all__ = ["DriftDetector", "DriftEvent"]
+__all__ = ["DriftDetector", "DriftEvent", "LoadDriftDetector"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,4 +127,156 @@ class DriftDetector:
                 start = max(self.rebased_at, idx - int(math.ceil(1.0 / a)))
                 return DriftEvent("straggle_ewma", at=idx, start=start,
                                   stat=self.ewma, threshold=self.band)
+        return None
+
+
+@dataclasses.dataclass
+class LoadDriftDetector:
+    """CUSUM load-drift channel on the interarrival stream.
+
+    The service channel (``DriftDetector``) cannot see a workload change
+    that leaves task times alone — a traffic ramp or an arrival-process
+    burstiness flip moves only the job TIMESTAMPS.  This detector
+    watches the gap stream THROUGH the committed ``ArrivalModel``, in
+    BLOCKS of ``block`` consecutive gaps: bursty arrivals (MMPP trains)
+    are serially correlated, so a per-gap CUSUM random-walks across any
+    usable threshold during a single dwell; a block mean spanning a few
+    dwells is approximately independent of the next and near-Gaussian.
+
+      * Rate channel.  Under the committed model the block sum S of
+        ``model.block`` gaps satisfies E[rate * S / B] = 1 with variance
+        ``model.block_dispersion / B`` — the EMPIRICAL block-scale
+        dispersion the estimator measured, so serial correlation in
+        bursty trains is calibrated in, not assumed away.  z is the
+        standardized block residual; two one-sided CUSUMs accumulate
+        (-z - slack) ("load_up": gaps shortened, the rate rose) and
+        (z - slack) ("load_down").  z is winsorized at ``cap`` so one
+        freak lull cannot alarm alone.
+      * Dispersion channel.  A burstiness flip at CONSTANT mean rate
+        leaves E[z] ~ 0 but scales E[z^2] by new/committed block
+        dispersion; one-sided CUSUMs on (z^2 - mu - ``disp_slack``)
+        ("burst_up") and (mu - z^2 - ``disp_slack_dn``) ("burst_down")
+        catch it, with mu the model-implied E[z^2] — 1 in general, but
+        bd / floor(bd) under a near-clockwork commit whose variance sits
+        below the standardization floor (z^2 - 1 would otherwise read
+        "smoother" forever and sure-fire the down side).
+
+    Same contract as the service detector: plain deterministic
+    recursions, ``rebase`` on every commit, the block index where the
+    alarming side last sat at zero marks the change-point estimate (in
+    gap units).  ``at``/``start`` are absolute GAP indices.
+
+    The ``kind`` names the CHANNEL that crossed first, not the ground-
+    truth change: a large rate shift also inflates z^2 (squared bias of
+    the standardized residual), so it can cross the dispersion channel
+    before the rate channel and report "burst_up".  The controller
+    treats every kind identically (re-estimate + re-plan), so the label
+    is diagnostic only.
+    """
+
+    threshold: float = 19.0   # rate-CUSUM level, in block units: a 2x
+                              # rate flip is |E z| ~ 0.5 sqrt(block /
+                              # block_dispersion) ~ 1.7 per block under a
+                              # Poisson commit -> alarm in ~16 blocks;
+                              # high enough that the residual CROSS-block
+                              # correlation of long bursty dwells cannot
+                              # random-walk across it within ~1k blocks
+    slack: float = 0.5
+    cap: float = 6.0          # winsorized |z| <= cap (rate channel)
+    disp_threshold: float = 19.0  # Poisson->MMPP: E[z^2] ~ block-
+                                  # dispersion ratio ~ 3-6 -> a few blocks
+    disp_slack: float = 1.0   # block residuals of bursty gaps are heavy-
+                              # tailed; spikes must cluster to alarm
+    disp_slack_dn: float = 0.35   # z^2 - mu >= -mu: the down side is
+                                  # variance-bounded and runs tighter
+    disp_cap: float = 3.0     # |z| winsorization for the DISPERSION
+                              # channel: one freak block contributes at
+                              # most 8 - slack, so >= 2 spikes in quick
+                              # succession are required to alarm
+    disp_floor: float = 0.05  # standardization floor on block dispersion
+    min_blocks: int = 2       # blocks after rebase before alarms
+
+    def __post_init__(self):
+        self.model: Optional[ArrivalModel] = None
+        self._rebase(at=0)
+
+    def _rebase(self, at: int) -> None:
+        self.g_up = self.g_dn = 0.0    # rate rose / fell
+        self.d_up = self.d_dn = 0.0    # burstier / smoother
+        self.up_start = self.dn_start = at
+        self.du_start = self.dd_start = at
+        self._blk_sum = 0.0
+        self._blk_n = 0
+        self._blocks = 0
+        self.rebased_at = at
+
+    def rebase(self, model: ArrivalModel, at: int) -> None:
+        """Adopt a newly committed arrival model; statistics restart
+        (the partial block is dropped — it straddles the commit)."""
+        self.model = model
+        self._rebase(at)
+
+    @property
+    def charge(self) -> float:
+        """The hottest CUSUM side as a fraction of its alarm level —
+        ~0 when quiescent, 1.0 at the alarm.  The controller's periodic
+        load resync consults it: re-committing (which rebases all four
+        statistics) while a side is accumulating would erase the very
+        evidence an in-progress change has banked."""
+        return max(self.g_up / self.threshold, self.g_dn / self.threshold,
+                   self.d_up / self.disp_threshold,
+                   self.d_dn / self.disp_threshold)
+
+    def update(self, gaps: np.ndarray, at: int) -> Optional[DriftEvent]:
+        """Feed interarrival gaps (first gap has absolute index ``at``);
+        returns the first alarm (the controller rebases before feeding
+        more)."""
+        if self.model is None:
+            return None
+        g = np.asarray(gaps, dtype=np.float64).ravel()
+        g = g[np.isfinite(g)]
+        if g.size == 0:
+            return None
+        block = self.model.block
+        bd = max(self.model.block_dispersion, 0.0)
+        sd = math.sqrt(max(bd, self.disp_floor) / block)
+        mu = bd / max(bd, self.disp_floor)     # model-implied E[z^2] <= 1
+        for i in range(g.size):
+            idx = at + i
+            self._blk_sum += g[i]
+            self._blk_n += 1
+            if self._blk_n < block:
+                continue
+            r = self.model.rate * self._blk_sum / block
+            self._blk_sum = 0.0
+            self._blk_n = 0
+            self._blocks += 1
+            z0 = (r - 1.0) / sd
+            z = float(np.clip(z0, -self.cap, self.cap))
+            zd = float(np.clip(z0, -self.disp_cap, self.disp_cap))
+            e = zd * zd - mu
+            self.g_up = max(0.0, self.g_up - z - self.slack)
+            if self.g_up == 0.0:
+                self.up_start = idx + 1
+            self.g_dn = max(0.0, self.g_dn + z - self.slack)
+            if self.g_dn == 0.0:
+                self.dn_start = idx + 1
+            self.d_up = max(0.0, self.d_up + e - self.disp_slack)
+            if self.d_up == 0.0:
+                self.du_start = idx + 1
+            self.d_dn = max(0.0, self.d_dn - e - self.disp_slack_dn)
+            if self.d_dn == 0.0:
+                self.dd_start = idx + 1
+            if self._blocks < self.min_blocks:
+                continue
+            for stat, level, kind, start in (
+                    (self.g_up, self.threshold, "load_up", self.up_start),
+                    (self.g_dn, self.threshold, "load_down", self.dn_start),
+                    (self.d_up, self.disp_threshold, "burst_up",
+                     self.du_start),
+                    (self.d_dn, self.disp_threshold, "burst_down",
+                     self.dd_start)):
+                if stat > level:
+                    return DriftEvent(kind, at=idx, start=start,
+                                      stat=stat, threshold=level)
         return None

@@ -38,9 +38,12 @@ import numpy as np
 from ..core.distributions import (ATOM_RTOL, BiModal, Pareto, ServiceTime,
                                   ShiftedExp, bimodal_low_mode,
                                   sample_resolution, select_service_time)
+from ..core.scenario import (ArrivalProcess, DeterministicArrivals,
+                             MMPPArrivals, PoissonArrivals, arrival_gap)
 
-__all__ = ["FittedModel", "ShiftedExpEstimator", "ParetoEstimator",
-           "BiModalEstimator", "OnlineSelector", "fit_window"]
+__all__ = ["ArrivalEstimator", "ArrivalModel", "FittedModel",
+           "ShiftedExpEstimator", "ParetoEstimator", "BiModalEstimator",
+           "OnlineSelector", "fit_window"]
 
 #: Per-sample log-likelihood floor (matches the logpmf miss floor).
 LL_FLOOR = -700.0
@@ -364,6 +367,180 @@ class OnlineSelector:
         if not cands:
             return None
         return max(cands, key=lambda t: t[0])[2]
+
+
+# --------------------------------------------------------------------------
+# Arrival-process estimation (the LOAD side of the control loop)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalModel:
+    """A committed arrival-process model: mean rate plus burstiness.
+
+    ``rate``        jobs per unit time (1 / mean interarrival gap).
+    ``dispersion``  the index of dispersion of the gaps — Var[gap] /
+                    E[gap]^2, the squared coefficient of variation: 1 for
+                    Poisson, < 1 toward clockwork, > 1 for bursty trains.
+    ``num_gaps``    effective evidence mass (decayed gap count), the same
+                    rule-of-three currency as ``FittedModel.num_samples``.
+    ``block`` /     the detector's residual calibration: the variance of
+    ``block_dispersion``  a BLOCK-of-``block``-gaps sum, expressed as an
+                    index of dispersion (Var[S_B] / (B mean_gap^2)).  For
+                    renewal gaps it equals ``dispersion``; bursty trains
+                    are serially correlated and inflate it — estimating
+                    it empirically is what keeps the load CUSUM
+                    calibrated without any independence assumption.
+    """
+
+    rate: float
+    dispersion: float
+    num_gaps: float = 0.0
+    block: int = 12
+    block_dispersion: Optional[float] = None
+
+    def __post_init__(self):
+        if self.block_dispersion is None:
+            object.__setattr__(self, "block_dispersion", self.dispersion)
+
+    #: dispersion below which the committed process is clockwork, and the
+    #: band around 1 treated as Poisson (between them, Poisson still —
+    #: there is no sub-Poisson renewal family in the substrate).
+    DETERMINISTIC_BELOW = 0.25
+    POISSON_BELOW = 1.5
+    #: the symmetric two-state MMPP's marginal gap mixture caps CV^2 at 3
+    MMPP_CAP = 2.9
+
+    def process(self) -> ArrivalProcess:
+        """The planning-substrate ``ArrivalProcess`` matching this model.
+
+        Dispersion maps onto the closest shape the cluster engines
+        sample: clockwork (``DeterministicArrivals``) below
+        ``DETERMINISTIC_BELOW``, Poisson up to ``POISSON_BELOW``, else a
+        symmetric two-state ``MMPPArrivals`` whose burst multiplier b
+        solves the marginal-mixture identity CV^2 = 3 - 8/(b + 1/b)^2
+        (slow = 1/b, burst = b, so the long-run rate is exact).
+        """
+        if self.dispersion < self.DETERMINISTIC_BELOW:
+            return DeterministicArrivals(rate=self.rate)
+        if self.dispersion <= self.POISSON_BELOW:
+            return PoissonArrivals(rate=self.rate)
+        cv2 = min(self.dispersion, self.MMPP_CAP)
+        t = math.sqrt(8.0 / (3.0 - cv2))            # t = b + 1/b
+        b = 0.5 * (t + math.sqrt(t * t - 4.0))
+        return MMPPArrivals(rate=self.rate, slow=1.0 / b, burst=b)
+
+
+class ArrivalEstimator:
+    """Streaming interarrival-rate/burstiness estimation from job
+    timestamps with exponential forgetting.
+
+    Feed absolute arrival instants in order; only the GAPS enter the
+    decayed (weight, sum, sum-of-squares) moments, so every committed
+    statistic is invariant under timestamp translation by construction
+    (pinned by the hypothesis suite).  ``reset`` drops the moments but
+    keeps the last timestamp — the post-change gap stream starts
+    accumulating immediately after a load-drift alarm.
+    """
+
+    def __init__(self, forget: float = 0.998, min_gaps: int = 16,
+                 block: int = 12):
+        if not (0.0 < forget <= 1.0):
+            raise ValueError(f"forget must be in (0, 1], got {forget}")
+        if min_gaps < 2:
+            raise ValueError(f"min_gaps must be >= 2, got {min_gaps}")
+        if block < 2:
+            raise ValueError(f"block must be >= 2, got {block}")
+        self.forget = forget
+        self.min_gaps = min_gaps
+        self.block = block
+        self._last_ts: Optional[float] = None
+        self.last_gap: float = 0.0             # most recent gap observed
+        self.w = self.sg = self.sg2 = 0.0
+        self.bw = self.bs = self.bs2 = 0.0     # decayed block-sum moments
+        self._blk_sum = 0.0
+        self._blk_n = 0
+        self._count = 0
+
+    def observe(self, timestamp: float) -> None:
+        """One job arrival instant (monotone non-decreasing)."""
+        t = float(timestamp)
+        if self._last_ts is not None:
+            # shared clock-tolerance rule (ulp-backward ticks clamp,
+            # larger decreases raise); floored to keep gaps positive
+            gap = max(arrival_gap(self._last_ts, t), _TINY)
+            self.last_gap = gap
+            f = self.forget
+            self.w = self.w * f + 1.0
+            self.sg = self.sg * f + gap
+            self.sg2 = self.sg2 * f + gap * gap
+            self._count += 1
+            self._blk_sum += gap
+            self._blk_n += 1
+            if self._blk_n == self.block:
+                fb = f ** self.block           # one decay tick per block
+                self.bw = self.bw * fb + 1.0
+                self.bs = self.bs * fb + self._blk_sum
+                self.bs2 = self.bs2 * fb + self._blk_sum * self._blk_sum
+                self._blk_sum = 0.0
+                self._blk_n = 0
+        self._last_ts = t
+
+    def reset(self) -> None:
+        """Forget the moments (post-change restart); the last timestamp
+        is kept so the very next arrival contributes a clean gap."""
+        self.w = self.sg = self.sg2 = 0.0
+        self.bw = self.bs = self.bs2 = 0.0
+        self._blk_sum = 0.0
+        self._blk_n = 0
+        self._count = 0
+
+    @property
+    def primed(self) -> bool:
+        """Whether a first timestamp exists (the next observe is a gap)."""
+        return self._last_ts is not None
+
+    @property
+    def weight(self) -> float:
+        return self.w
+
+    @property
+    def num_gaps(self) -> int:
+        """Gaps observed since the last reset (undecayed count)."""
+        return self._count
+
+    @property
+    def ready(self) -> bool:
+        return self._count >= self.min_gaps
+
+    def rate(self) -> float:
+        """1 / decayed mean gap (jobs per unit time)."""
+        return self.w / max(self.sg, _TINY)
+
+    def dispersion(self) -> float:
+        """Decayed index of dispersion Var[gap] / E[gap]^2 (CV^2)."""
+        mean = self.sg / max(self.w, _TINY)
+        var = max(self.sg2 / max(self.w, _TINY) - mean * mean, 0.0)
+        return var / max(mean * mean, _TINY)
+
+    def block_dispersion(self) -> float:
+        """Var[block sum] / (block * mean_gap^2): the EMPIRICAL residual
+        scale of a block mean under whatever serial correlation the
+        stream carries (equals ``dispersion`` for renewal streams).
+        Falls back to the per-gap dispersion until two blocks exist."""
+        if self.bw < 2.0:
+            return self.dispersion()
+        mean = self.sg / max(self.w, _TINY)
+        bmean = self.bs / max(self.bw, _TINY)
+        bvar = max(self.bs2 / max(self.bw, _TINY) - bmean * bmean, 0.0)
+        return bvar / max(self.block * mean * mean, _TINY)
+
+    def model(self) -> ArrivalModel:
+        if not self.ready:
+            raise ValueError(
+                f"need {self.min_gaps} gaps, have {self._count}")
+        return ArrivalModel(rate=self.rate(), dispersion=self.dispersion(),
+                            num_gaps=self.w, block=self.block,
+                            block_dispersion=self.block_dispersion())
 
 
 def fit_window(samples: np.ndarray) -> FittedModel:

@@ -7,18 +7,35 @@ regime (common random numbers), so the controller's trajectory, every
 static plan, and the oracle are scored on the SAME realized randomness —
 differences are pure policy, not sampling noise.
 
-Step semantics: at step t the controller's current policy (n, k) runs —
-the step completes at the k-th smallest of the n task times at task size
-s = n/k (the paper's Y_{k:n}) — and only then does the controller observe
-the step's per-CU times (s = 1 column of the same tables; the runtime
-recovers CU times from the step barrier since s is known).  Decisions at
-t therefore depend only on data strictly before t.
+Step semantics, one job at a time (``trace.arrivals is None``): at step
+t the controller's current policy (n, k) runs — the step completes at
+the k-th smallest of the n task times at task size s = n/k (the paper's
+Y_{k:n}) — and only then does the controller observe the step's per-CU
+times (s = 1 column of the same tables; the runtime recovers CU times
+from the step barrier since s is known).  Decisions at t therefore
+depend only on data strictly before t.
+
+QUEUED semantics (the trace carries arrival instants): each step is a
+JOB arriving at its sampled instant and contending for the n FCFS
+workers; its cost is the any-k queueing latency D_t - A_t, with worker
+free-times carried across steps — so a policy switch also pays the
+occupancy its predecessor left behind (draining in-flight redundancy).
+Static plans and the per-regime oracle are scored on the SAME arrivals
+and task tables by a scoring ``backend``: ``"batched"`` runs each
+static k as one compiled ``cluster_batched`` lane, ``"oracle"`` runs
+the injected-trajectory discrete-event loop.  The controller's
+time-varying-k path walks a float64 twin of the batched recurrence
+(``_queue_step``; with a fixed k it reproduces the oracle lane
+near-exactly — pinned by tests).  The controller additionally observes
+each job's arrival ``timestamp``, which is what feeds load-aware
+control.  Decisions depend only on observations, never on the scoring
+backend, so the decision log is backend-invariant (pinned by tests).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -26,6 +43,66 @@ from ..core.scenario import RegimeTrace
 from .controller import ControlEvent, RedundancyController
 
 __all__ = ["ReplayResult", "replay"]
+
+
+def _queue_step(F: np.ndarray, a: float, srow: np.ndarray, k: int,
+                preempt: bool, cancel_overhead: float):
+    """One job through the exact FCFS/any-k/cancel recurrence — the
+    float64 twin of ``cluster_batched._scan_lane``'s step (same
+    completion rule, same tie-break, same preempt/purge accounting)."""
+    start = np.maximum(a, F)
+    nat = start + srow
+    D = float(np.partition(nat, k - 1)[k - 1])
+    lt = nat < D
+    eq = nat == D
+    take_eq = k - lt.sum()
+    completed = lt | (eq & (np.cumsum(eq) * eq <= take_eq))
+    inservice = (~completed) & (start < D)
+    if preempt:
+        F = np.where(completed, nat,
+                     np.where(inservice, D + cancel_overhead, F))
+    else:
+        F = np.where(completed | inservice, nat, F)
+    return F, D - a
+
+
+def _static_queue_costs(trace: RegimeTrace, ks, times, backend: str,
+                        preempt: bool, cancel_overhead: float
+                        ) -> Dict[int, np.ndarray]:
+    """Per-job latencies of every static k on the trace's arrivals."""
+    n = trace.n
+    A = trace.arrivals
+    out: Dict[int, np.ndarray] = {}
+    if backend == "cached":
+        # the compiled-surface cache is a planning substrate; for
+        # injected-trajectory static scoring it is the batched kernel
+        backend = "batched"
+    if backend == "batched":
+        import jax.numpy as jnp
+        from ..runtime.cluster_batched import _one_kernel
+        for k in ks:
+            lat, _, _ = _one_kernel(
+                jnp.asarray(A, jnp.float32),
+                jnp.asarray(times[n // k], jnp.float32),
+                jnp.int32(k), jnp.float32(cancel_overhead), bool(preempt))
+            out[k] = np.asarray(lat, np.float64)
+    elif backend == "oracle":
+        from ..runtime.cluster import ClusterConfig
+        from ..runtime.cluster_oracle import simulate_oracle
+        ref = trace.regimes[0]
+        for k in ks:
+            cfg = ClusterConfig(
+                n_workers=n, k=k, arrival_rate=1.0,
+                num_jobs=trace.num_steps, preempt=preempt,
+                cancel_overhead=cancel_overhead)
+            res = simulate_oracle(cfg, ref.dist, trace.scaling,
+                                  service_times=times[n // k],
+                                  arrival_times=A)
+            out[k] = np.asarray(res.latencies, np.float64)
+    else:
+        raise ValueError(
+            f"backend must be 'batched' or 'oracle', got {backend!r}")
+    return out
 
 
 @dataclasses.dataclass
@@ -41,6 +118,8 @@ class ReplayResult:
     controller_regime_means: np.ndarray          # (num_regimes,)
     observe_seconds_per_step: float
     replan_ms: List[float]
+    backend: str = "paper"     # "paper" = single-job Y_{k:n} scoring;
+                               # queued traces score via "batched"/"oracle"
 
     # -- derived ------------------------------------------------------------
     @property
@@ -96,6 +175,7 @@ class ReplayResult:
     def summary(self) -> dict:
         return {
             "steps": int(self.trace.num_steps),
+            "backend": self.backend,
             "controller_mean": self.controller_mean,
             "oracle_mean": self.oracle_mean,
             "regret": self.regret,
@@ -112,10 +192,20 @@ class ReplayResult:
         }
 
 
-def replay(trace: RegimeTrace,
-           controller: RedundancyController) -> ReplayResult:
+def replay(trace: RegimeTrace, controller: RedundancyController,
+           backend: str = "batched", preempt: bool = True,
+           cancel_overhead: float = 0.0) -> ReplayResult:
     """Run the controller over a trace; score it, every static plan, and
-    the per-regime oracle on the same sample paths."""
+    the per-regime oracle on the same sample paths.
+
+    A trace WITHOUT arrivals scores the paper objective (each step's
+    Y_{k:n} in isolation; ``backend``/``preempt``/``cancel_overhead``
+    are ignored).  A queued trace (``trace.has_arrivals``) scores
+    any-k queueing latency with worker free-times carried across jobs;
+    ``backend`` selects how the static lanes are scored ("batched" =
+    one compiled lane per k, "oracle" = injected-trajectory DES) —
+    decisions are backend-invariant.
+    """
     n = trace.n
     if controller.scenario.n != n:
         raise ValueError(
@@ -127,11 +217,17 @@ def replay(trace: RegimeTrace,
     times = {s: trace.times(s) for s in trace.s_values}
     steps = trace.num_steps
     reg_idx = trace.regime_index()
+    queued = trace.has_arrivals
 
     # -- static plans and the oracle: vectorized over the whole trace ------
-    static_cost = {
-        k: np.partition(times[n // k], k - 1, axis=1)[:, k - 1]
-        for k in ks}
+    if queued:
+        static_cost = _static_queue_costs(trace, ks, times, backend,
+                                          preempt, cancel_overhead)
+    else:
+        backend = "paper"
+        static_cost = {
+            k: np.partition(times[n // k], k - 1, axis=1)[:, k - 1]
+            for k in ks}
     num_regimes = len(trace.regimes)
     static_regime_means = {
         k: np.asarray([c[reg_idx == r].mean() for r in range(num_regimes)])
@@ -141,6 +237,8 @@ def replay(trace: RegimeTrace,
     cost = np.empty(steps)
     policy_k = np.empty(steps, dtype=np.int64)
     cu = times[1]
+    A = trace.arrivals
+    F = np.zeros(n)                 # queued mode: worker free-times
     observe_s = 0.0
     for t in range(steps):
         k = controller.policy.k
@@ -150,9 +248,14 @@ def replay(trace: RegimeTrace,
                 f"sample the trace with that task size (or constrain the "
                 f"controller's scenario.candidate_ks)")
         policy_k[t] = k
-        cost[t] = static_cost[k][t]
+        if queued:
+            F, cost[t] = _queue_step(F, float(A[t]), times[n // k][t], k,
+                                     preempt, cancel_overhead)
+        else:
+            cost[t] = static_cost[k][t]
         t0 = time.perf_counter()
-        controller.observe(cu[t])
+        controller.observe(cu[t],
+                           timestamp=float(A[t]) if queued else None)
         observe_s += time.perf_counter() - t0
 
     controller_regime_means = np.asarray(
@@ -165,4 +268,5 @@ def replay(trace: RegimeTrace,
         controller_regime_means=controller_regime_means,
         observe_seconds_per_step=observe_s / max(steps, 1),
         replan_ms=[e.replan_ms for e in controller.events],
+        backend=backend,
     )

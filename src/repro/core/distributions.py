@@ -137,12 +137,16 @@ class ShiftedExp(ServiceTime):
         return self.delta
 
     def sample(self, key, shape):
-        if self.W == 0.0:
+        # W may be a JAX tracer when the distribution travels as a pytree
+        # (the compiled-surface cache traces its parameters); the W == 0
+        # short-circuit is float-only and produces the identical values
+        # (0 * Exp draw == 0 exactly).
+        if isinstance(self.W, float) and self.W == 0.0:
             return jnp.full(shape, self.delta, dtype=jnp.float32)
         return self.delta + self.W * jax.random.exponential(key, shape)
 
     def sample_noise(self, key, shape):
-        if self.W == 0.0:
+        if isinstance(self.W, float) and self.W == 0.0:
             return jnp.zeros(shape, dtype=jnp.float32)
         return self.W * jax.random.exponential(key, shape)
 
@@ -268,6 +272,39 @@ class BiModal(ServiceTime):
     def logpdf(self, x):
         """Alias for ``logpmf`` so the ``ServiceTime`` contract is uniform."""
         return self.logpmf(x)
+
+
+def register_param_pytree(cls) -> None:
+    """Register a frozen parameter dataclass as a JAX pytree whose leaves
+    are its fields.
+
+    This is what lets the compiled-surface cache
+    (``runtime.surface_cache``) pass a freshly fitted distribution (or
+    arrival process) into a jitted kernel as a TRACED argument: the
+    executable is keyed on the pytree STRUCTURE (the family), not the
+    parameter values, so a steady-state re-plan with new fitted floats
+    hits the warm executable instead of recompiling.  Unflattening
+    bypasses ``__init__`` (leaves may be tracers, and ``__post_init__``
+    validation would branch on them); ordinary construction still
+    validates.  Static-argument usage elsewhere is unaffected — static
+    args are keyed by hash, never flattened.
+    """
+    fields = tuple(f.name for f in dataclasses.fields(cls))
+
+    def flatten(d):
+        return tuple(getattr(d, f) for f in fields), None
+
+    def unflatten(_aux, children):
+        obj = object.__new__(cls)
+        for f, v in zip(fields, children):
+            object.__setattr__(obj, f, v)
+        return obj
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+for _cls in (ShiftedExp, Pareto, BiModal):
+    register_param_pytree(_cls)
 
 
 def bimodal_low_mode(samples: np.ndarray) -> float:

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -39,12 +40,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .batched import divisors
-from .distributions import BiModal, Scaling, ServiceTime, ShiftedExp
+from .distributions import (BiModal, Scaling, ServiceTime, ShiftedExp,
+                            register_param_pytree)
 from .policy import Policy
 
 __all__ = [
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
-    "MMPPArrivals", "Regime", "RegimeTrace", "Scenario",
+    "MMPPArrivals", "Regime", "RegimeTrace", "Scenario", "arrival_gap",
     "sample_regime_trace", "sample_task_matrix", "task_survival",
     "validate_worker_speeds",
 ]
@@ -131,6 +133,39 @@ class MMPPArrivals(ArrivalProcess):
         c = 0.5 * (1.0 / self.slow + 1.0 / self.burst)
         rates = r * c * jnp.where(state == 0, self.slow, self.burst)
         return jnp.cumsum(e / rates)
+
+
+# Arrival processes travel into the compiled-surface cache as TRACED
+# pytrees (executable keyed on the process family, parameters as data), so
+# a re-plan with a freshly estimated rate/burstiness hits a warm kernel.
+for _cls in (PoissonArrivals, DeterministicArrivals, MMPPArrivals):
+    register_param_pytree(_cls)
+
+
+def arrival_gap(last_ts: float, timestamp: float) -> float:
+    """The interarrival gap between consecutive job instants — the ONE
+    clock-tolerance rule shared by every timestamp consumer
+    (``control.ArrivalEstimator``, ``runtime.Telemetry``).
+
+    float32-sourced clocks (e.g. XLA's reassociating cumsum) can tick
+    backwards by an ulp; such a tick clamps to a zero gap, while a
+    decrease beyond rounding scale is a caller error and raises.  The
+    tolerance is ~3 float32 ulps of the timestamp magnitude (an epoch-
+    scale clock at 1.7e9 s tolerates ~11 min of float32 quantization,
+    not hours), so genuinely out-of-order delivery still raises.  A
+    non-finite timestamp raises too — silently skipping one would merge
+    its two neighboring gaps into a doubled gap (rate biased low), and
+    letting it through would poison every decayed moment with NaN.
+    """
+    t = float(timestamp)
+    if not math.isfinite(t):
+        raise ValueError(f"arrival timestamp must be finite, got {t}")
+    gap = t - float(last_ts)
+    if gap < -4e-7 * max(abs(t), 1.0):
+        raise ValueError(
+            f"timestamps must be non-decreasing "
+            f"(got {timestamp} after {last_ts})")
+    return max(gap, 0.0)
 
 
 def validate_worker_speeds(speeds, n: int) -> Tuple[float, ...]:
@@ -326,16 +361,26 @@ class Regime:
     ``worker_speeds``  length-n multiplicative slowdowns — a scheduled
                        FLEET change (machines degrading / being swapped)
                        rather than a distribution change.
+    ``arrivals``       the job arrival process (WITH its rate) governing
+                       this segment — a LOAD regime: rate or burstiness
+                       flips are workload changes the service-time channel
+                       cannot see.  Either every regime of a trace carries
+                       arrivals or none does.
     """
 
     dist: ServiceTime
     num_steps: int
     delta: Optional[float] = None
     worker_speeds: Optional[Tuple[float, ...]] = None
+    arrivals: Optional[ArrivalProcess] = None
 
     def __post_init__(self):
         if int(self.num_steps) < 1:
             raise ValueError(f"num_steps must be >= 1, got {self.num_steps}")
+        if self.arrivals is not None and \
+                not isinstance(self.arrivals, ArrivalProcess):
+            raise TypeError(
+                f"arrivals must be an ArrivalProcess, got {self.arrivals!r}")
         if self.delta is not None:
             if self.delta < 0:
                 raise ValueError(f"delta must be >= 0, got {self.delta}")
@@ -374,10 +419,18 @@ class RegimeTrace:
     seed: int
     s_values: Tuple[int, ...]
     tables: Tuple[dict, ...]            # per regime: {s: (steps, n) float64}
+    arrivals: Optional[np.ndarray] = None   # (num_steps,) absolute instants
 
     @property
     def num_steps(self) -> int:
         return sum(r.num_steps for r in self.regimes)
+
+    @property
+    def has_arrivals(self) -> bool:
+        """Whether this trace models a QUEUED cluster (jobs arrive at
+        sampled instants and contend for workers) rather than the paper's
+        one-job-at-a-time world."""
+        return self.arrivals is not None
 
     def boundaries(self) -> List[Tuple[int, int]]:
         """[start, end) step range of each regime."""
@@ -420,10 +473,22 @@ def sample_regime_trace(
     any policy the controller might pick (and the clairvoyant per-regime
     oracle) can be scored on the same trace.  Memory is
     O(steps * n * len(s_values)) (plus s_max CU draws for additive).
+
+    When the regimes carry ``arrivals`` (all of them must, or none), one
+    absolute arrival instant per step is sampled as well — each regime's
+    process draws its own gap stream under a dedicated key (disjoint from
+    the service keys, so service tables are bit-identical with or without
+    arrivals) and the instants continue from where the previous regime
+    ended, giving one monotone timeline across the whole trace.
     """
     regimes = tuple(regimes)
     if not regimes:
         raise ValueError("need at least one regime")
+    with_arrivals = [r.arrivals is not None for r in regimes]
+    if any(with_arrivals) and not all(with_arrivals):
+        raise ValueError(
+            "either every regime carries an arrival process or none does "
+            f"(got arrivals on regimes {[i for i, w in enumerate(with_arrivals) if w]})")
     s_vals = tuple(divisors(n)) if s_values is None \
         else tuple(sorted({int(s) for s in s_values}))
     if any(s < 1 for s in s_vals):
@@ -449,5 +514,19 @@ def sample_regime_trace(
                 validate_worker_speeds(reg.worker_speeds, n), np.float64)
             per_s = {s: t * speeds[None, :] for s, t in per_s.items()}
         tables.append(per_s)
+    arrivals = None
+    if all(with_arrivals):
+        segs, t_end = [], 0.0
+        for r_idx, reg in enumerate(regimes):
+            # a key stream disjoint from the service fold_in(key, r_idx)
+            # (r_idx stays small), so adding arrivals to a trace cannot
+            # perturb its service tables
+            a_key = jax.random.fold_in(key, 1_000_003 + r_idx)
+            seg = np.asarray(reg.arrivals.times(a_key, reg.num_steps),
+                             np.float64)
+            segs.append(t_end + seg)
+            t_end = float(segs[-1][-1])
+        arrivals = np.concatenate(segs)
     return RegimeTrace(regimes=regimes, scaling=scaling, n=n, seed=int(seed),
-                       s_values=s_vals, tables=tuple(tables))
+                       s_values=s_vals, tables=tuple(tables),
+                       arrivals=arrivals)

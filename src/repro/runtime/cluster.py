@@ -129,14 +129,21 @@ def _resolve_backend(backend: str):
 def resolve_sweep_backend(backend: str):
     """The (loads x ks) surface runner for a backend name — the single
     dispatch shared by the module-level sweep entry points and
-    ``api.LoadAwareLatency.surface``."""
+    ``api.LoadAwareLatency.surface``.  ``"cached"`` is the batched engine
+    through the compiled-surface cache (``runtime.surface_cache``):
+    identical semantics, parameters traced instead of compiled in, so
+    repeated surfaces with fresh fitted floats reuse a warm executable."""
     if backend == "oracle":
         from .cluster_oracle import sweep_oracle
         return sweep_oracle
     if backend == "batched":
         from .cluster_batched import sweep
         return sweep
-    raise ValueError(f"backend must be 'oracle' or 'batched', got {backend!r}")
+    if backend == "cached":
+        from .surface_cache import cached_sweep
+        return cached_sweep
+    raise ValueError(
+        f"backend must be 'oracle', 'batched', or 'cached', got {backend!r}")
 
 
 def simulate(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,

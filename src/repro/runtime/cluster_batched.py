@@ -54,7 +54,8 @@ from ..core.distributions import Scaling
 from ..core.scenario import PoissonArrivals, Scenario
 from .cluster import ClusterConfig, ClusterResult, default_warmup
 
-__all__ = ["ClusterSweep", "simulate_one", "sweep", "sweep_compile_count"]
+__all__ = ["ClusterSweep", "simulate_one", "summarize_sweep", "sweep",
+           "sweep_compile_count", "validate_sweep_args"]
 
 _SWEEP_TRACES = 0
 
@@ -155,11 +156,13 @@ def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
 # The surface: vmap lanes over (replications x loads x k), one compile
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=(
-    "dist", "scaling", "n", "ks", "num_jobs", "reps", "preempt",
-    "arrivals", "delta"))
-def _sweep_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
-                  ks, num_jobs, reps, preempt, arrivals, delta):
+def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
+                ks, num_jobs, reps, preempt, arrivals, delta):
+    """The (reps x loads x ks) lane grid, shared by the two jit wrappers:
+    ``_sweep_kernel`` folds dist/arrival parameters as compile-time
+    constants (one-off surfaces), while the compiled-surface cache
+    (``runtime.surface_cache``) traces them so steady-state re-plans with
+    fresh fitted parameters reuse a warm executable."""
     global _SWEEP_TRACES
     _SWEEP_TRACES += 1  # trace-time side effect: counts compiles, not calls
     s_of_k = tuple(n // k for k in ks)
@@ -192,6 +195,11 @@ def _sweep_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
         return lat, busy, wasted, A_all[:, -1]
 
     return jax.vmap(one_rep)(jax.random.split(key, reps))
+
+
+_sweep_kernel = functools.partial(jax.jit, static_argnames=(
+    "dist", "scaling", "n", "ks", "num_jobs", "reps", "preempt",
+    "arrivals", "delta"))(_sweep_core)
 
 
 @dataclasses.dataclass
@@ -242,20 +250,11 @@ class ClusterSweep:
                 for i, lam in enumerate(self.loads)}
 
 
-def sweep(scenario: Scenario, loads: Sequence[float],
-          ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
-          reps: int = 1, preempt: bool = True, cancel_overhead: float = 0.0,
-          seed: int = 0, warmup: Optional[int] = None) -> ClusterSweep:
-    """Every (load, k) queueing cell of a scenario in one compiled call.
-
-    ``loads`` are mean arrival rates; the scenario's ``arrivals`` process
-    (default Poisson) supplies the SHAPE and is rescaled per load lane.
-    ``warmup=None`` discards min(num_jobs // 10, 200) transient jobs from
-    the latency statistics.  Heterogeneous ``scenario.worker_speeds``
-    multiply every lane's task times.  Additive scaling materializes a
-    (num_jobs, n, s_max) CU table per replication — prefer moderate n
-    there; server-/data-dependent scaling needs only (num_jobs, n).
-    """
+def validate_sweep_args(scenario: Scenario, loads, ks, num_jobs, reps,
+                        warmup):
+    """The shared argument contract of every sweep surface (``sweep``
+    here, the cached twin in ``runtime.surface_cache``): resolved
+    (ks, loads, warmup, arrivals, speeds)."""
     n = scenario.n
     ks = tuple(scenario.legal_ks()) if ks is None \
         else tuple(int(k) for k in ks)
@@ -275,13 +274,14 @@ def sweep(scenario: Scenario, loads: Sequence[float],
         else PoissonArrivals(rate=1.0)           # rate overridden per lane
     speeds = jnp.ones((n,), jnp.float32) if scenario.worker_speeds is None \
         else jnp.asarray(scenario.worker_speeds, jnp.float32)
+    return ks, loads, int(warmup), arrivals, speeds
 
-    lat, busy, wasted, a_last = _sweep_kernel(
-        jax.random.PRNGKey(seed), jnp.asarray(loads, jnp.float32), speeds,
-        jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
-        ks, int(num_jobs), int(reps), bool(preempt), arrivals,
-        None if scenario.delta is None else float(scenario.delta))
 
+def summarize_sweep(lat, busy, wasted, a_last, loads, ks, warmup, reps,
+                    num_jobs, n) -> ClusterSweep:
+    """Kernel outputs -> ``ClusterSweep``; the single aggregation both the
+    jit-per-scenario path and the compiled-surface cache run, so a cached
+    surface is post-processed identically to an uncached one."""
     lat = np.asarray(lat, np.float64)            # (reps, L, K, num_jobs)
     busy = np.asarray(busy, np.float64)          # (reps, L, K)
     wasted = np.asarray(wasted, np.float64)
@@ -291,7 +291,8 @@ def sweep(scenario: Scenario, loads: Sequence[float],
     L, K = len(loads), len(ks)
     pooled = np.moveaxis(steady, 0, -2).reshape(L, K, -1)
     return ClusterSweep(
-        loads=tuple(loads), ks=ks, warmup=int(warmup), reps=int(reps),
+        loads=tuple(loads), ks=tuple(ks), warmup=int(warmup),
+        reps=int(reps),
         mean=pooled.mean(axis=-1),
         p50=np.quantile(pooled, 0.50, axis=-1),
         p95=np.quantile(pooled, 0.95, axis=-1),
@@ -300,3 +301,31 @@ def sweep(scenario: Scenario, loads: Sequence[float],
         wasted_frac=(wasted / np.maximum(busy, 1e-12)).mean(axis=0),
         throughput=(num_jobs / horizon).mean(axis=0),
     )
+
+
+def sweep(scenario: Scenario, loads: Sequence[float],
+          ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
+          reps: int = 1, preempt: bool = True, cancel_overhead: float = 0.0,
+          seed: int = 0, warmup: Optional[int] = None) -> ClusterSweep:
+    """Every (load, k) queueing cell of a scenario in one compiled call.
+
+    ``loads`` are mean arrival rates; the scenario's ``arrivals`` process
+    (default Poisson) supplies the SHAPE and is rescaled per load lane.
+    ``warmup=None`` discards min(num_jobs // 10, 200) transient jobs from
+    the latency statistics.  Heterogeneous ``scenario.worker_speeds``
+    multiply every lane's task times.  Additive scaling materializes a
+    (num_jobs, n, s_max) CU table per replication — prefer moderate n
+    there; server-/data-dependent scaling needs only (num_jobs, n).
+    """
+    n = scenario.n
+    ks, loads, warmup, arrivals, speeds = validate_sweep_args(
+        scenario, loads, ks, num_jobs, reps, warmup)
+
+    lat, busy, wasted, a_last = _sweep_kernel(
+        jax.random.PRNGKey(seed), jnp.asarray(loads, jnp.float32), speeds,
+        jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
+        ks, int(num_jobs), int(reps), bool(preempt), arrivals,
+        None if scenario.delta is None else float(scenario.delta))
+
+    return summarize_sweep(lat, busy, wasted, a_last, loads, ks, warmup,
+                           reps, num_jobs, n)

@@ -1,0 +1,143 @@
+"""Compiled-surface cache: warm (loads x ks) queueing surfaces for the
+control loop's steady-state re-plans.
+
+``cluster_batched.sweep`` folds the distribution and arrival-process
+PARAMETERS into the executable as compile-time constants — ideal for a
+one-off surface, hopeless for a closed control loop: every drift commit
+fits slightly different floats, so every load-aware re-plan would pay a
+fresh XLA compile (seconds) instead of a kernel launch (milliseconds).
+
+This module runs the SAME lane grid (``cluster_batched._sweep_core``)
+through a jit wrapper whose distribution, arrival process, delta, and
+load grid are TRACED: the executable is keyed on
+
+    (service family, scaling, n, k-grid, load-grid bucket,
+     arrival family, num_jobs, reps, preempt, delta-presence)
+
+— the pytree STRUCTURE of the arguments (``core.distributions.
+register_param_pytree``), never the fitted parameter values.  A
+steady-state re-plan after a rate or service drift therefore hits a warm
+executable and returns in milliseconds (the <50 ms warm gate in
+``benchmarks/control_loop.py``).
+
+Shape-bucketing: the load axis is padded up to a fixed bucket length
+(the last load repeated) so that planning at 1, 2, or 3 rates reuses ONE
+executable per bucket; padded lanes are computed and discarded — lanes
+are independent under ``vmap``, so the surviving cells are the same
+numbers the unpadded kernel produces.
+
+``cached_sweep`` mirrors ``cluster_batched.sweep``'s signature and is
+dispatchable as ``backend="cached"`` everywhere a backend name is taken
+(``runtime.cluster.resolve_sweep_backend``, ``api.LoadAwareLatency``).
+``surface_cache_stats`` exposes hit/miss accounting for the conformance
+suite and the benchmark's warm-latency gate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.scenario import Scenario
+from .cluster_batched import (ClusterSweep, _sweep_core, summarize_sweep,
+                              validate_sweep_args)
+
+__all__ = ["cached_sweep", "load_bucket", "reset_surface_cache_stats",
+           "surface_cache_stats"]
+
+#: Load-grid lengths are padded up to one of these (ascending).
+_LOAD_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+_HITS = 0
+_MISSES = 0
+_KEYS: Dict[tuple, int] = {}
+
+
+def load_bucket(num_loads: int) -> int:
+    """The padded load-axis length for a requested grid size."""
+    for b in _LOAD_BUCKETS:
+        if num_loads <= b:
+            return b
+    raise ValueError(
+        f"load grid of {num_loads} exceeds the largest bucket "
+        f"{_LOAD_BUCKETS[-1]}; call cluster_batched.sweep directly")
+
+
+def surface_cache_stats() -> dict:
+    """Hit/miss accounting of the compiled-surface cache.
+
+    A MISS is a call whose (family, scaling, n, ks, load-bucket, ...)
+    key has not been compiled yet this process — it pays the XLA trace;
+    a HIT reuses a warm executable and costs one kernel launch.
+    """
+    return {"hits": _HITS, "misses": _MISSES, "entries": len(_KEYS)}
+
+
+def reset_surface_cache_stats() -> None:
+    """Zero the hit/miss counters.  The compiled-KEY registry is kept,
+    matching the jit executables that stay warm: a post-reset call on an
+    already-compiled key still counts as a hit (clearing the registry
+    would misreport warm calls as compiles)."""
+    global _HITS, _MISSES
+    _HITS = 0
+    _MISSES = 0
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scaling", "n", "ks", "num_jobs", "reps", "preempt"))
+def _cached_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
+                   ks, num_jobs, reps, preempt, arrivals, delta):
+    # dist / arrivals / delta arrive as traced pytrees: jax's jit cache
+    # keys on their STRUCTURE (the family), so new fitted floats reuse
+    # the executable.  The body is cluster_batched._sweep_core — the
+    # identical lane grid the uncached path compiles.
+    return _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling,
+                       n, ks, num_jobs, reps, preempt, arrivals, delta)
+
+
+def cached_sweep(scenario: Scenario, loads: Sequence[float],
+                 ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
+                 reps: int = 1, preempt: bool = True,
+                 cancel_overhead: float = 0.0, seed: int = 0,
+                 warmup: Optional[int] = None) -> ClusterSweep:
+    """``cluster_batched.sweep`` through the compiled-surface cache.
+
+    Same semantics and CRN discipline; parameters are traced and the
+    load axis is bucket-padded, so repeated calls that differ only in
+    fitted parameter values (or in the precise rates on the same-size
+    grid) reuse one warm executable.  The returned surface is trimmed
+    back to the requested loads.
+    """
+    n = scenario.n
+    ks, loads, warmup, arrivals, speeds = validate_sweep_args(
+        scenario, loads, ks, num_jobs, reps, warmup)
+    L = len(loads)
+    bucket = load_bucket(L)
+    padded = tuple(loads) + (loads[-1],) * (bucket - L)
+
+    global _HITS, _MISSES
+    cache_key = (type(scenario.dist).__name__, scenario.scaling.value, n,
+                 ks, bucket, int(num_jobs), int(reps), bool(preempt),
+                 type(arrivals).__name__, scenario.delta is None)
+    if cache_key in _KEYS:
+        _HITS += 1
+        _KEYS[cache_key] += 1
+    else:
+        _MISSES += 1
+        _KEYS[cache_key] = 1
+
+    lat, busy, wasted, a_last = _cached_kernel(
+        jax.random.PRNGKey(seed), jnp.asarray(padded, jnp.float32), speeds,
+        jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
+        ks, int(num_jobs), int(reps), bool(preempt), arrivals,
+        None if scenario.delta is None else jnp.float32(scenario.delta))
+
+    # trim the padded lanes before aggregation: the surviving cells are
+    # lane-independent under vmap, so they match the unpadded kernel
+    return summarize_sweep(np.asarray(lat)[:, :L], np.asarray(busy)[:, :L],
+                           np.asarray(wasted)[:, :L],
+                           np.asarray(a_last)[:, :L],
+                           loads, ks, warmup, reps, num_jobs, n)

@@ -37,6 +37,21 @@ class StraggleStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalStats:
+    """Typed arrival summary of one telemetry window of job timestamps.
+
+    Mirrors the ``StraggleStats`` / ``InsufficientTelemetry`` contract:
+    too few interarrival gaps returns the typed insufficiency result
+    instead of NaN-laden stats or an exception.
+    """
+
+    rate: float                 # jobs per unit time (1 / mean gap)
+    mean_gap: float
+    dispersion: float           # Var[gap] / E[gap]^2 (CV^2; 1 = Poisson)
+    num_gaps: int
+
+
+@dataclasses.dataclass(frozen=True)
 class InsufficientTelemetry:
     """Typed "not enough data" result — returned instead of NaN-laden
     stats when the window is empty or shorter than the minimum (the seed
@@ -56,6 +71,7 @@ class Telemetry:
 
     def __post_init__(self):
         self._times: Deque[float] = collections.deque(maxlen=self.window)
+        self._arrivals: Deque[float] = collections.deque(maxlen=self.window)
         self._task_size: int = 1
 
     def record_step(self, worker_times: np.ndarray, task_size: int = 1):
@@ -65,9 +81,27 @@ class Telemetry:
             if math.isfinite(t):
                 self._times.append(float(t))
 
+    def record_arrival(self, timestamp: float):
+        """Record one job arrival instant (monotone non-decreasing)."""
+        t = float(timestamp)
+        if self._arrivals:
+            # shared clock-tolerance rule (core.scenario.arrival_gap):
+            # ulp-backward float32 ticks clamp; larger decreases and
+            # non-finite instants raise (silently skipping one would
+            # merge its neighboring gaps into a doubled gap)
+            from ..core.scenario import arrival_gap
+            t = self._arrivals[-1] + arrival_gap(self._arrivals[-1], t)
+        elif not math.isfinite(t):
+            raise ValueError(f"arrival timestamp must be finite, got {t}")
+        self._arrivals.append(t)
+
     @property
     def num_samples(self) -> int:
         return len(self._times)
+
+    @property
+    def num_arrivals(self) -> int:
+        return len(self._arrivals)
 
     def samples(self) -> np.ndarray:
         return np.asarray(self._times, dtype=np.float64)
@@ -84,6 +118,28 @@ class Telemetry:
                 f"not enough telemetry samples "
                 f"({self.num_samples} < {self.min_samples})")
         return select_service_time(self.samples())
+
+    def arrival_stats(self) -> Union[ArrivalStats, InsufficientTelemetry]:
+        """Typed rate/burstiness summary of the recorded job timestamps.
+
+        A window of fewer than ``min_samples`` interarrival GAPS (note:
+        one more timestamp than gaps) returns ``InsufficientTelemetry``
+        — the same contract as ``straggle_stats``, instead of the NaN
+        mean/variance a short window would otherwise propagate into the
+        load-aware planner.
+        """
+        gaps = np.diff(np.asarray(self._arrivals, dtype=np.float64))
+        if gaps.size < self.min_samples:
+            return InsufficientTelemetry(have=int(gaps.size),
+                                         needed=self.min_samples)
+        mean = float(gaps.mean())
+        var = float(gaps.var())
+        return ArrivalStats(
+            rate=1.0 / max(mean, 1e-300),
+            mean_gap=mean,
+            dispersion=var / max(mean * mean, 1e-300),
+            num_gaps=int(gaps.size),
+        )
 
     def straggle_stats(self) -> Union[StraggleStats, InsufficientTelemetry]:
         if self.num_samples < self.min_samples:

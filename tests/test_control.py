@@ -6,14 +6,16 @@ import jax
 import numpy as np
 import pytest
 
-from repro.api import AdaptivePlanner, Scenario
-from repro.control import (BiModalEstimator, DriftDetector, OnlineSelector,
+from repro.api import AdaptivePlanner, LoadAwareLatency, Scenario
+from repro.control import (ArrivalEstimator, ArrivalModel, BiModalEstimator,
+                           DriftDetector, LoadDriftDetector, OnlineSelector,
                            ParetoEstimator, RedundancyController,
                            ShiftedExpEstimator, TrainerActuator, fit_window,
                            replay)
 from repro.control.controller import ControllerConfig
 from repro.core import (BiModal, Pareto, Regime, Scaling, ShiftedExp,
                         sample_regime_trace)
+from repro.core.scenario import MMPPArrivals, PoissonArrivals
 
 N = 12
 SERVER = Scaling.SERVER_DEPENDENT
@@ -443,6 +445,338 @@ class TestReplayAcceptance:
         assert not [e for e in res.events if e.kind == "drift"]
         assert not [e for e in res.events
                     if e.switched and e.kind != "boot"]
+
+
+# ==========================================================================
+# Arrival estimation + load-drift detection (the LOAD side)
+# ==========================================================================
+
+def _arrival_gaps(proc, num, seed):
+    t = np.asarray(proc.times(jax.random.PRNGKey(seed), num), np.float64)
+    return np.diff(np.concatenate([[0.0], t]))
+
+
+def _commit_arrivals(gaps, **kw):
+    est = ArrivalEstimator(**kw)
+    t = 0.0
+    est.observe(t)
+    for g in gaps:
+        t += g
+        est.observe(t)
+    return est.model()
+
+
+class TestArrivalEstimation:
+    def test_poisson_round_trip(self):
+        m = _commit_arrivals(_arrival_gaps(PoissonArrivals(0.05), 3000, 0))
+        assert m.rate == pytest.approx(0.05, rel=0.1)
+        assert 0.7 < m.dispersion < 1.4
+        assert isinstance(m.process(), PoissonArrivals)
+
+    def test_mmpp_round_trip_is_overdispersed(self):
+        m = _commit_arrivals(
+            _arrival_gaps(MMPPArrivals(0.05), 3000, 1))
+        # bursty trains shrink the effective sample size of the decayed
+        # window, so the rate band is loose (cf. test_properties_arrivals)
+        assert m.rate == pytest.approx(0.05, rel=0.35)
+        assert m.dispersion > 1.5
+        assert isinstance(m.process(), MMPPArrivals)
+        # the matched process preserves the long-run rate exactly
+        assert m.process().rate == pytest.approx(m.rate)
+
+    def test_forgetting_tracks_a_rate_shift(self):
+        pre = _arrival_gaps(PoissonArrivals(0.01), 2000, 2)
+        post = _arrival_gaps(PoissonArrivals(0.08), 2000, 3)
+        m = _commit_arrivals(np.concatenate([pre, post]))
+        assert m.rate == pytest.approx(0.08, rel=0.15)
+
+    def test_reset_keeps_the_clock(self):
+        """reset drops the moments but keeps the last timestamp, so the
+        very next arrival contributes one clean post-change gap."""
+        est = ArrivalEstimator(min_gaps=2)
+        for t in (0.0, 1.0, 2.0, 3.0):
+            est.observe(t)
+        est.reset()
+        assert est.num_gaps == 0
+        est.observe(4.0)
+        est.observe(5.0)
+        assert est.num_gaps == 2
+        assert est.rate() == pytest.approx(1.0)
+
+    def test_model_requires_evidence_floor(self):
+        est = ArrivalEstimator(min_gaps=16)
+        est.observe(0.0)
+        est.observe(1.0)
+        assert not est.ready
+        with pytest.raises(ValueError, match="gaps"):
+            est.model()
+
+
+class TestLoadDriftDetector:
+    def _commit(self, proc, seed=0, num=800):
+        return _commit_arrivals(_arrival_gaps(proc, num, seed))
+
+    @pytest.mark.parametrize("pre,post", [
+        (PoissonArrivals(0.05), PoissonArrivals(0.10)),     # rate up
+        (PoissonArrivals(0.05), PoissonArrivals(0.02)),     # rate down
+        (PoissonArrivals(0.05),
+         MMPPArrivals(0.05, slow=0.2, burst=5.0)),          # burstier
+        (MMPPArrivals(0.05, slow=0.2, burst=5.0),
+         PoissonArrivals(0.05)),                            # smoother
+    ])
+    def test_detects_load_regime_change(self, pre, post):
+        det = LoadDriftDetector()
+        det.rebase(self._commit(pre), at=0)
+        gaps = np.concatenate([_arrival_gaps(pre, 200, 40)[-200:],
+                               _arrival_gaps(post, 4000, 80)])
+        ev = det.update(gaps, at=0)
+        assert ev is not None
+        assert ev.at - 200 < 700          # well under a benchmark regime
+        assert ev.start <= ev.at
+
+    @pytest.mark.parametrize("proc,seed", [
+        (PoissonArrivals(0.05), 103),
+        (MMPPArrivals(0.05), 100),
+        (MMPPArrivals(0.05, slow=0.2, burst=5.0), 103),
+    ])
+    def test_no_false_alarm_on_stationary_2k_gaps(self, proc, seed):
+        g = _arrival_gaps(proc, 2800, seed)
+        det = LoadDriftDetector()
+        det.rebase(_commit_arrivals(g[:800]), at=0)
+        assert det.update(g[800:], at=800) is None
+
+    def test_deterministic_recursion(self):
+        g = _arrival_gaps(PoissonArrivals(0.05), 1500, 5)
+        m = _commit_arrivals(g[:500])
+        a, b = LoadDriftDetector(), LoadDriftDetector()
+        a.rebase(m, at=0)
+        b.rebase(m, at=0)
+        a.update(g[500:], at=500)
+        b.update(g[500:], at=500)
+        assert (a.g_up, a.g_dn, a.d_up, a.d_dn) == \
+               (b.g_up, b.g_dn, b.d_up, b.d_dn)
+
+    def test_charge_reports_accumulation(self):
+        det = LoadDriftDetector()
+        det.rebase(_commit_arrivals(
+            _arrival_gaps(PoissonArrivals(0.05), 800, 6)), at=0)
+        assert det.charge == 0.0
+        # feed clearly-too-fast gaps just short of the alarm
+        det.update(np.full(5 * 12, 4.0), at=0)
+        assert det.charge > 0.2
+
+
+# ==========================================================================
+# Load-aware closed-loop control (the tentpole)
+# ==========================================================================
+
+QUEUED_SCALING = Scaling.SERVER_DEPENDENT
+
+
+def _queued_trace(n=12, steps=260, lo=0.001, hi=0.03, seed=0):
+    svc = ShiftedExp(1.0, 10.0)
+    return sample_regime_trace(
+        [Regime(svc, steps, arrivals=PoissonArrivals(lo)),
+         Regime(svc, steps, arrivals=PoissonArrivals(hi))],
+        QUEUED_SCALING, n, seed=seed)
+
+
+class TestLoadAwareController:
+    def test_rate_flip_replans_toward_less_redundancy(self):
+        """Under arrivals, redundancy consumes capacity: when the rate
+        jumps, the load-aware controller must move k UP (away from the
+        single-job optimum) — the ROADMAP gap this PR closes."""
+        trace = _queued_trace(seed=1)
+        ctl = RedundancyController(
+            PRIOR, objective=LoadAwareLatency(
+                num_jobs=400, reps=2, backend="cached", preempt=False))
+        res = replay(trace, ctl, preempt=False)
+        assert ctl.arrival_model is not None
+        low_k = res.policy_k[200]           # settled in the light regime
+        assert res.policy_k[-1] > low_k
+        assert any(e.kind == "load" and e.switched for e in res.events)
+        assert all(e.cached for e in res.events if e.kind == "load")
+
+    def test_without_timestamps_behaves_like_single_job_mode(self):
+        """A load-aware controller never fed timestamps plans on the
+        closed form — bit-identical decisions to the PR 4 controller."""
+        trace = sample_regime_trace(ACCEPTANCE_REGIMES, SERVER, N, seed=0)
+        la = RedundancyController(PRIOR, objective="load_aware")
+        base = RedundancyController(PRIOR)
+        res_la = replay(trace, la)
+        res_base = replay(trace, base)
+        np.testing.assert_array_equal(res_la.policy_k, res_base.policy_k)
+        assert la.arrival_model is None
+        assert not any(e.cached for e in res_la.events)
+
+    def test_boot_waits_for_arrival_model_when_timestamps_flow(self):
+        """In load-aware mode with timestamps flowing, the first commit
+        arrives only when BOTH models can commit — the very first plan
+        is load-aware (a closed-form boot at full replication would
+        poison the queue with un-preemptable remnants)."""
+        ctl = RedundancyController(PRIOR, objective="load_aware")
+        x = _stream(ShiftedExp(1.0, 10.0), 600)
+        t = 0.0
+        events = []
+        for i in range(0, 600, 12):
+            t += 30.0
+            ev = ctl.observe(x[i:i + 12], timestamp=t)
+            if ev is not None:
+                events.append(ev)
+        assert events
+        boot = events[0]
+        assert boot.kind == "boot"
+        assert boot.arrival is not None     # committed alongside
+        assert boot.at > ControllerConfig().boot_samples    # deferred
+        assert ctl.arrival_model is not None
+
+    def test_load_commit_keeps_service_model(self):
+        """A load commit re-plans at the new arrival model without
+        refitting the service family."""
+        trace = _queued_trace(seed=2)
+        ctl = RedundancyController(PRIOR, objective="load_aware")
+        replay(trace, ctl, preempt=False)
+        loads = [e for e in ctl.events if e.kind == "load" and e.drift]
+        assert loads
+        fams = {e.model.family for e in ctl.events}
+        assert fams == {"shifted_exp"}      # service model stable
+
+    def test_objective_rejects_unknown_mode(self):
+        with pytest.raises(ValueError):
+            RedundancyController(PRIOR, objective="load_awarex")
+
+    def test_load_commit_preserves_service_detector_evidence(self):
+        """REGRESSION (review): a load commit re-plans under an
+        UNCHANGED service model and must not rebase the service
+        detector — CUSUM evidence a concurrent service drift has banked
+        survives; service-model commits still rebase."""
+        ctl = RedundancyController(PRIOR, objective="load_aware")
+        x = _stream(ShiftedExp(1.0, 10.0), 600, seed=8)
+        t = 0.0
+        for i in range(0, 600, 12):
+            t += 40.0
+            ctl.observe(x[i:i + 12], timestamp=t)
+        assert ctl.model is not None and ctl.arrival_model is not None
+        ctl.detector.g_up = 11.0            # banked service evidence
+        ctl._commit("load", window=None, model=ctl.model, quiet=True)
+        assert ctl.detector.g_up == 11.0    # load commit: preserved
+        ctl._commit("refresh", window=None, model=ctl.model, quiet=True)
+        assert ctl.detector.g_up == 0.0     # service commit: rebased
+
+    def test_boot_falls_back_to_closed_form_when_timestamps_stop(self):
+        """REGRESSION (review): a caller that supplies timestamps for a
+        few jobs and then stops must not wedge the boot forever — the
+        next timestamp-less observation boots on the closed form."""
+        ctl = RedundancyController(PRIOR, objective="load_aware")
+        x = _stream(ShiftedExp(1.0, 10.0), 600, seed=9)
+        for i, t in zip(range(0, 36, 12), (10.0, 20.0, 30.0)):
+            ctl.observe(x[i:i + 12], timestamp=t)   # only 2 gaps: not ready
+        assert ctl.model is None
+        for i in range(36, 600, 12):
+            ev = ctl.observe(x[i:i + 12])           # timestamps stopped
+            if ev is not None:
+                break
+        assert ctl.model is not None
+        assert ctl.events[0].kind == "boot"
+        assert not ctl.events[0].cached             # closed-form boot
+
+    def test_adaptive_planner_facade_passes_timestamps(self):
+        ap = AdaptivePlanner(Scenario(ShiftedExp(1.0, 10.0), SERVER, 8),
+                             objective="load_aware")
+        assert ap.arrival_model is None
+        x = _stream(ShiftedExp(1.0, 10.0), 800, seed=3)
+        t = 0.0
+        for i in range(0, 800, 8):
+            t += 25.0
+            ap.observe(x[i:i + 8], timestamp=t)
+        assert ap.arrival_model is not None
+        assert ap.arrival_model.rate == pytest.approx(1 / 25.0, rel=0.05)
+
+
+# ==========================================================================
+# Queued replay: determinism + scoring-backend conformance (satellite)
+# ==========================================================================
+
+class TestQueuedReplayDeterminism:
+    @pytest.fixture(scope="class")
+    def trace(self):
+        return _queued_trace(seed=4)
+
+    def _controller(self):
+        return RedundancyController(
+            PRIOR, objective=LoadAwareLatency(
+                num_jobs=400, reps=2, backend="cached", preempt=False))
+
+    def test_same_seed_same_decision_log_across_runs(self, trace):
+        a = replay(trace, self._controller(), preempt=False)
+        b = replay(trace, self._controller(), preempt=False)
+        np.testing.assert_array_equal(a.policy_k, b.policy_k)
+        np.testing.assert_array_equal(a.controller_cost, b.controller_cost)
+        assert [(e.kind, e.at, e.old_policy, e.new_policy, e.switched)
+                for e in a.events] == \
+               [(e.kind, e.at, e.old_policy, e.new_policy, e.switched)
+                for e in b.events]
+
+    def test_decision_log_is_scoring_backend_invariant(self, trace):
+        """Decisions depend only on observations (CU times + arrival
+        instants), never on how static lanes are scored."""
+        a = replay(trace, self._controller(), backend="batched",
+                   preempt=False)
+        b = replay(trace, self._controller(), backend="oracle",
+                   preempt=False)
+        np.testing.assert_array_equal(a.policy_k, b.policy_k)
+        assert [(e.kind, e.at, e.old_policy, e.new_policy, e.switched)
+                for e in a.events] == \
+               [(e.kind, e.at, e.old_policy, e.new_policy, e.switched)
+                for e in b.events]
+        assert a.backend == "batched" and b.backend == "oracle"
+        # the realized controller costs are identical float64 walks
+        np.testing.assert_array_equal(a.controller_cost, b.controller_cost)
+
+    def test_fixed_policy_controller_equals_oracle_static_lane(self, trace):
+        """The float64 replay recurrence IS the oracle dynamics: a
+        controller that never switches reproduces the injected-DES
+        static lane exactly."""
+        ctl = RedundancyController(
+            PRIOR, config=ControllerConfig(hysteresis=1e9))
+        res = replay(trace, ctl, backend="oracle", preempt=False)
+        k = int(res.policy_k[0])
+        assert (res.policy_k == k).all()
+        from repro.control.replay import _static_queue_costs
+        times = {s: trace.times(s) for s in trace.s_values}
+        ref = _static_queue_costs(trace, (k,), times, "oracle", False, 0.0)
+        np.testing.assert_allclose(res.controller_cost, ref[k],
+                                   rtol=1e-12, atol=1e-9)
+
+    def test_static_means_agree_across_backends(self, trace):
+        """Stable lanes agree tightly per-trajectory.  Lanes driven past
+        saturation (low k without preemption) are CHAOTIC: a float32
+        min-worker flip re-routes a several-hundred-second remnant and
+        the paths decorrelate — there only magnitude agreement is
+        well-posed."""
+        a = replay(trace, self._controller(), backend="batched",
+                   preempt=False)
+        b = replay(trace, self._controller(), backend="oracle",
+                   preempt=False)
+        for k in a.ks:
+            saturated = k <= 3          # ~121s/job per worker at k=1
+            np.testing.assert_allclose(
+                a.static_regime_means[k], b.static_regime_means[k],
+                rtol=0.5 if saturated else 5e-3, atol=1e-2)
+
+    def test_paper_trace_scoring_is_unchanged(self):
+        """Back-compat: a trace without arrivals scores the paper
+        objective exactly as PR 4 did (backend tag "paper")."""
+        trace = sample_regime_trace([Regime(ShiftedExp(1.0, 10.0), 150)],
+                                    SERVER, N, seed=6)
+        res = replay(trace, RedundancyController(PRIOR))
+        assert res.backend == "paper"
+        k = int(res.policy_k[-1])
+        expect = np.partition(trace.times(N // k), k - 1, axis=1)[:, k - 1]
+        # after the last switch the realized cost IS the Y_{k:n} column
+        last_switch = max(e.at // N for e in res.events) + 1
+        np.testing.assert_array_equal(res.controller_cost[last_switch:],
+                                      expect[last_switch:])
 
 
 # ==========================================================================

@@ -279,6 +279,45 @@ def test_telemetry_fit_raises_on_short_window():
         telem.fit()
 
 
+def test_arrival_stats_insufficient_data_is_typed_not_nan():
+    """REGRESSION (PR 5 satellite): arrival telemetry mirrors the
+    StraggleStats/InsufficientTelemetry contract — too few interarrival
+    GAPS returns the typed insufficiency result instead of NaN stats or
+    an exception."""
+    from repro.runtime import ArrivalStats, InsufficientTelemetry
+    telem = Telemetry()
+    res = telem.arrival_stats()
+    assert isinstance(res, InsufficientTelemetry)
+    assert not res                          # falsy: "not usable"
+    assert res.have == 0 and res.needed == telem.min_samples
+    for t in range(8):                      # 8 instants = 7 gaps: 1 short
+        telem.record_arrival(float(t))
+    short = telem.arrival_stats()
+    assert isinstance(short, InsufficientTelemetry)
+    assert short.have == 7
+    telem.record_arrival(8.0)
+    stats = telem.arrival_stats()
+    assert isinstance(stats, ArrivalStats) and stats
+    assert stats.num_gaps == 8
+    assert stats.rate == pytest.approx(1.0)
+    assert stats.mean_gap == pytest.approx(1.0)
+    assert stats.dispersion == pytest.approx(0.0, abs=1e-12)
+    assert all(np.isfinite(v) for v in
+               (stats.rate, stats.mean_gap, stats.dispersion))
+
+
+def test_record_arrival_tolerates_ulp_backwards_clock():
+    """float32-sourced clocks (XLA's reassociating cumsum) can tick
+    backwards by an ulp; only a decrease beyond rounding scale is an
+    error."""
+    telem = Telemetry()
+    telem.record_arrival(100.0)
+    telem.record_arrival(100.0 - 1e-6 * 100.0 * 0.001)   # ulp-scale: ok
+    assert telem.num_arrivals == 2
+    with pytest.raises(ValueError, match="non-decreasing"):
+        telem.record_arrival(99.0)
+
+
 # -- fit_service_time round trips (satellite 4) -----------------------------
 
 @pytest.mark.parametrize("dist,family,check", [
