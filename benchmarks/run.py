@@ -16,9 +16,9 @@ def main(argv=None):
                     help="fewer MC trials (CI mode)")
     args = ap.parse_args(argv)
 
-    from . import (cluster_sweep, coded_step, control_loop, fig_bimodal,
-                   fig_pareto, fig_sexp, kernels, planner_sweep, queueing,
-                   table1)
+    from . import (cluster_sweep, coded_step, control_loop, fault_injection,
+                   fig_bimodal, fig_pareto, fig_sexp, kernels, planner_sweep,
+                   queueing, table1)
     mc = 4_000 if args.fast else 20_000
     jobs = 400 if args.fast else 1200
 
@@ -29,6 +29,8 @@ def main(argv=None):
          lambda: cluster_sweep.run(smoke=args.fast)),
         ("control_loop (adaptive controller regret vs static plans)",
          lambda: control_loop.run(smoke=args.fast)),
+        ("fault_injection (crash-restart surface + storm degradation)",
+         lambda: fault_injection.run(smoke=args.fast)),
         ("fig_sexp (paper Figs. 3-5)", lambda: fig_sexp.run(mc_trials=mc)),
         ("fig_pareto (paper Figs. 6-10)", lambda: fig_pareto.run(mc_trials=mc)),
         ("fig_bimodal (paper Figs. 11-18)", fig_bimodal.run),

@@ -1,4 +1,5 @@
 from .store import (  # noqa: F401
+    is_intact,
     latest_step,
     restore,
     restore_sharded,

@@ -5,11 +5,17 @@ Layout (one directory per step):
         manifest.json      {step, tree structure, leaf shapes/dtypes, status}
         leaf_00000.npy ... one .npy per pytree leaf
 
-Write protocol: everything lands in ``<root>/.tmp_step_X`` first and the
-directory is atomically renamed on completion; a crash mid-write leaves no
-``manifest.json``-bearing step directory, so ``latest_step`` never sees a
-torn checkpoint.  ``save_async`` runs the serialization on a worker thread
-(the training loop only blocks to snapshot device arrays to host).
+Write protocol: everything lands in ``<root>/.tmp_step_X`` first (leaves
+and manifest each fsync'd), the directory is atomically renamed on
+completion, and the rename itself is made durable by fsyncing the root
+directory — a crash at ANY instant leaves either the complete previous
+state or the complete new one, never a torn step that ``latest_step``
+would serve.  Recovery is verified, not assumed: ``latest_step`` only
+returns steps whose manifest parses and whose every leaf passes a
+header+size check (``is_intact``), so a checkpoint truncated by a crash
+or corrupted later is skipped in favor of the newest intact one.
+``save_async`` runs the serialization on a worker thread (the training
+loop only blocks to snapshot device arrays to host).
 
 Elastic restore: checkpoints store LOGICAL arrays (no sharding).  ``restore``
 returns numpy leaves; the caller re-applies whatever PartitionSpecs the
@@ -36,16 +42,39 @@ def _step_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:09d}")
 
 
+def _fsync_path(path: str) -> None:
+    """Flush a file's (or directory's) data to stable storage.  The
+    directory fsync is what makes a just-renamed entry durable — without
+    it a power cut can roll the rename back even though the data files
+    themselves were synced."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(root: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
-    """Blocking atomic save.  ``tree``: any pytree of arrays."""
+    """Blocking crash-safe save.  ``tree``: any pytree of arrays.
+
+    Leaves and manifest are written to a temp directory and fsync'd,
+    the temp directory is atomically renamed into place, and the root
+    directory entry is fsync'd: there is no crash instant at which a
+    reader (or ``latest_step`` after restart) can observe a partially
+    written step under the final name.
+    """
     leaves, treedef = jax.tree.flatten(tree)
     host = [np.asarray(x) for x in leaves]
     final = _step_dir(root, step)
     tmp = os.path.join(root, f".tmp_step_{step:09d}")
     with _LOCK:
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)       # debris of a crashed earlier attempt
+        os.makedirs(tmp)
         for i, a in enumerate(host):
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), a)
+            path = os.path.join(tmp, f"leaf_{i:05d}.npy")
+            np.save(path, a)
+            _fsync_path(path)
         manifest = {
             "step": step,
             "num_leaves": len(host),
@@ -54,11 +83,16 @@ def save(root: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
             "dtypes": [str(a.dtype) for a in host],
             "extra": extra or {},
         }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)             # leaf + manifest directory entries
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_path(root)            # the rename itself
     return final
 
 
@@ -71,17 +105,42 @@ def save_async(root: str, step: int, tree: Any,
     return _EXEC.submit(save, root, step, snapshot, extra)
 
 
+def is_intact(root: str, step: int) -> bool:
+    """Whether a step's checkpoint is complete and readable: the
+    manifest parses and every leaf file's npy header agrees with it and
+    covers its data region on disk (``np.load(mmap_mode="r")`` rejects a
+    file shorter than its header promises, catching a tail truncated by
+    a crash or a copy cut short — the torn-checkpoint case).  Header
+    checks only: no leaf data is actually read."""
+    d = _step_dir(root, step)
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        for i in range(int(manifest["num_leaves"])):
+            a = np.load(os.path.join(d, f"leaf_{i:05d}.npy"), mmap_mode="r")
+            if list(a.shape) != list(manifest["shapes"][i]) or \
+                    str(a.dtype) != manifest["dtypes"][i]:
+                return False
+    except Exception:
+        return False
+    return True
+
+
 def latest_step(root: str) -> Optional[int]:
+    """The newest step with an INTACT checkpoint.  A torn step (crash
+    mid-write on a filesystem that reordered the temp-dir writes, or
+    corruption after the fact) is skipped, falling back to the newest
+    step that still verifies — recovery never serves a checkpoint that
+    ``restore`` would choke on."""
     if not os.path.isdir(root):
         return None
-    best = None
-    for name in os.listdir(root):
-        if name.startswith("step_"):
-            d = os.path.join(root, name)
-            if os.path.exists(os.path.join(d, "manifest.json")):
-                s = int(name.split("_")[1])
-                best = s if best is None else max(best, s)
-    return best
+    steps = sorted((int(name.split("_")[1])
+                    for name in os.listdir(root)
+                    if name.startswith("step_")), reverse=True)
+    for s in steps:
+        if is_intact(root, s):
+            return s
+    return None
 
 
 def restore(root: str, step: int, tree_like: Any) -> Tuple[Any, dict]:

@@ -10,10 +10,13 @@ package closes that loop on top of the fast engines of PRs 1-3:
                   model selection (``OnlineSelector``, ``FittedModel``)
   detector.py     change-point detection on the service-time stream: CUSUM
                   on standardized log-survival residuals + a
-                  straggle-fraction EWMA, emitting typed ``DriftEvent``s
+                  straggle-fraction EWMA, emitting typed ``DriftEvent``s;
+                  a failure-drift CUSUM on the task-outcome stream
   controller.py   ``RedundancyController``: drift -> windowed refit ->
                   closed-form re-plan (microseconds) -> hysteresis /
-                  switching-cost gate -> actuation into the runtime
+                  switching-cost gate -> actuation into the runtime;
+                  graceful fleet degradation (quarantine + rule-of-three
+                  redundancy floor + oracle fallback) on task losses
   replay.py       closed-loop evaluation: replay a ``RegimeTrace`` through
                   the controller and score regret vs. the clairvoyant
                   per-regime oracle
@@ -24,16 +27,18 @@ from .controller import (ControlEvent, ControllerConfig,  # noqa: F401
                          HedgedServeActuator, RedundancyController,
                          TrainerActuator)
 from .detector import (DriftDetector, DriftEvent,  # noqa: F401
-                       LoadDriftDetector)
+                       FailureDriftDetector, LoadDriftDetector)
 from .estimators import (ArrivalEstimator, ArrivalModel,  # noqa: F401
-                         BiModalEstimator, FittedModel, OnlineSelector,
+                         BiModalEstimator, FittedModel, LossModel,
+                         LossRateEstimator, OnlineSelector,
                          ParetoEstimator, ShiftedExpEstimator, fit_window)
 from .replay import ReplayResult, replay  # noqa: F401
 
 __all__ = [
     "ArrivalEstimator", "ArrivalModel", "BiModalEstimator", "ControlEvent",
-    "ControllerConfig", "DriftDetector", "DriftEvent", "FittedModel",
-    "HedgedServeActuator", "LoadDriftDetector", "OnlineSelector",
+    "ControllerConfig", "DriftDetector", "DriftEvent",
+    "FailureDriftDetector", "FittedModel", "HedgedServeActuator",
+    "LoadDriftDetector", "LossModel", "LossRateEstimator", "OnlineSelector",
     "ParetoEstimator", "RedundancyController", "ReplayResult",
     "ShiftedExpEstimator", "fit_window", "replay",
 ]

@@ -6,6 +6,10 @@ Dataflow (DESIGN.md §7):
                     --> DriftDetector (CUSUM + straggle EWMA vs committed model)
     job timestamps  --> ArrivalEstimator (decayed rate + dispersion)
                     --> LoadDriftDetector (block CUSUM vs committed model)
+    task outcomes   --> LossRateEstimator (decayed Bernoulli loss rate)
+                    --> FailureDriftDetector (CUSUM vs committed loss rate)
+                    --> quarantine + rule-of-three redundancy floor
+                        (the fleet-degradation path, DESIGN.md §9)
     drift alarm     --> wait for ``refit_samples`` post-change samples
                         (``arrival_refit_gaps`` clean gaps for a load alarm)
                     --> one-shot exact-likelihood refit of the post-change
@@ -30,20 +34,42 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
+import math
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.distributions import BiModal, ShiftedExp
 from ..core.policy import Policy
 from ..core.scenario import Scenario
-from .detector import DriftDetector, DriftEvent, LoadDriftDetector
+from .detector import (DriftDetector, DriftEvent, FailureDriftDetector,
+                       LoadDriftDetector)
 from .estimators import (ArrivalEstimator, ArrivalModel, FittedModel,
-                         OnlineSelector, fit_window, model_median)
+                         LossModel, LossRateEstimator, OnlineSelector,
+                         fit_window, model_median)
 
 __all__ = ["ControlEvent", "ControllerConfig", "RedundancyController",
            "TrainerActuator", "HedgedServeActuator"]
+
+_logger = logging.getLogger(__name__)
+
+#: Surface-fallback warnings are rate-limited by COUNT (the controller is
+#: wall-clock-free by contract): the first failure logs, then every Nth.
+_FALLBACK_LOG_EVERY = 16
+_fallback_count = 0
+
+
+def _warn_surface_fallback(exc: BaseException) -> None:
+    global _fallback_count
+    if _fallback_count % _FALLBACK_LOG_EVERY == 0:
+        _logger.warning(
+            "compiled-surface re-plan failed (%s: %s); falling back to "
+            "the oracle engine for this commit (suppressing the next %d "
+            "identical warnings)",
+            type(exc).__name__, exc, _FALLBACK_LOG_EVERY - 1)
+    _fallback_count += 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +99,29 @@ class ControllerConfig:
                                         # slow drift the CUSUM won't alarm
                                         # on still reaches the plan); 0=off
     arrival_block: int = 12     # gaps per load-CUSUM block
+    loss_forget: float = 0.998  # loss-rate estimator forgetting
+    loss_min_outcomes: int = 32     # outcomes before the first loss commit
+    loss_refit_outcomes: int = 32   # clean post-alarm outcomes before a
+                                    # failure commit (the estimator is reset
+                                    # at the alarm, so these are post-change)
+    quarantine_loss: float = 0.5    # decayed per-worker loss fraction at or
+                                    # beyond which a worker is quarantined
+    quarantine_weight: float = 8.0  # per-worker evidence mass (outcome
+                                    # count decayed on the fleet-wide
+                                    # outcome clock) before quarantine
+                                    # may fire — three unlucky losses on
+                                    # a barely observed worker are not a
+                                    # crash loop.  Must sit below the
+                                    # per-worker saturation mass
+                                    # ~1/(1 - loss_forget^n) or no
+                                    # worker can ever reach it
+    loss_refresh_outcomes: int = 1024   # periodic loss-recommit cadence:
+                                        # a healed worker whose storm-era
+                                        # evidence has decayed is restored
+                                        # here even when the CUSUM never
+                                        # alarms again (p0 ~ 0 after the
+                                        # heal commit leaves nothing for
+                                        # the down side to detect); 0=off
 
     def __post_init__(self):
         if self.boot_samples < 2 or self.refit_samples < 2:
@@ -92,13 +141,31 @@ class ControllerConfig:
             raise ValueError(
                 "arrival_refit_gaps must be >= arrival_min_gaps "
                 f"({self.arrival_refit_gaps} < {self.arrival_min_gaps})")
+        if not (0.0 < self.loss_forget <= 1.0):
+            raise ValueError(
+                f"loss_forget must be in (0, 1], got {self.loss_forget}")
+        if self.loss_min_outcomes < 2 or self.loss_refit_outcomes < 2:
+            raise ValueError(
+                "loss_min_outcomes and loss_refit_outcomes must be >= 2")
+        if not (0.0 < self.quarantine_loss <= 1.0):
+            raise ValueError(
+                f"quarantine_loss must be in (0, 1], "
+                f"got {self.quarantine_loss}")
+        if self.quarantine_weight <= 0.0:
+            raise ValueError(
+                f"quarantine_weight must be > 0, "
+                f"got {self.quarantine_weight}")
+        if self.loss_refresh_outcomes < 0:
+            raise ValueError(
+                f"loss_refresh_outcomes must be >= 0 (0 = off), "
+                f"got {self.loss_refresh_outcomes}")
 
 
 @dataclasses.dataclass(frozen=True)
 class ControlEvent:
     """One committed control decision (model and/or policy update)."""
 
-    kind: str                   # "boot" | "drift" | "refresh" | "load"
+    kind: str        # "boot" | "drift" | "refresh" | "load" | "failure"
     at: int                     # absolute CU-sample index of the commit
     model: FittedModel
     hedged: bool                # planned under the rare-straggler hedge
@@ -113,6 +180,10 @@ class ControlEvent:
     warm: bool = False          # ... and that call HIT a warm executable
                                 # (False on the first compile of a new
                                 # (family, ..., bucket) surface key)
+    loss: Optional[LossModel] = None    # loss model planned under
+    quarantined: Tuple[int, ...] = ()   # workers excluded from the plan
+    fallback: bool = False      # the sweep backend failed and the commit
+                                # re-planned on the oracle engine instead
 
     @property
     def family(self) -> str:
@@ -241,6 +312,19 @@ class RedundancyController:
         self._pending_load: Optional[DriftEvent] = None
         self._gaps_seen = 0
         self._last_load_commit = 0
+        # -- the failure (fleet-degradation) side ---------------------------
+        self.loss_estimator = LossRateEstimator(
+            forget=self.config.loss_forget,
+            min_outcomes=self.config.loss_min_outcomes)
+        self.failure_detector = FailureDriftDetector()
+        self.loss_model: Optional[LossModel] = None
+        self.quarantined: Tuple[int, ...] = ()
+        self._pending_loss: Optional[DriftEvent] = None
+        self._outcomes_seen = 0
+        self._last_loss_commit = 0
+        self._w_out = np.zeros(scenario.n)    # decayed per-worker outcomes
+        self._w_loss = np.zeros(scenario.n)   # decayed per-worker losses
+        self._fell_back = False
 
     # -- read side ----------------------------------------------------------
     @property
@@ -260,13 +344,25 @@ class RedundancyController:
 
     # -- the loop -----------------------------------------------------------
     def observe(self, worker_times: np.ndarray,
-                timestamp: Optional[float] = None) -> Optional[ControlEvent]:
+                timestamp: Optional[float] = None,
+                losses: Optional[np.ndarray] = None
+                ) -> Optional[ControlEvent]:
         """Feed one step's per-CU completion times; maybe commit.
 
         ``timestamp`` is the job's absolute arrival instant (any monotone
         clock): it feeds the arrival-rate estimator and the load-drift
         channel.  Omitting it leaves the load side dormant — the
         controller then behaves exactly like the single-job mode.
+
+        ``losses`` is a per-worker boolean mask: worker w's task of this
+        step was terminally LOST (crash-relaunch budget exhausted).
+        Workers with a finite entry in ``worker_times`` count as
+        completions; flagged workers count as losses; the rest (still
+        running, cancelled by the job resolving) contribute no outcome.
+        Supplying it turns on the fleet-degradation path — loss-rate
+        estimation, the failure-drift CUSUM, quarantine, and the
+        rule-of-three redundancy floor.  Omitting it leaves that side
+        dormant, exactly like the load side without timestamps.
 
         When the scenario carries an exogenous per-CU ``delta`` (known
         deterministic work), the controller estimates the NOISE
@@ -275,14 +371,19 @@ class RedundancyController:
         fitted parameters and the re-plan scenario would then add it
         again — a double count that distorts the whole k-curve.
         """
-        x = np.asarray(worker_times, dtype=np.float64).ravel()
-        x = x[np.isfinite(x)]
+        raw = np.asarray(worker_times, dtype=np.float64).ravel()
+        x = raw[np.isfinite(raw)]
         if x.size == 0:
             # the job still ARRIVED even if its step produced no finite
             # telemetry (failed/timed-out step): dropping the timestamp
             # would merge two arrivals into one doubled gap and bias the
-            # rate estimate low
-            return self._observe_arrival(timestamp)
+            # rate estimate low.  Its outcomes still RESOLVED, too — a
+            # step whose every task crashed out is exactly the signal
+            # the failure channel exists for
+            load_event = self._observe_arrival(timestamp)
+            loss_event = self._observe_losses(
+                raw, losses, allow_commit=load_event is None)
+            return load_event if load_event is not None else loss_event
         if self.scenario.delta is not None:
             x = np.maximum(x - self.scenario.delta, 1e-12)
         start = self._seen
@@ -290,6 +391,8 @@ class RedundancyController:
         self._buffer.extend(x.tolist())
         self.selector.update(x)
         load_event = self._observe_arrival(timestamp)
+        loss_event = self._observe_losses(raw, losses,
+                                          allow_commit=load_event is None)
 
         if self.model is None:                           # bootstrapping
             if self._seen < self.config.boot_samples:
@@ -307,15 +410,15 @@ class RedundancyController:
                 # timestamp-less observation instead of wedging forever.
                 return None
             return self._commit("boot", self._window(self._seen))
-        if load_event is not None:
-            # the service channel still sees this batch: a load commit no
-            # longer rebases the service detector (see _commit), so its
-            # statistics keep accumulating; a service alarm raised here
-            # is parked and committed by the normal drift path
+        if load_event is not None or loss_event is not None:
+            # the service channel still sees this batch: a load/failure
+            # commit does not rebase the service detector (see _commit),
+            # so its statistics keep accumulating; a service alarm raised
+            # here is parked and committed by the normal drift path
             alarm = self.detector.update(x, at=start)
             if alarm is not None and self._pending is None:
                 self._pending = alarm
-            return load_event
+            return load_event if load_event is not None else loss_event
 
         if self._pending is not None:                    # drift: wait + refit
             return self._maybe_drift_commit()
@@ -382,6 +485,159 @@ class RedundancyController:
             return ev
         return None
 
+    def _observe_losses(self, raw: np.ndarray,
+                        losses: Optional[np.ndarray],
+                        allow_commit: bool = True
+                        ) -> Optional[ControlEvent]:
+        """The failure side of one observation: loss-rate estimator
+        update, per-worker liveness accounting, failure-drift CUSUM, and
+        (maybe) a "failure" commit.  A no-op without a ``losses`` mask.
+
+        ``allow_commit=False`` still absorbs the outcomes but defers any
+        ready commit to the next observation — one observation commits at
+        most one event, and a simultaneous load commit takes precedence.
+        """
+        if losses is None:
+            return None
+        lost = np.asarray(losses, dtype=bool).ravel()
+        n = self.scenario.n
+        if lost.size != n:
+            raise ValueError(
+                f"losses must be a per-worker mask of length n={n}, "
+                f"got {lost.size}")
+        # positional per-worker attribution when the step reports one
+        # time per worker; a pooled multi-task step still feeds the
+        # pooled estimator, just not the per-worker quarantine counters
+        aligned = raw.size == n
+        done = (np.isfinite(raw) & ~lost) if aligned \
+            else np.zeros(n, dtype=bool)
+        if aligned:
+            # worker order, not successes-then-losses: a fixed batch
+            # ordering would phase-lock the failure CUSUM to the step
+            outcomes = lost[done | lost]
+        else:
+            outcomes = np.concatenate(
+                [np.zeros(int(np.isfinite(raw).sum()), dtype=bool),
+                 np.ones(int(lost.sum()), dtype=bool)])
+        if outcomes.size == 0:
+            return None
+        # per-worker counters forget on the OUTCOME clock (one unit per
+        # recorded outcome, same clock as the pooled estimator and the
+        # refresh cadence) — not per observe() call.  A quarantined
+        # worker produces no outcomes, so its storm-era evidence decays
+        # with the surviving fleet's throughput and the probational
+        # restore arrives within a bounded number of fleet outcomes; a
+        # per-call decay would stretch that by a factor n and strand a
+        # healed worker in quarantine long after the storm
+        d = self.config.loss_forget ** outcomes.size
+        self._w_out *= d
+        self._w_loss *= d
+        self._w_out += done + lost
+        self._w_loss += lost
+        start = self._outcomes_seen
+        self._outcomes_seen += outcomes.size
+        self.loss_estimator.observe(outcomes)
+        if self.loss_model is None:
+            # failure boot: commit as soon as the evidence floor is met
+            # AND the service side has booted (the plan needs a model)
+            if allow_commit and self.loss_estimator.ready and \
+                    self.model is not None:
+                return self._commit("failure", window=None,
+                                    model=self.model)
+            return None
+        if self._pending_loss is None:
+            alarm = self.failure_detector.update(outcomes, at=start)
+            if alarm is not None:
+                self._pending_loss = alarm
+                self.loss_estimator.reset()     # clean post-change stream
+                return None
+            if allow_commit and self.config.loss_refresh_outcomes and \
+                    self._outcomes_seen - self._last_loss_commit >= \
+                    self.config.loss_refresh_outcomes and \
+                    self.failure_detector.banked < 0.25:
+                # periodic resync to the decayed loss estimate: tracks
+                # slow loss drifts the CUSUM was not designed against,
+                # quarantines a persistent crash-looper once its healthy
+                # history decays, and restores one whose storm-era
+                # evidence decayed away; silent unless the policy moves.
+                # Held off only while the up side has CROSS-batch banked
+                # evidence (rebasing would erase it); neither the
+                # end-of-batch up value (pinned above zero by a matched
+                # steady stream's own within-step losses) nor the down
+                # side (a genuine heal alarms within a few steps by
+                # itself) gates — either would starve the resync exactly
+                # when quarantine needs it
+                return self._commit("failure", window=None,
+                                    model=self.model, quiet=True)
+            return None
+        if allow_commit and \
+                self.loss_estimator.num_outcomes >= \
+                self.config.loss_refit_outcomes:
+            ev = self._commit("failure", window=None, model=self.model,
+                              drift=self._pending_loss)
+            self._pending_loss = None
+            return ev
+        return None
+
+    def _refresh_quarantine(self) -> None:
+        """Re-derive the quarantine set from the decayed per-worker loss
+        fractions.  Quarantine is evidence-bound, not sticky: a worker
+        that stops producing outcomes decays below the evidence floor
+        and is probationally restored — the next failure commit removes
+        it again if the crash loop persists."""
+        cfg = self.config
+        frac = self._w_loss / np.maximum(self._w_out, 1e-12)
+        bad = [w for w in range(self.scenario.n)
+               if self._w_out[w] >= cfg.quarantine_weight
+               and frac[w] >= cfg.quarantine_loss]
+        # never quarantine below the smallest legal k of the full
+        # scenario: drop the worst offenders first, keep the rest
+        max_drop = self.scenario.n - min(self.scenario.legal_ks())
+        if len(bad) > max_drop:
+            bad = sorted(bad, key=lambda w: frac[w],
+                         reverse=True)[:max_drop]
+        self.quarantined = tuple(sorted(bad))
+
+    def _degraded(self, scenario: Scenario) -> Scenario:
+        """The plan scenario after graceful degradation: quarantined
+        workers leave the fleet (n shrink + worker_speeds subset), and
+        the committed loss model floors the redundancy — no legal k may
+        leave fewer parity tasks than the rule-of-three loss rate
+        predicts losing per job (capped at half the fleet), so in
+        particular k = n (zero redundancy) is off the table whenever ANY
+        loss evidence is committed."""
+        if self.loss_model is None:
+            return scenario
+        drop = set(w for w in self.quarantined if w < scenario.n)
+        if drop:
+            keep = [w for w in range(scenario.n) if w not in drop]
+            nn = len(keep)
+            speeds = None if scenario.worker_speeds is None else \
+                tuple(scenario.worker_speeds[w] for w in keep)
+            cks = scenario.candidate_ks
+            if cks is not None:
+                cks = tuple(k for k in cks if k <= nn and nn % k == 0)
+            if cks != () and nn >= 1:
+                try:
+                    shrunk = dataclasses.replace(
+                        scenario, n=nn, worker_speeds=speeds,
+                        candidate_ks=cks)
+                    shrunk.legal_ks()
+                    scenario = shrunk
+                except ValueError:
+                    pass    # no legal k at the shrunk size: keep the
+                            # full fleet and rely on the k floor below
+        need = int(math.ceil(
+            scenario.n * min(self.loss_model.upper, 0.5)))
+        if need > 0:
+            ks = scenario.legal_ks()
+            floored = [k for k in ks if scenario.n - k >= need] \
+                or [min(ks)]
+            if floored != ks:
+                scenario = dataclasses.replace(
+                    scenario, candidate_ks=tuple(floored))
+        return scenario
+
     # -- internals ----------------------------------------------------------
     def _maybe_drift_commit(self) -> Optional[ControlEvent]:
         """Commit the pending drift once enough GUARANTEED post-change
@@ -425,7 +681,22 @@ class RedundancyController:
             self.load_detector.rebase(self.arrival_model,
                                       at=self._gaps_seen)
             self._last_load_commit = self._gaps_seen
+        if kind == "failure" or (kind == "boot" and
+                                 self.loss_estimator.ready):
+            # a "failure" commit re-estimates the loss model on the
+            # post-alarm outcome stream; a boot with outcomes flowing
+            # commits it alongside so the very first plan already
+            # carries the redundancy floor.  Other commit kinds keep
+            # the COMMITTED loss model — it is the failure detector's
+            # reference (the same asymmetry as the arrival model above).
+            self.loss_model = self.loss_estimator.model()
+            self.failure_detector.rebase(self.loss_model.rate,
+                                         at=self._outcomes_seen)
+            self._last_loss_commit = self._outcomes_seen
+            self._refresh_quarantine()
+        scenario = self._degraded(scenario)
         t0 = time.perf_counter()
+        self._fell_back = False
         cached = warm = False
         if self.load_objective is not None and self.arrival_model is not None:
             from ..api import Planner
@@ -436,15 +707,18 @@ class RedundancyController:
             plan = Planner._finalize(
                 scenario, self._load_aware_curve(scenario, unit))
             if cached:
-                warm = surface_cache_stats()["misses"] == misses0
+                warm = not self._fell_back and \
+                    surface_cache_stats()["misses"] == misses0
         else:
             plan = self.planner.plan(scenario)
         replan_ms = (time.perf_counter() - t0) * 1e3
         new = plan.policy
         old = self._policy
         switched = False
-        if new.k != old.k:
-            cost_old = plan.curve.get(old.k)
+        if new.k != old.k or new.n != old.n:
+            # a fleet shrink (quarantine) changed n: the old policy is
+            # not comparable on the new curve, the plan must move
+            cost_old = plan.curve.get(old.k) if new.n == old.n else None
             cost_new = plan.curve[new.k]
             if cost_old is None:
                 switched = True          # old k no longer legal: must move
@@ -465,17 +739,17 @@ class RedundancyController:
         for a in self.actuators:
             a.apply(self._policy, fitted)
         self.model = fitted
-        if kind != "load":
-            # a load commit re-plans under an UNCHANGED service model:
-            # rebasing the service detector would zero the CUSUM/EWMA
-            # evidence a concurrent service drift has banked (the mirror
-            # of keeping the committed arrival model across service
-            # commits above)
+        if kind not in ("load", "failure"):
+            # a load/failure commit re-plans under an UNCHANGED service
+            # model: rebasing the service detector would zero the
+            # CUSUM/EWMA evidence a concurrent service drift has banked
+            # (the mirror of keeping the committed arrival model across
+            # service commits above)
             self.detector.rebase(fitted, at=self._seen)
         if kind == "drift" and window is not None:
             # restart the streaming estimators from the post-change window
             self.selector.reset(seed_samples=window)
-        if kind != "load":
+        if kind not in ("load", "failure"):
             # the service-refresh clock ticks on SERVICE-model commits
             # only: a load commit reuses the stale committed service
             # model, so letting it reset the clock would starve the
@@ -487,7 +761,8 @@ class RedundancyController:
             kind=kind, at=self._seen, model=fitted, hedged=hedged,
             old_policy=old, new_policy=self._policy, switched=switched,
             replan_ms=replan_ms, drift=drift, arrival=self.arrival_model,
-            cached=cached, warm=warm)
+            cached=cached, warm=warm, loss=self.loss_model,
+            quarantined=self.quarantined, fallback=self._fell_back)
         if (kind != "refresh" and not quiet) or switched:
             # refreshes (and quiet load resyncs) that change nothing are
             # silent bookkeeping
@@ -512,10 +787,23 @@ class RedundancyController:
         am = self.arrival_model
         run = resolve_sweep_backend(obj.backend)
         sc = dataclasses.replace(scenario, arrivals=am.process())
-        sw = run(sc, loads=[am.rate * unit], ks=sc.legal_ks(),
-                 num_jobs=obj.num_jobs, reps=obj.reps, preempt=obj.preempt,
-                 cancel_overhead=obj.cancel_overhead, seed=obj.seed,
-                 warmup=obj.warmup)
+        kwargs = dict(loads=[am.rate * unit], ks=sc.legal_ks(),
+                      num_jobs=obj.num_jobs, reps=obj.reps,
+                      preempt=obj.preempt,
+                      cancel_overhead=obj.cancel_overhead, seed=obj.seed,
+                      warmup=obj.warmup)
+        try:
+            sw = run(sc, **kwargs)
+        except Exception as exc:
+            if obj.backend == "oracle":
+                raise        # nothing left to degrade to
+            # graceful degradation: a compiled-surface miss that fails to
+            # compile (or any batched-engine error) must not crash a
+            # commit mid-run — the pure-python discrete-event oracle has
+            # no compile step and always answers, just slower
+            _warn_surface_fallback(exc)
+            self._fell_back = True
+            sw = resolve_sweep_backend("oracle")(sc, **kwargs)
         return sw.curve(0, obj.metric)
 
     def _hedged_plan_dist(self, fitted: FittedModel):

@@ -35,7 +35,8 @@ import numpy as np
 
 from .estimators import ArrivalModel, FittedModel
 
-__all__ = ["DriftDetector", "DriftEvent", "LoadDriftDetector"]
+__all__ = ["DriftDetector", "DriftEvent", "FailureDriftDetector",
+           "LoadDriftDetector"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +128,133 @@ class DriftDetector:
                 start = max(self.rebased_at, idx - int(math.ceil(1.0 / a)))
                 return DriftEvent("straggle_ewma", at=idx, start=start,
                                   stat=self.ewma, threshold=self.band)
+        return None
+
+
+@dataclasses.dataclass
+class FailureDriftDetector:
+    """CUSUM failure-drift channel on the task-outcome stream.
+
+    Neither the service channel nor the load channel can see a crash
+    storm that leaves completion TIMES and arrival TIMESTAMPS alone: a
+    worker whose task is terminally lost contributes no finite time at
+    all.  This detector watches the Bernoulli outcome stream (True =
+    terminal loss) THROUGH the committed loss rate p0, as two one-sided
+    likelihood-ratio CUSUMs against DESIGN alternatives:
+
+      * "loss_up": p1 = max(2 p0, p0 + ``min_shift``) — the fleet is
+        failing materially more than committed.  The per-outcome LLR
+        increment is winsorized at ``cap``, so one unlucky loss under a
+        near-zero commit (whose raw LLR log(p1/p0) is huge) can never
+        alarm by itself — several must cluster faster than the clean-
+        outcome decay between them drains the statistic.
+      * "loss_down": p1 = p0 / 2 — the fleet healed, the controller may
+        relax a storm-era quarantine/redundancy floor.  Armed only when
+        p0 >= ``min_down``: below that there is nothing to relax and the
+        down-LLR degenerates.
+
+    The LLR form (rather than the raw z = x - p0 excess) is what keeps
+    the null ARL usable across the whole p0 range: under a matched
+    mid-range commit each increment has mean -KL(p0 || p1) < 0, so the
+    statistic drains between coincidences instead of random-walking
+    across the threshold on Bernoulli noise alone.  Same contract as the
+    other detectors: plain deterministic recursions, ``rebase`` on every
+    commit, ``at``/``start`` are absolute OUTCOME indices, and the index
+    where the alarming side last sat at zero estimates the change-point.
+    """
+
+    threshold: float = 4.0    # in nats: >= 3 clustered capped-LLR losses
+                              # under a near-zero commit, or ~threshold /
+                              # KL(p0 || p0/2) clean outcomes of healing
+    cap: float = 1.5          # winsorized |increment| (nats)
+    min_shift: float = 0.05   # smallest up-shift designed against: drifts
+                              # below it are left to the decayed
+                              # estimator's periodic recommit
+    min_down: float = 0.02    # committed rate below which the healing
+                              # side stays disarmed
+    min_outcomes: int = 8     # outcomes after rebase before alarms
+    _P_FLOOR = 1e-4           # p0 clamp for the LLR (p0 = 0 exactly would
+                              # make one loss's raw LLR infinite)
+
+    def __post_init__(self):
+        self.p0: Optional[float] = None
+        self._rebase(at=0)
+
+    def _rebase(self, at: int) -> None:
+        self.g_up = self.g_dn = 0.0
+        self.g_up_min = 0.0
+        self.up_start = self.dn_start = at
+        self.rebased_at = at
+        if self.p0 is None:
+            return
+        p = min(max(self.p0, self._P_FLOOR), 1.0 - self._P_FLOOR)
+        up = min(max(2.0 * p, p + self.min_shift), 1.0 - self._P_FLOOR)
+        c = self.cap
+        self._up_loss = min(math.log(up / p), c)
+        self._up_ok = max(math.log((1.0 - up) / (1.0 - p)), -c)
+        if self.p0 >= self.min_down:
+            dn = max(0.5 * p, self._P_FLOOR)
+            self._dn_loss = max(math.log(dn / p), -c)
+            self._dn_ok = min(math.log((1.0 - dn) / (1.0 - p)), c)
+        else:
+            self._dn_loss = self._dn_ok = None
+
+    def rebase(self, p0: float, at: int) -> None:
+        """Adopt a newly committed loss rate; statistics restart."""
+        if not (0.0 <= p0 <= 1.0):
+            raise ValueError(f"loss rate must be in [0, 1], got {p0}")
+        self.p0 = float(p0)
+        self._rebase(at)
+
+    @property
+    def charge(self) -> float:
+        """The hottest CUSUM side as a fraction of its alarm level (cf.
+        ``LoadDriftDetector.charge``)."""
+        return max(self.g_up, self.g_dn) / self.threshold
+
+    @property
+    def banked(self) -> float:
+        """CROSS-batch up-side evidence as a fraction of the alarm level:
+        the minimum the up statistic touched during the last ``update``
+        batch.  One step's own losses arrive at fixed positions within
+        the batch, so the END-of-batch ``g_up`` of a perfectly matched
+        steady stream can sit permanently at (losses-per-step) x its
+        per-loss increment while the statistic drains to zero in between
+        — evidence that never survives a batch is not banked.  The
+        controller's periodic loss resync gates on THIS, not on
+        ``charge``."""
+        return self.g_up_min / self.threshold
+
+    def update(self, lost: np.ndarray, at: int) -> Optional[DriftEvent]:
+        """Feed task outcomes (first outcome has absolute index ``at``);
+        returns the first alarm (the controller rebases before feeding
+        more)."""
+        if self.p0 is None:
+            return None
+        x = np.asarray(lost, dtype=bool).ravel()
+        mn = self.g_up
+        for i in range(x.size):
+            idx = at + i
+            self.g_up = max(0.0, self.g_up + (
+                self._up_loss if x[i] else self._up_ok))
+            mn = min(mn, self.g_up)
+            if self.g_up == 0.0:
+                self.up_start = idx + 1
+            if self._dn_loss is not None:
+                self.g_dn = max(0.0, self.g_dn + (
+                    self._dn_loss if x[i] else self._dn_ok))
+                if self.g_dn == 0.0:
+                    self.dn_start = idx + 1
+            if idx - self.rebased_at + 1 < self.min_outcomes:
+                continue
+            if self.g_up > self.threshold:
+                return DriftEvent("loss_up", at=idx, start=self.up_start,
+                                  stat=self.g_up, threshold=self.threshold)
+            if self.g_dn > self.threshold:
+                self.g_up_min = mn
+                return DriftEvent("loss_down", at=idx, start=self.dn_start,
+                                  stat=self.g_dn, threshold=self.threshold)
+        self.g_up_min = mn
         return None
 
 

@@ -42,6 +42,7 @@ from ..core.scenario import (ArrivalProcess, DeterministicArrivals,
                              MMPPArrivals, PoissonArrivals, arrival_gap)
 
 __all__ = ["ArrivalEstimator", "ArrivalModel", "FittedModel",
+           "LossModel", "LossRateEstimator",
            "ShiftedExpEstimator", "ParetoEstimator", "BiModalEstimator",
            "OnlineSelector", "fit_window"]
 
@@ -541,6 +542,96 @@ class ArrivalEstimator:
         return ArrivalModel(rate=self.rate(), dispersion=self.dispersion(),
                             num_gaps=self.w, block=self.block,
                             block_dispersion=self.block_dispersion())
+
+
+# --------------------------------------------------------------------------
+# Task-loss estimation (the FAILURE side of the control loop)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LossModel:
+    """A committed task-loss model: the Bernoulli loss probability plus
+    its rule-of-three upper confidence rate.
+
+    ``rate``          decayed fraction of task outcomes that were terminal
+                      losses (relaunch budget exhausted).
+    ``upper``         max(rate, 3 / evidence mass): with m outcomes and no
+                      loss observed, loss rates up to ~3/m are
+                      statistically indistinguishable from zero — the
+                      controller floors its redundancy on THIS, never on
+                      the point estimate, so a freshly booted fleet is
+                      not planned as if it were provably loss-free.
+    ``num_outcomes``  effective evidence mass (decayed outcome count),
+                      the same currency as ``FittedModel.num_samples``.
+    """
+
+    rate: float
+    upper: float
+    num_outcomes: float = 0.0
+
+
+class LossRateEstimator:
+    """Streaming Bernoulli task-loss rate with exponential forgetting.
+
+    Feed one boolean per RESOLVED task (True = terminally lost); the
+    decayed (weight, losses) pair tracks a slowly wandering loss rate the
+    same way ``ArrivalEstimator`` tracks the gap moments.  ``reset``
+    drops the moments at a failure-drift alarm so the post-change stream
+    accumulates clean evidence before the controller re-commits.
+    """
+
+    def __init__(self, forget: float = 0.998, min_outcomes: int = 32):
+        if not (0.0 < forget <= 1.0):
+            raise ValueError(f"forget must be in (0, 1], got {forget}")
+        if min_outcomes < 2:
+            raise ValueError(
+                f"min_outcomes must be >= 2, got {min_outcomes}")
+        self.forget = forget
+        self.min_outcomes = min_outcomes
+        self.w = self.losses = 0.0
+        self._count = 0
+
+    def observe(self, lost) -> None:
+        """One or more task outcomes (truthy = terminally lost)."""
+        x = np.asarray(lost, dtype=bool).ravel()
+        if x.size == 0:
+            return
+        dec, fb = _decay_weights(self.forget, x.size)
+        self.w = self.w * fb + float(dec.sum())
+        self.losses = self.losses * fb + float((dec * x).sum())
+        self._count += x.size
+
+    def reset(self) -> None:
+        """Forget the moments (post-alarm restart)."""
+        self.w = self.losses = 0.0
+        self._count = 0
+
+    @property
+    def weight(self) -> float:
+        return self.w
+
+    @property
+    def num_outcomes(self) -> int:
+        """Outcomes observed since the last reset (undecayed count)."""
+        return self._count
+
+    @property
+    def ready(self) -> bool:
+        return self._count >= self.min_outcomes
+
+    def rate(self) -> float:
+        return self.losses / max(self.w, _TINY)
+
+    def upper(self) -> float:
+        """Rule-of-three upper confidence rate (see ``LossModel``)."""
+        return float(min(max(self.rate(), 3.0 / max(self.w, _TINY)), 1.0))
+
+    def model(self) -> LossModel:
+        if not self.ready:
+            raise ValueError(
+                f"need {self.min_outcomes} outcomes, have {self._count}")
+        return LossModel(rate=self.rate(), upper=self.upper(),
+                         num_outcomes=self.w)
 
 
 def fit_window(samples: np.ndarray) -> FittedModel:

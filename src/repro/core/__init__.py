@@ -10,10 +10,11 @@ from .distributions import (FAMILIES, BiModal, Pareto, Scaling, ServiceTime,
                             service_loglik)
 from .expectations import completion_curve, expected_completion_time
 from .planner import Plan, Strategy, divisors, plan, plan_grid, strategy_table, theorem_kstar
-from .policy import Policy
+from .policy import Policy, RetryPolicy
 from .scenario import (
     ArrivalProcess,
     DeterministicArrivals,
+    FailureModel,
     MMPPArrivals,
     PoissonArrivals,
     Regime,
@@ -50,9 +51,9 @@ __all__ = [
     "service_loglik", "FAMILIES",
     "completion_curve", "expected_completion_time",
     "Plan", "Strategy", "divisors", "plan", "plan_grid", "strategy_table",
-    "theorem_kstar", "Policy", "Scenario", "task_survival",
+    "theorem_kstar", "Policy", "RetryPolicy", "Scenario", "task_survival",
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
-    "MMPPArrivals", "sample_task_matrix",
+    "FailureModel", "MMPPArrivals", "sample_task_matrix",
     "Regime", "RegimeTrace", "sample_regime_trace",
     "FractionalRepetitionCode", "decode_blocks", "decode_matrix", "encode_blocks",
     "fractional_repetition_code", "gc_decode_weights", "mds_generator",

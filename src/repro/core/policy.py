@@ -18,19 +18,109 @@ previously lived in ``runtime.straggler.plan_fr`` and
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 from .batched import divisors
 
-__all__ = ["Policy"]
+__all__ = ["Policy", "RetryPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How a lost or timed-out task attempt is relaunched.
+
+    The redundancy decision (k of n) buys DIVERSITY; this object is the
+    orthogonal RELAUNCH axis ("Straggler Mitigation at Scale"): when a
+    worker crash kills the attempt in service — or an attempt exceeds
+    ``timeout`` — the task is retried, attempt i+1 launching after an
+    exponential backoff
+
+        delay(i) = min(backoff_base * backoff_mult**i, backoff_cap)
+                   * (1 + jitter * (2u - 1)),   u ~ U[0, 1)
+
+    until ``max_attempts`` total attempts are spent, at which point the
+    task is permanently lost for its job.  ``hedge_on_timeout`` marks the
+    timeout as a HEDGE trigger (launch a second copy, keep the original
+    running) rather than a kill; the cluster engines model one exclusive
+    server per task, where a same-worker hedge is meaningless, so they
+    treat it as "no timeout kill" — the serving/trainer layers implement
+    the actual hedge (see DESIGN.md §9).
+
+    Frozen and hashable: it rides jit static arguments and ``Policy``.
+    """
+
+    max_attempts: int = 3
+    backoff_base: float = 0.5
+    backoff_mult: float = 2.0
+    backoff_cap: float = 30.0
+    jitter: float = 0.0
+    timeout: Optional[float] = None
+    hedge_on_timeout: bool = False
+
+    def __post_init__(self):
+        if int(self.max_attempts) < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.backoff_base < 0:
+            raise ValueError(
+                f"backoff_base must be >= 0, got {self.backoff_base}")
+        if self.backoff_mult < 1.0:
+            raise ValueError(
+                f"backoff_mult must be >= 1, got {self.backoff_mult}")
+        if self.backoff_cap < self.backoff_base:
+            raise ValueError(
+                f"backoff_cap must be >= backoff_base, got "
+                f"{self.backoff_cap} < {self.backoff_base}")
+        if not (0.0 <= self.jitter <= 1.0):
+            raise ValueError(f"jitter must be in [0, 1], got {self.jitter}")
+        if self.timeout is not None and self.timeout <= 0:
+            raise ValueError(f"timeout must be > 0, got {self.timeout}")
+
+    def delay(self, retry_index: int, u=0.5):
+        """Backoff delay before retry ``retry_index`` (0-based: the delay
+        between the first failure and the second attempt is index 0).
+
+        ``u`` in [0, 1) spreads the jittered delay across the band
+        ``base_i * [1 - jitter, 1 + jitter]``; the default midpoint 0.5
+        is the deterministic (jitter-free) schedule.  Plain arithmetic,
+        so ``u`` may be a numpy or traced jax array.
+        """
+        if retry_index < 0:
+            raise ValueError(f"retry_index must be >= 0, got {retry_index}")
+        base = min(self.backoff_base * self.backoff_mult ** retry_index,
+                   self.backoff_cap)
+        return base * (1.0 + self.jitter * (2.0 * u - 1.0))
+
+    def schedule(self, us=None) -> List[float]:
+        """The full per-retry delay list (length ``max_attempts - 1``)."""
+        if us is None:
+            us = [0.5] * (self.max_attempts - 1)
+        if len(us) != self.max_attempts - 1:
+            raise ValueError(
+                f"need {self.max_attempts - 1} jitter draws, got {len(us)}")
+        return [float(self.delay(i, u)) for i, u in enumerate(us)]
+
+    @property
+    def kills_on_timeout(self) -> bool:
+        """Whether the engines should abort an attempt at ``timeout``
+        (a hedging timeout leaves the original attempt running)."""
+        return self.timeout is not None and not self.hedge_on_timeout
 
 
 @dataclasses.dataclass(frozen=True, order=True)
 class Policy:
-    """An [n, k] redundancy decision (k divides n)."""
+    """An [n, k] redundancy decision (k divides n).
+
+    ``retry`` attaches the relaunch axis (``RetryPolicy``) to the
+    redundancy decision; it is excluded from ordering/equality so the
+    decision identity stays the (n, k) pair — two plans that dispatch
+    identically compare equal even if their retry schedules differ.
+    """
 
     n: int
     k: int
+    retry: Optional[RetryPolicy] = dataclasses.field(
+        default=None, compare=False)
 
     def __post_init__(self):
         if self.n < 1:
@@ -40,6 +130,13 @@ class Policy:
         if self.n % self.k:
             raise ValueError(
                 f"k={self.k} must divide n={self.n} (integer task size)")
+        if self.retry is not None and not isinstance(self.retry, RetryPolicy):
+            raise TypeError(
+                f"retry must be a RetryPolicy, got {self.retry!r}")
+
+    def with_retry(self, retry: Optional[RetryPolicy]) -> "Policy":
+        """The same [n, k] decision under a different relaunch schedule."""
+        return dataclasses.replace(self, retry=retry)
 
     # -- lossless re-expressions -------------------------------------------
     @property

@@ -42,13 +42,13 @@ import numpy as np
 from .batched import divisors
 from .distributions import (BiModal, Scaling, ServiceTime, ShiftedExp,
                             register_param_pytree)
-from .policy import Policy
+from .policy import Policy, RetryPolicy  # noqa: F401  (re-export)
 
 __all__ = [
-    "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
-    "MMPPArrivals", "Regime", "RegimeTrace", "Scenario", "arrival_gap",
-    "sample_regime_trace", "sample_task_matrix", "task_survival",
-    "validate_worker_speeds",
+    "ArrivalProcess", "FailureModel", "PoissonArrivals",
+    "DeterministicArrivals", "MMPPArrivals", "Regime", "RegimeTrace",
+    "RetryPolicy", "Scenario", "arrival_gap", "sample_regime_trace",
+    "sample_task_matrix", "task_survival", "validate_worker_speeds",
 ]
 
 
@@ -181,6 +181,91 @@ def validate_worker_speeds(speeds, n: int) -> Tuple[float, ...]:
 
 
 # --------------------------------------------------------------------------
+# Worker failure model (crash-restart fleet; shared by both backends)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Per-worker exponential crash-restart process.
+
+    Each worker alternates independent up intervals ~ Exp(mean ``mttf``)
+    and down intervals ~ Exp(mean ``mttr``), anchored at time 0 (every
+    worker starts up).  A crash KILLS the task in service — its partial
+    work is lost and the attempt fails — and the worker's FCFS queue is
+    paused until the recovery instant; relaunch is governed by the job's
+    ``RetryPolicy``.  The process is exogenous wall-clock machine
+    behavior, independent of the workload, which is what lets both
+    cluster backends consume ONE pre-sampled schedule (``schedule``) and
+    walk identical failure trajectories — the exact-parity substrate,
+    mirroring ``sample_task_matrix`` for service times.
+
+    ``max_events`` bounds the sampled schedule length per worker: beyond
+    the last sampled crash a worker never fails again.  Size it so
+    ``max_events * (mttf + mttr)`` comfortably exceeds the simulated
+    horizon (the default 64 covers ~64 MTTFs).
+
+    Frozen and hashable (static-arg friendly); also registered as a
+    param pytree so the compiled-surface cache can trace freshly
+    estimated ``mttf``/``mttr`` floats without recompiling.
+    """
+
+    mttf: float
+    mttr: float
+    max_events: int = 64
+
+    def __post_init__(self):
+        if self.mttf <= 0:
+            raise ValueError(f"mttf must be > 0, got {self.mttf}")
+        if self.mttr < 0:
+            raise ValueError(f"mttr must be >= 0, got {self.mttr}")
+        if int(self.max_events) < 1:
+            raise ValueError(
+                f"max_events must be >= 1, got {self.max_events}")
+
+    def schedule(self, key: jax.Array, n: int,
+                 max_events: Optional[int] = None):
+        """Sample (crash_times, recovery_times), each (n, max_events).
+
+        Rows are per-worker, columns ascending: worker w is UP on
+        [R[w, m-1], C[w, m]) and DOWN on [C[w, m], R[w, m]) (with
+        R[w, -1] = 0).  JAX-traceable; the batched engine calls it
+        inside the jitted sweep, the oracle materializes it with one
+        numpy conversion.  CRN discipline: one key draws the whole
+        fleet's schedule, so sweep lanes (k, load) share the identical
+        machine behavior and only the replication axis refreshes it.
+        """
+        m = self.max_events if max_events is None else int(max_events)
+        k_up, k_down = jax.random.split(key)
+        up = jax.random.exponential(k_up, (n, m)) * self.mttf
+        down = jax.random.exponential(k_down, (n, m)) * self.mttr
+        # C[., 0] = up_0; R = C + down; C[., m] = R[., m-1] + up_m
+        crash = jnp.cumsum(up + jnp.pad(down[:, :-1], ((0, 0), (1, 0))),
+                           axis=1)
+        recover = crash + down
+        return crash, recover
+
+
+# Pytree registration: mttf/mttr are traced leaves (the cache reuses one
+# executable across freshly estimated floats) but max_events is a SHAPE
+# parameter and must stay aux data — register_param_pytree would flatten
+# it into a tracer and break ``schedule``'s static shapes.
+def _failure_flatten(f: "FailureModel"):
+    return (f.mttf, f.mttr), f.max_events
+
+
+def _failure_unflatten(max_events, children):
+    obj = object.__new__(FailureModel)
+    object.__setattr__(obj, "mttf", children[0])
+    object.__setattr__(obj, "mttr", children[1])
+    object.__setattr__(obj, "max_events", max_events)
+    return obj
+
+
+jax.tree_util.register_pytree_node(FailureModel, _failure_flatten,
+                                   _failure_unflatten)
+
+
+# --------------------------------------------------------------------------
 # The shared task-time sampling substrate of both cluster backends
 # --------------------------------------------------------------------------
 
@@ -222,6 +307,9 @@ class Scenario:
     ``arrivals``       the arrival-process SHAPE for load-aware objectives
                        (Poisson / deterministic / MMPP bursts); its rate is
                        rescaled by the load sweep.  None means Poisson.
+    ``failures``       per-worker crash-restart behavior (``FailureModel``);
+                       None means a fault-free fleet (the historical
+                       engines' assumption, bit-stable).
     """
 
     dist: ServiceTime
@@ -232,6 +320,7 @@ class Scenario:
     candidate_ks: Optional[Tuple[int, ...]] = None
     worker_speeds: Optional[Tuple[float, ...]] = None
     arrivals: Optional[ArrivalProcess] = None
+    failures: Optional[FailureModel] = None
 
     def __post_init__(self):
         if int(self.n) < 1:
@@ -258,6 +347,10 @@ class Scenario:
                 not isinstance(self.arrivals, ArrivalProcess):
             raise TypeError(
                 f"arrivals must be an ArrivalProcess, got {self.arrivals!r}")
+        if self.failures is not None and \
+                not isinstance(self.failures, FailureModel):
+            raise TypeError(
+                f"failures must be a FailureModel, got {self.failures!r}")
 
     # -- delta, resolved once ----------------------------------------------
     @property

@@ -5,5 +5,5 @@ from .coded_step import (CodedStepConfig, CodedTrainer, make_coded_train_step,
 from .elastic import failure_adjusted_model, resize_plan  # noqa: F401
 from .straggler import (StragglerSim, best_fr_policy, fr_expected_completion,  # noqa: F401
                         plan_fr)
-from .telemetry import (ArrivalStats, InsufficientTelemetry,  # noqa: F401
-                        StraggleStats, Telemetry)
+from .telemetry import (ArrivalStats, FleetHealth,  # noqa: F401
+                        InsufficientTelemetry, StraggleStats, Telemetry)

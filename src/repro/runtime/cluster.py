@@ -36,7 +36,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.distributions import Scaling, ServiceTime
-from ..core.scenario import ArrivalProcess, Scenario, validate_worker_speeds
+from ..core.policy import RetryPolicy
+from ..core.scenario import (ArrivalProcess, FailureModel, Scenario,
+                             validate_worker_speeds)
 
 __all__ = [
     "ClusterConfig", "ClusterResult", "JobStats", "default_warmup",
@@ -64,6 +66,9 @@ class ClusterConfig:
     warmup: int = 0               # jobs excluded from latency quantiles
     arrivals: Optional[ArrivalProcess] = None   # None -> Poisson
     worker_speeds: Optional[Tuple[float, ...]] = None  # heterogeneous fleet
+    failures: Optional[FailureModel] = None     # None -> fault-free fleet
+    retry: Optional[RetryPolicy] = None         # None -> RetryPolicy() when
+    #                                             failures are modeled
 
     def __post_init__(self):
         if self.n_workers % self.k:
@@ -74,6 +79,12 @@ class ClusterConfig:
         if self.worker_speeds is not None:
             self.worker_speeds = validate_worker_speeds(self.worker_speeds,
                                                         self.n_workers)
+        if self.failures is not None and \
+                not isinstance(self.failures, FailureModel):
+            raise TypeError(
+                f"failures must be a FailureModel, got {self.failures!r}")
+        if self.retry is not None and not isinstance(self.retry, RetryPolicy):
+            raise TypeError(f"retry must be a RetryPolicy, got {self.retry!r}")
 
 
 @dataclasses.dataclass
@@ -89,31 +100,51 @@ class JobStats:
 
 @dataclasses.dataclass
 class ClusterResult:
-    latencies: np.ndarray         # per-job, in arrival order (ALL jobs)
+    latencies: np.ndarray         # per-job, in arrival order (ALL jobs);
+    #                               for a FAILED job this is its time to
+    #                               resolution (the give-up instant)
     utilization: float
     wasted_frac: float            # cancelled-work time / total busy time
-    throughput: float
+    throughput: float             # COMPLETED jobs per unit time
     warmup: int = 0               # first W jobs excluded from quantiles
+    job_failed: Optional[np.ndarray] = None  # per-job bool; None = fault-free
 
     @property
     def steady_latencies(self) -> np.ndarray:
         """Latencies with the warm-up transient discarded: the first
         ``warmup`` jobs see an emptier-than-steady-state system, so
-        including them biases quantiles (especially p99) optimistic."""
-        return self.latencies[self.warmup:]
+        including them biases quantiles (especially p99) optimistic.
+        Under a failure model, FAILED jobs are excluded too — their
+        "latency" is a give-up instant, not a completion time."""
+        lat = self.latencies[self.warmup:]
+        if self.job_failed is None:
+            return lat
+        return lat[~self.job_failed[self.warmup:]]
+
+    @property
+    def failure_rate(self) -> float:
+        """Post-warmup fraction of jobs that FAILED (fewer than k tasks
+        survived their retry budgets).  0.0 on a fault-free run."""
+        if self.job_failed is None:
+            return 0.0
+        f = self.job_failed[self.warmup:]
+        return float(f.mean()) if f.size else 0.0
 
     def summary(self) -> dict:
         lat = self.steady_latencies
         q = np.quantile
-        return dict(
-            mean=float(lat.mean()),
-            p50=float(q(lat, 0.50)),
-            p95=float(q(lat, 0.95)),
-            p99=float(q(lat, 0.99)),
+        out = dict(
+            mean=float(lat.mean()) if lat.size else float("inf"),
+            p50=float(q(lat, 0.50)) if lat.size else float("inf"),
+            p95=float(q(lat, 0.95)) if lat.size else float("inf"),
+            p99=float(q(lat, 0.99)) if lat.size else float("inf"),
             utilization=self.utilization,
             wasted_frac=self.wasted_frac,
             throughput=self.throughput,
         )
+        if self.job_failed is not None:
+            out["failure_rate"] = self.failure_rate
+        return out
 
 
 def _resolve_backend(backend: str):
@@ -149,7 +180,9 @@ def resolve_sweep_backend(backend: str):
 def simulate(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
              delta: Optional[float] = None, backend: str = "oracle",
              service_times: Optional[np.ndarray] = None,
-             arrival_times: Optional[np.ndarray] = None) -> ClusterResult:
+             arrival_times: Optional[np.ndarray] = None,
+             crash_times: Optional[np.ndarray] = None,
+             recovery_times: Optional[np.ndarray] = None) -> ClusterResult:
     """Run one (scenario, load, k) cell; returns latency/utilization stats.
 
     ``backend="oracle"`` (default, bit-stable with the historical
@@ -158,11 +191,17 @@ def simulate(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
     lane engine — same sample path for the same config, since both draw
     from ``core.scenario.sample_task_matrix`` under the same key.
     ``service_times`` (num_jobs, n) / ``arrival_times`` (num_jobs,)
-    override the sampling entirely (parity tests inject both).
+    override the sampling entirely (parity tests inject both), and
+    ``crash_times`` / ``recovery_times`` ((n, M) each) inject a
+    deterministic failure schedule the same way — the exact-parity path
+    for failure cells (``cfg.failures`` samples a stochastic schedule
+    instead).
     """
     return _resolve_backend(backend)(cfg, dist, scaling, delta=delta,
                                      service_times=service_times,
-                                     arrival_times=arrival_times)
+                                     arrival_times=arrival_times,
+                                     crash_times=crash_times,
+                                     recovery_times=recovery_times)
 
 
 def latency_vs_redundancy(dist: ServiceTime, scaling: Scaling, n: int,

@@ -51,11 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.distributions import Scaling
-from ..core.scenario import PoissonArrivals, Scenario
+from ..core.policy import RetryPolicy
+from ..core.scenario import FailureModel, PoissonArrivals, Scenario
 from .cluster import ClusterConfig, ClusterResult, default_warmup
+from .failures import effective_finish, job_resolution, resolve_retry
 
-__all__ = ["ClusterSweep", "simulate_one", "summarize_sweep", "sweep",
-           "sweep_compile_count", "validate_sweep_args"]
+__all__ = ["ClusterSweep", "resolve_failure_args", "simulate_one",
+           "summarize_sweep", "sweep", "sweep_compile_count",
+           "validate_sweep_args"]
 
 _SWEEP_TRACES = 0
 
@@ -116,15 +119,95 @@ def _scan_lane(A, S, k, cancel_overhead, preempt: bool):
     return lat, busy, wasted
 
 
+def _scan_lane_failures(A, S, k, cancel_overhead, preempt: bool, crash,
+                        recover, jitter_u, retry: RetryPolicy):
+    """The failure-mode lane: the same FCFS/any-k recurrence with task
+    times folded through the crash-restart schedule.
+
+    Per job, each task's natural finish becomes its ``effective_finish``
+    under the schedule — downtime-inflated service plus a bounded
+    relaunch pass (``max_attempts`` is static, so the retry loop is
+    unrolled into the scan step).  The job resolves at the k-th
+    surviving completion or, when more than n-k tasks exhaust their
+    retry budgets, FAILS at the (n-k+1)-th terminal loss
+    (``failures.job_resolution``).  Tasks that resolved (completed or
+    terminally failed) at or before D release their worker at their
+    release instant; tasks still in flight at D are cut exactly like
+    the fault-free engine's in-service remnants (preempt: D + overhead;
+    no preempt: they run out their FULL effective finish, retries
+    included — the oracle relaunches remnants to match, see DESIGN.md
+    §9).  Accounting is occupancy-based: a worker counts busy from
+    dispatch to release, downtime and backoff waits included.
+
+    Returns (latencies, success mask, busy, wasted).
+    """
+    n = S.shape[1]
+    crash = jnp.asarray(crash, S.dtype)
+    recover = jnp.asarray(recover, S.dtype)
+    have_jitter = jitter_u is not None
+
+    def step(carry, inp):
+        F, busy, wasted = carry
+        if have_jitter:
+            a, srow, urow = inp
+        else:
+            a, srow = inp
+            urow = None
+        start = jnp.maximum(a, F)
+        nat, ok, _ = effective_finish(jnp, start, srow, crash, recover,
+                                      retry, urow)
+        D, success = job_resolution(jnp, nat, ok, k, n)
+        natq = jnp.where(ok, nat, jnp.inf)
+        lt = natq < D
+        eq = natq == D
+        # success: first k survivors, ties at D by worker index (the
+        # fault-free rule); failure: every survivor that finished by D
+        take_eq = jnp.where(success, k - lt.sum(), eq.sum())
+        completed = lt | (eq & (jnp.cumsum(eq) * eq <= take_eq))
+        resolved_fail = (~ok) & (nat <= D)
+        engaged = (~completed) & (~resolved_fail) & (start < D)
+        occ = nat - start
+        if preempt:
+            cut = D - start + cancel_overhead
+            run = jnp.where(completed | resolved_fail, occ,
+                            jnp.where(engaged, cut, 0.0))
+            waste = jnp.where(resolved_fail, occ,
+                              jnp.where(engaged, cut, 0.0))
+            F_next = jnp.where(completed | resolved_fail, nat,
+                               jnp.where(engaged, D + cancel_overhead, F))
+        else:
+            started = completed | resolved_fail | engaged
+            run = jnp.where(started, occ, 0.0)
+            waste = jnp.where(resolved_fail | engaged, occ, 0.0)
+            F_next = jnp.where(started, nat, F)
+        return (F_next, busy + run.sum(), wasted + waste.sum()), \
+            (D - a, success)
+
+    zero = jnp.zeros((), S.dtype)
+    xs = (A, S, jitter_u) if have_jitter else (A, S)
+    (_, busy, wasted), (lat, okj) = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), xs)
+    return lat, okj, busy, wasted
+
+
 @functools.partial(jax.jit, static_argnames=("preempt",))
 def _one_kernel(A, S, k, cancel_overhead, preempt):
     return _scan_lane(A, S, k, cancel_overhead, preempt)
 
 
+@functools.partial(jax.jit, static_argnames=("preempt", "retry"))
+def _one_kernel_failures(A, S, k, cancel_overhead, crash, recover, jitter_u,
+                         preempt, retry):
+    return _scan_lane_failures(A, S, k, cancel_overhead, preempt, crash,
+                               recover, jitter_u, retry)
+
+
 def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
                  delta: Optional[float] = None,
                  service_times: Optional[np.ndarray] = None,
-                 arrival_times: Optional[np.ndarray] = None
+                 arrival_times: Optional[np.ndarray] = None,
+                 crash_times: Optional[np.ndarray] = None,
+                 recovery_times: Optional[np.ndarray] = None
                  ) -> ClusterResult:
     """One cell on the batched engine, sample-path-matched to the oracle.
 
@@ -132,23 +215,41 @@ def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
     substrate, same keys), so this is the same trajectory the
     discrete-event loop walks — the single-cell parity anchor.  ``k``
     and ``cancel_overhead`` are traced, so sweeping them reuses one
-    compiled kernel per (shape, preempt).
+    compiled kernel per (shape, preempt).  Failure cells (a
+    ``cfg.failures`` model, an injected ``crash_times``/
+    ``recovery_times`` schedule, or a killing ``cfg.retry`` timeout)
+    route through the failure lane and share the oracle's
+    ``_draw_failures`` substrate the same way.
     """
-    from .cluster_oracle import _draw_inputs
+    from .cluster_oracle import _draw_failures, _draw_inputs
     svc, arrivals = _draw_inputs(cfg, dist, scaling, delta,
                                  service_times, arrival_times)
-    lat, busy, wasted = _one_kernel(
-        jnp.asarray(arrivals, jnp.float32), jnp.asarray(svc, jnp.float32),
-        jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead), cfg.preempt)
+    fail = _draw_failures(cfg, crash_times, recovery_times)
+    if fail is None:
+        lat, busy, wasted = _one_kernel(
+            jnp.asarray(arrivals, jnp.float32), jnp.asarray(svc, jnp.float32),
+            jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead), cfg.preempt)
+        okj = None
+    else:
+        crash, recover, jitter_u, retry = fail
+        lat, okj, busy, wasted = _one_kernel_failures(
+            jnp.asarray(arrivals, jnp.float32), jnp.asarray(svc, jnp.float32),
+            jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead),
+            jnp.asarray(crash, jnp.float32), jnp.asarray(recover, jnp.float32),
+            None if jitter_u is None else jnp.asarray(jitter_u, jnp.float32),
+            cfg.preempt, retry)
+        okj = np.asarray(okj, dtype=bool)
     lat = np.asarray(lat, dtype=np.float64)
     busy = float(busy)
     horizon = float(np.max(arrivals + lat))
+    completions = lat.size if okj is None else int(okj.sum())
     return ClusterResult(
         latencies=lat,
         utilization=busy / (cfg.n_workers * horizon),
         wasted_frac=float(wasted) / max(busy, 1e-12),
-        throughput=lat.size / horizon,
+        throughput=completions / horizon,
         warmup=cfg.warmup,
+        job_failed=None if okj is None else ~okj,
     )
 
 
@@ -157,12 +258,22 @@ def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
 # --------------------------------------------------------------------------
 
 def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
-                ks, num_jobs, reps, preempt, arrivals, delta):
+                ks, num_jobs, reps, preempt, arrivals, delta,
+                failures=None, retry=None):
     """The (reps x loads x ks) lane grid, shared by the two jit wrappers:
     ``_sweep_kernel`` folds dist/arrival parameters as compile-time
     constants (one-off surfaces), while the compiled-surface cache
     (``runtime.surface_cache``) traces them so steady-state re-plans with
-    fresh fitted parameters reuse a warm executable."""
+    fresh fitted parameters reuse a warm executable.
+
+    With a ``failures`` model (and resolved ``retry`` policy) the lanes
+    run the failure recurrence: ONE crash-restart schedule per
+    replication (key disjoint from the service/arrival splits via
+    ``fold_in``, so fault-free draws are bit-stable), shared across the
+    k and load lanes — machines crash identically whatever policy serves
+    them, the CRN discipline that pairs the failure surface.  Returns an
+    extra (reps, L, K, num_jobs) success mask and per-lane horizon.
+    """
     global _SWEEP_TRACES
     _SWEEP_TRACES += 1  # trace-time side effect: counts compiles, not calls
     s_of_k = tuple(n // k for k in ks)
@@ -186,20 +297,48 @@ def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
         A_all = jax.vmap(
             lambda r: arrivals.times(k_arrv, num_jobs, r))(loads)
 
+        if retry is None:
+            def lane(A, S, k):
+                return _scan_lane(A, S, k, cancel_overhead, preempt)
+
+            over_k = jax.vmap(lane, in_axes=(None, 0, 0))
+            over_loads = jax.vmap(over_k, in_axes=(0, None, None))
+            lat, busy, wasted = over_loads(A_all, S_all, k_arr)
+            return lat, busy, wasted, A_all[:, -1]
+
+        # -- failures: one fleet schedule per rep, shared across lanes ----
+        if failures is None:                 # timeout-only retry policy
+            crash = jnp.zeros((n, 0), jnp.float32)
+            recover = crash
+        else:
+            crash, recover = failures.schedule(
+                jax.random.fold_in(rep_key, 7), n)
+            crash = jnp.asarray(crash, jnp.float32)
+            recover = jnp.asarray(recover, jnp.float32)
+        jitter_u = None
+        if retry.max_attempts > 1 and retry.jitter > 0:
+            jitter_u = jax.random.uniform(
+                jax.random.fold_in(rep_key, 8),
+                (num_jobs, n, retry.max_attempts - 1))
+
         def lane(A, S, k):
-            return _scan_lane(A, S, k, cancel_overhead, preempt)
+            return _scan_lane_failures(A, S, k, cancel_overhead, preempt,
+                                       crash, recover, jitter_u, retry)
 
         over_k = jax.vmap(lane, in_axes=(None, 0, 0))
         over_loads = jax.vmap(over_k, in_axes=(0, None, None))
-        lat, busy, wasted = over_loads(A_all, S_all, k_arr)
-        return lat, busy, wasted, A_all[:, -1]
+        lat, okj, busy, wasted = over_loads(A_all, S_all, k_arr)
+        # failure resolutions need not be monotone in j, so the horizon
+        # is the max resolution instant, not the last job's
+        horizon = (A_all[:, None, :] + lat).max(axis=-1)
+        return lat, busy, wasted, A_all[:, -1], okj, horizon
 
     return jax.vmap(one_rep)(jax.random.split(key, reps))
 
 
 _sweep_kernel = functools.partial(jax.jit, static_argnames=(
     "dist", "scaling", "n", "ks", "num_jobs", "reps", "preempt",
-    "arrivals", "delta"))(_sweep_core)
+    "arrivals", "delta", "failures", "retry"))(_sweep_core)
 
 
 @dataclasses.dataclass
@@ -222,14 +361,24 @@ class ClusterSweep:
     utilization: np.ndarray
     wasted_frac: np.ndarray
     throughput: np.ndarray
+    #: post-warmup fraction of FAILED jobs per cell; None on a fault-free
+    #: sweep (kept out of ``_METRICS`` so fault-free summaries are
+    #: unchanged; latency stats always pool COMPLETED jobs only)
+    failure_rate: Optional[np.ndarray] = None
 
     _METRICS = ("mean", "p50", "p95", "p99", "utilization", "wasted_frac",
                 "throughput")
 
     def metric(self, name: str) -> np.ndarray:
+        if name == "failure_rate":
+            if self.failure_rate is None:
+                raise ValueError(
+                    "failure_rate is only available on a sweep with a "
+                    "failure model (Scenario.failures)")
+            return self.failure_rate
         if name not in self._METRICS:
             raise ValueError(f"unknown metric {name!r} "
-                             f"(one of {self._METRICS})")
+                             f"(one of {self._METRICS + ('failure_rate',)})")
         return getattr(self, name)
 
     def summary(self, load_idx: int, k_idx: int) -> dict:
@@ -248,6 +397,21 @@ class ClusterSweep:
         vals = self.metric(metric)
         return {float(lam): int(self.ks[int(np.argmin(vals[i]))])
                 for i, lam in enumerate(self.loads)}
+
+
+def resolve_failure_args(scenario: Scenario,
+                         retry: Optional[RetryPolicy]
+                         ) -> Tuple[Optional[FailureModel],
+                                    Optional[RetryPolicy]]:
+    """Whether a sweep runs the failure lanes, and under what relaunch
+    schedule.  (None, None) means fault-free (the historical fast path);
+    otherwise the resolved ``retry`` is never None — a timeout-only
+    policy (``retry.kills_on_timeout`` without a ``FailureModel``)
+    activates the lanes with an empty crash schedule."""
+    if scenario.failures is None and (retry is None
+                                      or not retry.kills_on_timeout):
+        return None, None
+    return scenario.failures, resolve_retry(retry)
 
 
 def validate_sweep_args(scenario: Scenario, loads, ks, num_jobs, reps,
@@ -278,35 +442,66 @@ def validate_sweep_args(scenario: Scenario, loads, ks, num_jobs, reps,
 
 
 def summarize_sweep(lat, busy, wasted, a_last, loads, ks, warmup, reps,
-                    num_jobs, n) -> ClusterSweep:
+                    num_jobs, n, ok=None, horizon=None) -> ClusterSweep:
     """Kernel outputs -> ``ClusterSweep``; the single aggregation both the
     jit-per-scenario path and the compiled-surface cache run, so a cached
-    surface is post-processed identically to an uncached one."""
+    surface is post-processed identically to an uncached one.
+
+    ``ok`` ((reps, L, K, num_jobs) success mask) and ``horizon``
+    ((reps, L, K) max resolution instants) arrive from the failure
+    lanes: latency statistics then pool COMPLETED post-warmup jobs only
+    (a cell where every job failed reports inf), and ``failure_rate``
+    is the failed fraction per cell.
+    """
     lat = np.asarray(lat, np.float64)            # (reps, L, K, num_jobs)
     busy = np.asarray(busy, np.float64)          # (reps, L, K)
     wasted = np.asarray(wasted, np.float64)
     a_last = np.asarray(a_last, np.float64)      # (reps, L)
-    horizon = a_last[:, :, None] + lat[..., -1]  # D_last (monotone in j)
+    if horizon is None:
+        horizon = a_last[:, :, None] + lat[..., -1]  # D_last (monotone in j)
+    else:
+        horizon = np.asarray(horizon, np.float64)
     steady = lat[..., warmup:]
     L, K = len(loads), len(ks)
     pooled = np.moveaxis(steady, 0, -2).reshape(L, K, -1)
+    if ok is None:
+        mean = pooled.mean(axis=-1)
+        p50 = np.quantile(pooled, 0.50, axis=-1)
+        p95 = np.quantile(pooled, 0.95, axis=-1)
+        p99 = np.quantile(pooled, 0.99, axis=-1)
+        fail_rate = None
+        completions = float(num_jobs)
+    else:
+        ok = np.asarray(ok, bool)
+        ok_pooled = np.moveaxis(ok[..., warmup:], 0, -2).reshape(L, K, -1)
+        mean = np.full((L, K), np.inf)
+        p50, p95, p99 = (np.full((L, K), np.inf) for _ in range(3))
+        for i in range(L):
+            for j in range(K):
+                good = pooled[i, j][ok_pooled[i, j]]
+                if good.size:
+                    mean[i, j] = good.mean()
+                    p50[i, j] = np.quantile(good, 0.50)
+                    p95[i, j] = np.quantile(good, 0.95)
+                    p99[i, j] = np.quantile(good, 0.99)
+        fail_rate = 1.0 - ok_pooled.mean(axis=-1)
+        completions = np.asarray(ok, bool).sum(axis=-1)  # (reps, L, K)
     return ClusterSweep(
         loads=tuple(loads), ks=tuple(ks), warmup=int(warmup),
         reps=int(reps),
-        mean=pooled.mean(axis=-1),
-        p50=np.quantile(pooled, 0.50, axis=-1),
-        p95=np.quantile(pooled, 0.95, axis=-1),
-        p99=np.quantile(pooled, 0.99, axis=-1),
+        mean=mean, p50=p50, p95=p95, p99=p99,
         utilization=(busy / (n * horizon)).mean(axis=0),
         wasted_frac=(wasted / np.maximum(busy, 1e-12)).mean(axis=0),
-        throughput=(num_jobs / horizon).mean(axis=0),
+        throughput=(completions / horizon).mean(axis=0),
+        failure_rate=fail_rate,
     )
 
 
 def sweep(scenario: Scenario, loads: Sequence[float],
           ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
           reps: int = 1, preempt: bool = True, cancel_overhead: float = 0.0,
-          seed: int = 0, warmup: Optional[int] = None) -> ClusterSweep:
+          seed: int = 0, warmup: Optional[int] = None,
+          retry: Optional[RetryPolicy] = None) -> ClusterSweep:
     """Every (load, k) queueing cell of a scenario in one compiled call.
 
     ``loads`` are mean arrival rates; the scenario's ``arrivals`` process
@@ -316,16 +511,28 @@ def sweep(scenario: Scenario, loads: Sequence[float],
     multiply every lane's task times.  Additive scaling materializes a
     (num_jobs, n, s_max) CU table per replication — prefer moderate n
     there; server-/data-dependent scaling needs only (num_jobs, n).
+
+    ``scenario.failures`` switches every lane to the crash-restart
+    recurrence (relaunches under ``retry``, default ``RetryPolicy()``);
+    the resulting surface carries ``failure_rate`` and its latency stats
+    cover completed jobs only.
     """
     n = scenario.n
     ks, loads, warmup, arrivals, speeds = validate_sweep_args(
         scenario, loads, ks, num_jobs, reps, warmup)
+    failures, retry = resolve_failure_args(scenario, retry)
 
-    lat, busy, wasted, a_last = _sweep_kernel(
+    out = _sweep_kernel(
         jax.random.PRNGKey(seed), jnp.asarray(loads, jnp.float32), speeds,
         jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
         ks, int(num_jobs), int(reps), bool(preempt), arrivals,
-        None if scenario.delta is None else float(scenario.delta))
+        None if scenario.delta is None else float(scenario.delta),
+        failures, retry)
 
+    if retry is None:
+        lat, busy, wasted, a_last = out
+        ok = horizon = None
+    else:
+        lat, busy, wasted, a_last, ok, horizon = out
     return summarize_sweep(lat, busy, wasted, a_last, loads, ks, warmup,
-                           reps, num_jobs, n)
+                           reps, num_jobs, n, ok=ok, horizon=horizon)

@@ -34,8 +34,10 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.distributions import Scaling, ServiceTime
+from ..core.policy import RetryPolicy
 from ..core.scenario import Scenario, sample_task_matrix
 from .cluster import ClusterConfig, ClusterResult, JobStats, default_warmup
+from .failures import as_failure_arrays, resolve_retry
 
 __all__ = ["simulate_oracle", "sweep_oracle"]
 
@@ -104,15 +106,72 @@ def _draw_inputs(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
     return svc, arrivals
 
 
+def _draw_failures(cfg: ClusterConfig,
+                   crash_times: Optional[np.ndarray] = None,
+                   recovery_times: Optional[np.ndarray] = None):
+    """The failure-mode inputs both backends share, or None when the cell
+    is fault-free (no ``cfg.failures``, no injected schedule, no killing
+    timeout on ``cfg.retry``).
+
+    Returns (crash, recover, jitter_u, retry): the (n, M) schedule — an
+    injected deterministic one (the exact-parity path), a stochastic one
+    sampled from ``cfg.failures`` under PRNGKey(seed + 2), or an empty
+    (n, 0) one for a timeout-only policy — plus the backoff-jitter
+    uniforms under PRNGKey(seed + 3) (None when the policy is
+    deterministic) and the resolved ``RetryPolicy``.  Keys are disjoint
+    from the service (seed) and arrival (seed + 1) draws, so attaching a
+    failure model never perturbs the fault-free sample path.
+    """
+    injected = crash_times is not None or recovery_times is not None
+    if not injected and cfg.failures is None and (
+            cfg.retry is None or not cfg.retry.kills_on_timeout):
+        return None
+    n = cfg.n_workers
+    if injected:
+        if crash_times is None or recovery_times is None:
+            raise ValueError(
+                "crash_times and recovery_times must be injected together")
+        crash, recover = as_failure_arrays(crash_times, recovery_times, n)
+    elif cfg.failures is not None:
+        import jax
+        crash, recover = cfg.failures.schedule(
+            jax.random.PRNGKey(cfg.seed + 2), n)
+        crash = np.asarray(crash, dtype=np.float64)
+        recover = np.asarray(recover, dtype=np.float64)
+    else:                                   # timeout-only retry policy
+        crash = np.zeros((n, 0))
+        recover = np.zeros((n, 0))
+    retry = resolve_retry(cfg.retry)
+    jitter_u = None
+    if retry.max_attempts > 1 and retry.jitter > 0:
+        import jax
+        jitter_u = np.asarray(
+            jax.random.uniform(jax.random.PRNGKey(cfg.seed + 3),
+                               (cfg.num_jobs, n, retry.max_attempts - 1)),
+            dtype=np.float64)
+    return crash, recover, jitter_u, retry
+
+
 def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
                     delta: Optional[float] = None,
                     service_times: Optional[np.ndarray] = None,
-                    arrival_times: Optional[np.ndarray] = None
+                    arrival_times: Optional[np.ndarray] = None,
+                    crash_times: Optional[np.ndarray] = None,
+                    recovery_times: Optional[np.ndarray] = None
                     ) -> ClusterResult:
-    """Run the discrete-event simulation; returns latency/utilization stats."""
+    """Run the discrete-event simulation; returns latency/utilization stats.
+
+    A failure model (``cfg.failures``), an injected ``crash_times`` /
+    ``recovery_times`` schedule, or a killing ``cfg.retry`` timeout
+    routes to the crash-restart event loop; otherwise this is the
+    historical fault-free loop, bit-stable with the original simulator.
+    """
     n, k = cfg.n_workers, cfg.k
     svc, arrivals = _draw_inputs(cfg, dist, scaling, delta,
                                  service_times, arrival_times)
+    fail = _draw_failures(cfg, crash_times, recovery_times)
+    if fail is not None:
+        return _simulate_oracle_failures(cfg, svc, arrivals, *fail)
 
     workers = [_Worker() for _ in range(n)]
     jobs: Dict[int, JobStats] = {}
@@ -209,10 +268,307 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
     )
 
 
+class _FWorker:
+    """One exclusive server of the failure-mode loop.
+
+    ``queue`` holds first-attempt entries (job, service_time); retries
+    never re-enter the queue — a relaunching task keeps the worker
+    reserved through its ``current`` record.  ``current`` is a tagged
+    tuple with the occupancy start t0 = max(arrival, F) always at
+    index 2:
+
+        ("task",  job, t0, ta, st, a)      attempt a (1-based) running
+                                           since ta
+        ("wait",  job, t0, st, a, ready)   backing off after failed
+                                           attempt a; relaunch at ready
+        ("dying", job, t0, r)              final attempt crashed; the
+                                           loss registers at recovery r
+        ("purge", until)                   cancel-overhead window
+
+    ``F`` is the worker's LOGICAL free time — the batched recurrence's
+    carry: the release instant of the last task that engaged the worker
+    (purged tasks leave it untouched).  Accounting is occupancy-based
+    and applied as one lump at task resolution: busy += release - t0,
+    downtime and backoff waits included, exactly the batched engine's
+    ``occ`` classification.
+    """
+
+    __slots__ = ("queue", "current", "up", "F", "busy_time", "wasted_time")
+
+    def __init__(self):
+        self.queue: Deque[Tuple[int, float]] = collections.deque()
+        self.current: Optional[tuple] = None
+        self.up = True
+        self.F = 0.0
+        self.busy_time = 0.0
+        self.wasted_time = 0.0
+
+
+def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
+                              arrivals: np.ndarray, crash: np.ndarray,
+                              recover: np.ndarray,
+                              jitter_u: Optional[np.ndarray],
+                              retry: RetryPolicy) -> ClusterResult:
+    """The crash-restart discrete-event loop — the independent
+    implementation of ``runtime.failures``' closed-form semantics that
+    the failure parity cells validate.
+
+    Event vocabulary on top of the fault-free loop: per-worker "crash" /
+    "recover" instants (pushed up front, so at equal times the fleet
+    state changes before any dispatch decision), "abort" (timeout kill),
+    "redispatch" (backoff expiry), "taskfail" (a terminal crash loss
+    registers at the RECOVERY of its final attempt), and the existing
+    "arrive" / "finish" / "free".  Stale events are skipped by identity:
+    finish/abort carry their attempt's start instant, redispatch its
+    attempt count, taskfail its occupancy start — any of which a
+    cancellation or kill invalidates.
+
+    A job resolves at its k-th surviving task completion (success) or at
+    its (n-k+1)-th terminal task loss (failure); either way remnants are
+    cancelled exactly like the fault-free engine (queue purges free;
+    in-flight tasks — running, backing off, or dying — are cut at
+    D + cancel_overhead when ``preempt``, and otherwise run out their
+    full relaunch schedule as wasted work).
+    """
+    n, k = cfg.n_workers, cfg.k
+    kills = retry.kills_on_timeout
+    losses_to_fail = n - k + 1
+
+    workers = [_FWorker() for _ in range(n)]
+    jobs: Dict[int, JobStats] = {}
+    finished_tasks: Dict[int, int] = {}
+    lost_tasks: Dict[int, int] = {}
+    job_ok: Dict[int, bool] = {}
+    done_jobs: set = set()
+    resolved = 0
+
+    events: List[Tuple[float, int, str, tuple]] = []
+    seq = 0
+
+    def push(t: float, kind: str, payload: tuple):
+        nonlocal seq
+        heapq.heappush(events, (float(t), seq, kind, payload))
+        seq += 1
+
+    # fleet schedule first: at equal instants a crash/recovery reorders
+    # the fleet BEFORE any same-time dispatch or loss event sees it
+    for widx in range(n):
+        for m in range(crash.shape[1]):
+            push(crash[widx, m], "crash", (widx, float(recover[widx, m])))
+            push(recover[widx, m], "recover", (widx,))
+    for j, t in enumerate(arrivals):
+        push(t, "arrive", (j,))
+
+    def dispatch(w: _FWorker, widx: int, job: int, t0: float, st: float,
+                 a: int, now: float):
+        """Start attempt ``a`` (1-based) of a task at ``now``."""
+        w.current = ("task", job, t0, now, st, a)
+        if kills and st > retry.timeout:
+            push(now + retry.timeout, "abort", (widx, job, now))
+        else:
+            push(now + st, "finish", (widx, job, now))
+
+    def start_next(w: _FWorker, widx: int, now: float):
+        if not w.up or w.current is not None:
+            return
+        while w.queue:
+            job, st = w.queue.popleft()
+            if job in done_jobs:
+                continue                  # purged from queue (free)
+            dispatch(w, widx, job, max(jobs[job].arrival, w.F), st, 1, now)
+            return
+
+    def resolve_task_loss(w: _FWorker, widx: int, job: int, t0: float,
+                          release: float):
+        """A task exhausted its attempts: occupancy is wasted, the
+        worker's logical free time is the release instant, and (for a
+        live job) the loss counts toward job failure."""
+        w.busy_time += release - t0
+        w.wasted_time += release - t0
+        w.F = release
+        w.current = None
+        if job not in done_jobs:
+            lost_tasks[job] += 1
+            if lost_tasks[job] == losses_to_fail:
+                resolve_job(job, release, success=False)
+        start_next(w, widx, release)
+
+    def fail_attempt(w: _FWorker, widx: int, job: int, t0: float, st: float,
+                     a: int, fail_at: float, resume: float, crashed: bool):
+        """Attempt ``a`` died at ``fail_at``; the worker frees (crash:
+        recovers) at ``resume``.  Back off and relaunch, or give up."""
+        if a < retry.max_attempts:
+            u = 0.5 if jitter_u is None else jitter_u[job, widx, a - 1]
+            ready = max(resume, fail_at + retry.delay(a - 1, u))
+            w.current = ("wait", job, t0, st, a, ready)
+            push(ready, "redispatch", (widx, job, a))
+        elif crashed:
+            # the loss is only final once the worker is back: defer it
+            w.current = ("dying", job, t0, resume)
+            push(resume, "taskfail", (widx, job, t0))
+        else:                             # timeout exhaust: final here
+            resolve_task_loss(w, widx, job, t0, resume)
+
+    def resolve_job(job: int, now: float, success: bool):
+        nonlocal resolved
+        done_jobs.add(job)
+        jobs[job].done = now
+        job_ok[job] = success
+        resolved += 1
+        oh = cfg.cancel_overhead
+
+        def cut(w2: _FWorker, widx2: int, t0: float):
+            """Engaged remnant under preempt: cut at D + overhead."""
+            w2.busy_time += (now - t0) + oh
+            w2.wasted_time += (now - t0) + oh
+            w2.F = now + oh
+            if oh > 0.0:
+                w2.current = ("purge", now + oh)
+                push(now + oh, "free", (widx2, now + oh))
+            else:
+                w2.current = None
+                start_next(w2, widx2, now)
+
+        for widx2, w2 in enumerate(workers):
+            cur = w2.current
+            if cur is not None and cur[0] != "purge" and cur[1] == job:
+                # in flight — running, backing off, or dying.  Preempt:
+                # cut, invalidating its pending finish/abort/redispatch/
+                # taskfail by identity.  No preempt: it relaunches and
+                # runs out as wasted work.
+                if cfg.preempt:
+                    cut(w2, widx2, cur[2])
+                continue
+            if cur is not None and cur[0] != "purge":
+                continue                  # busy with another job's task
+            # the task may still be QUEUED solely because the worker is
+            # down (or stuck in a purge window that downtime outlived).
+            # Its LOGICAL start max(arrival, F) is what the batched
+            # recurrence classifies on: engaged if that precedes D, even
+            # though no attempt ever ran — so cut it (or, without
+            # preempt, launch it as a remnant at recovery).
+            while w2.queue and w2.queue[0][0] in done_jobs \
+                    and w2.queue[0][0] != job:
+                w2.queue.popleft()        # earlier resolved jobs: free
+            if not w2.queue or w2.queue[0][0] != job:
+                continue
+            t0 = max(jobs[job].arrival, w2.F)
+            if t0 >= now:
+                continue                  # purged: start >= D, stays free
+            _, st = w2.queue.popleft()
+            if cfg.preempt:
+                cut(w2, widx2, t0)
+            else:
+                w2.current = ("wait", job, t0, st, 0, t0)
+                push(now, "redispatch", (widx2, job, 0))
+
+    while events and resolved < cfg.num_jobs:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "arrive":
+            (j,) = payload
+            jobs[j] = JobStats(arrival=now)
+            finished_tasks[j] = 0
+            lost_tasks[j] = 0
+            for widx, w in enumerate(workers):
+                w.queue.append((j, svc[j, widx]))
+                start_next(w, widx, now)
+        elif kind == "crash":
+            widx, r = payload
+            w = workers[widx]
+            w.up = False
+            cur = w.current
+            if cur is not None and cur[0] == "task":
+                _, job, t0, ta, st, a = cur
+                if ta + st <= now:
+                    pass    # finished exactly at the crash: the pending
+                    #         finish event (same instant) completes it
+                else:
+                    fail_attempt(w, widx, job, t0, st, a,
+                                 fail_at=now, resume=r, crashed=True)
+        elif kind == "recover":
+            (widx,) = payload
+            w = workers[widx]
+            w.up = True
+            cur = w.current
+            if cur is None:
+                start_next(w, widx, now)
+            elif cur[0] == "wait" and cur[5] <= now:
+                _, job, t0, st, a, _ready = cur
+                dispatch(w, widx, job, t0, st, a + 1, now)
+            elif cur[0] == "purge" and cur[1] <= now:
+                w.current = None
+                start_next(w, widx, now)
+        elif kind == "redispatch":
+            widx, job, a = payload
+            w = workers[widx]
+            cur = w.current
+            if (w.up and cur is not None and cur[0] == "wait"
+                    and cur[1] == job and cur[4] == a and cur[5] <= now):
+                _, _, t0, st, _, _ = cur
+                dispatch(w, widx, job, t0, st, a + 1, now)
+            # worker down: the recovery event relaunches instead
+        elif kind == "free":
+            widx, until = payload
+            w = workers[widx]
+            if w.up and w.current == ("purge", until):
+                w.current = None
+                start_next(w, widx, now)
+        elif kind == "taskfail":
+            widx, job, t0m = payload
+            w = workers[widx]
+            cur = w.current
+            if cur is not None and cur[0] == "dying" and cur[1] == job \
+                    and cur[2] == t0m:
+                resolve_task_loss(w, widx, job, t0m, cur[3])
+        elif kind == "abort":
+            widx, job, ta = payload
+            w = workers[widx]
+            cur = w.current
+            if cur is not None and cur[0] == "task" and cur[1] == job \
+                    and cur[3] == ta:
+                _, _, t0, _, st, a = cur
+                fail_attempt(w, widx, job, t0, st, a,
+                             fail_at=now, resume=now, crashed=False)
+        else:  # finish
+            widx, job, ta = payload
+            w = workers[widx]
+            cur = w.current
+            if cur is None or cur[0] != "task" or cur[1] != job \
+                    or cur[3] != ta:
+                continue                  # stale (killed or cancelled)
+            _, _, t0, _, st, a = cur
+            w.busy_time += now - t0
+            w.F = now
+            w.current = None
+            if job in done_jobs:
+                w.wasted_time += now - t0   # remnant ran out (no preempt)
+            else:
+                finished_tasks[job] += 1
+                if finished_tasks[job] == k:
+                    resolve_job(job, now, success=True)
+            start_next(w, widx, now)
+
+    order = sorted(jobs)
+    lat = np.array([jobs[j].latency for j in order])
+    failed = np.array([not job_ok.get(j, False) for j in order])
+    horizon = max((jobs[j].done for j in order), default=1.0)
+    busy = sum(w.busy_time for w in workers)
+    waste = sum(w.wasted_time for w in workers)
+    completions = int((~failed).sum())
+    return ClusterResult(
+        latencies=lat,
+        utilization=busy / (n * horizon),
+        wasted_frac=waste / max(busy, 1e-12),
+        throughput=completions / horizon,
+        warmup=cfg.warmup,
+        job_failed=failed,
+    )
+
+
 def sweep_oracle(scenario: Scenario, loads, ks=None, num_jobs: int = 1000,
                  reps: int = 1, preempt: bool = True,
                  cancel_overhead: float = 0.0, seed: int = 0,
-                 warmup=None):
+                 warmup=None, retry: Optional[RetryPolicy] = None):
     """The (loads x ks) surface on the oracle, cell by cell — the slow
     validation twin of ``cluster_batched.sweep`` with the same
     ``ClusterSweep`` result type and defaults (``warmup=None`` resolves
@@ -221,8 +577,16 @@ def sweep_oracle(scenario: Scenario, loads, ks=None, num_jobs: int = 1000,
     times on shifted seeds; latency stats pool replications and
     post-warmup jobs, per-lane rates average over replications — the
     same aggregation as the batched engine.
+
+    A ``scenario.failures`` model (or a killing ``retry`` timeout) runs
+    every cell through the crash-restart loop; the surface then carries
+    ``failure_rate``.  Schedules are drawn per (cell, rep) seed — a
+    DIFFERENT sampling layout from the batched engine's one-schedule-
+    per-rep CRN discipline, so cross-backend failure comparisons are
+    distributional, not samplewise (the exact-parity path is an
+    injected schedule through ``simulate``).
     """
-    from .cluster_batched import ClusterSweep
+    from .cluster_batched import ClusterSweep, resolve_failure_args
     n = scenario.n
     ks = tuple(scenario.legal_ks()) if ks is None \
         else tuple(int(k) for k in ks)
@@ -233,37 +597,46 @@ def sweep_oracle(scenario: Scenario, loads, ks=None, num_jobs: int = 1000,
         raise ValueError(f"reps must be >= 1, got {reps}")
     if warmup is None:
         warmup = default_warmup(num_jobs)
+    failures, retry = resolve_failure_args(scenario, retry)
+    faulty = retry is not None
     L, K = len(loads), len(ks)
     shape = (L, K)
     mean = np.zeros(shape)
     p50, p95, p99 = np.zeros(shape), np.zeros(shape), np.zeros(shape)
     util, waste, thru = np.zeros(shape), np.zeros(shape), np.zeros(shape)
+    fail = np.zeros(shape) if faulty else None
     for i, lam in enumerate(loads):
         for j, k in enumerate(ks):
-            lats, us, ws, ts = [], [], [], []
+            lats, us, ws, ts, fs = [], [], [], [], []
             for r in range(reps):
                 cfg = ClusterConfig(
                     n_workers=n, k=k, arrival_rate=lam, num_jobs=num_jobs,
                     preempt=preempt, cancel_overhead=cancel_overhead,
                     seed=seed + 7919 * r, warmup=warmup,
                     arrivals=scenario.arrivals,
-                    worker_speeds=scenario.worker_speeds)
+                    worker_speeds=scenario.worker_speeds,
+                    failures=failures,
+                    retry=retry if faulty else None)
                 res = simulate_oracle(cfg, scenario.dist, scenario.scaling,
                                       delta=scenario.delta)
                 lats.append(res.steady_latencies)
                 us.append(res.utilization)
                 ws.append(res.wasted_frac)
                 ts.append(res.throughput)
+                fs.append(res.failure_rate)
             pooled = np.concatenate(lats)
-            mean[i, j] = pooled.mean()
-            p50[i, j] = np.quantile(pooled, 0.50)
-            p95[i, j] = np.quantile(pooled, 0.95)
-            p99[i, j] = np.quantile(pooled, 0.99)
+            empty = pooled.size == 0          # every post-warmup job failed
+            mean[i, j] = pooled.mean() if not empty else np.inf
+            p50[i, j] = np.quantile(pooled, 0.50) if not empty else np.inf
+            p95[i, j] = np.quantile(pooled, 0.95) if not empty else np.inf
+            p99[i, j] = np.quantile(pooled, 0.99) if not empty else np.inf
             util[i, j] = np.mean(us)
             waste[i, j] = np.mean(ws)
             thru[i, j] = np.mean(ts)
+            if faulty:
+                fail[i, j] = np.mean(fs)
     return ClusterSweep(
         loads=tuple(loads), ks=ks, warmup=int(warmup), reps=int(reps),
         mean=mean, p50=p50, p95=p95, p99=p99, utilization=util,
-        wasted_frac=waste, throughput=thru,
+        wasted_frac=waste, throughput=thru, failure_rate=fail,
     )

@@ -27,7 +27,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.coding import FractionalRepetitionCode, gc_decode_weights
-from ..core.policy import Policy
+from ..core.policy import Policy, RetryPolicy
 from ..data.pipeline import (DataConfig, coded_batch, decode_example_weights,
                              expand_worker_weights)
 from ..models import api
@@ -143,15 +143,22 @@ class CodedTrainer:
 
     ``alive_fn(step) -> bool (n,)`` supplies the straggler mask (simulated
     here; gather timeouts in production).  If a part group loses all its
-    workers, decode is impossible: the step falls back to WAITING for the
-    full barrier (all-ones weights on the unique rows) -- the fault-
-    tolerance path -- and the event is counted.
+    workers, decode is impossible.  With a ``retry`` policy the step first
+    RE-POLLS the gather once after the policy's first backoff delay
+    (workers that already arrived stay arrived — a straggler often only
+    needs the grace period); only if decode is still impossible does it
+    fall back to WAITING for the full barrier (all-ones weights on the
+    unique rows) — and both the retry and the fallback are counted.  A
+    ``telemetry`` sink receives the per-step retry count
+    (``FleetHealth.retries_per_task``).
     """
 
     def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
                  step_cfg: CodedStepConfig, opt_cfg: adamw.AdamWConfig,
                  alive_fn: Optional[Callable[[int], np.ndarray]] = None,
-                 jit: bool = True, donate: bool = True):
+                 jit: bool = True, donate: bool = True,
+                 retry: Optional[RetryPolicy] = None,
+                 telemetry=None):
         self.model_cfg = model_cfg
         self.data_cfg = data_cfg
         self.opt_cfg = opt_cfg
@@ -159,8 +166,13 @@ class CodedTrainer:
         self._jit = jit
         self._donate = donate
         self.step_cfg = step_cfg          # property: builds the jitted step
+        self.retry = retry
+        self.telemetry = telemetry
         self.decode_failures = 0
         self.stragglers_dropped = 0
+        self.decode_retries = 0           # re-polls that rescued (or tried
+                                          # to rescue) an undecodable mask
+        self.retry_wait = 0.0             # total backoff grace charged
 
     @property
     def step_cfg(self) -> CodedStepConfig:
@@ -203,10 +215,44 @@ class CodedTrainer:
             self.step_cfg.code, self.decode_coefficients(alive),
             self.step_cfg.per_worker_rows, self.step_cfg.unique_batch)
 
+    def _decodable(self, alive: np.ndarray) -> bool:
+        try:
+            gc_decode_weights(self.step_cfg.code, alive)
+            return True
+        except RuntimeError:
+            return False
+
+    def gather_alive(self, step: int) -> np.ndarray:
+        """This step's straggler mask, with the one-shot backoff re-poll.
+
+        When the first gather leaves a part group with no finisher
+        (decode impossible) and a ``retry`` policy is attached, the
+        gather is polled once more after the policy's first backoff
+        delay — the simulated harness charges the delay to
+        ``retry_wait`` instead of sleeping — and the masks are OR-ed
+        (an arrival is never un-arrived).  The retry count (0 or 1)
+        feeds ``telemetry`` either way, so ``FleetHealth``'s
+        ``retries_per_task`` reflects how often the grace period is
+        earning its latency.
+        """
+        alive = (np.asarray(self.alive_fn(step), bool)
+                 if self.alive_fn is not None
+                 else np.ones(self.step_cfg.n_workers, bool))
+        retries = 0
+        if self.retry is not None and self.alive_fn is not None \
+                and self.retry.max_attempts > 1 \
+                and not self._decodable(alive):
+            self.retry_wait += float(self.retry.delay(0))
+            alive = alive | np.asarray(self.alive_fn(step), bool)
+            retries = 1
+            self.decode_retries += 1
+        if self.telemetry is not None:
+            self.telemetry.record_retries(retries)
+        return alive
+
     def run_step(self, params, opt_state, step: int):
         toks, labs = coded_batch(self.data_cfg, step, self.step_cfg.code)
-        alive = (self.alive_fn(step) if self.alive_fn is not None
-                 else np.ones(self.step_cfg.n_workers, bool))
+        alive = self.gather_alive(step)
         a = self.decode_coefficients(alive)
         return self.step_fn(params, opt_state, jnp.asarray(toks),
                             jnp.asarray(labs), jnp.asarray(a))

@@ -1,0 +1,168 @@
+"""Shared failure dynamics: one crash-restart/relaunch rule, three users.
+
+``core.scenario.FailureModel`` samples an exogenous per-worker schedule
+of (crash, recovery) instants; this module defines what that schedule
+DOES to a dispatched task.  ``effective_finish`` maps a task's dispatch
+instant and nominal service time through the schedule and the
+``RetryPolicy`` — advance past downtime, attempt, die on crash or
+timeout, back off, relaunch, give up after ``max_attempts`` — returning
+the instant the worker is released, whether the task completed, and how
+many attempts were spent.
+
+It is written once over an array-namespace parameter ``xp`` and consumed
+three ways with the SAME arithmetic:
+
+  * ``runtime.cluster_batched`` calls it with ``jax.numpy`` inside the
+    jitted lane scan (the "downtime-inflated effective service time plus
+    a bounded relaunch pass": ``max_attempts`` is static, so the retry
+    loop unrolls);
+  * ``control.replay`` / ``benchmarks.fault_injection`` call it with
+    ``numpy`` in float64 (the clairvoyant-oracle twin);
+  * ``runtime.cluster_oracle`` plays the same schedule event by event —
+    an INDEPENDENT implementation whose agreement with this closed form
+    is what the failure parity cells in ``tests/test_conformance.py``
+    actually validate.
+
+``job_resolution`` is the any-k completion rule under task loss: a job
+completes at the k-th surviving finish, or FAILS at the (n-k+1)-th
+terminal task loss — whichever bound becomes reachable first (exactly
+one of the two instants is finite).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.policy import RetryPolicy
+
+__all__ = ["as_failure_arrays", "effective_finish", "job_resolution",
+           "resolve_retry"]
+
+
+def resolve_retry(retry: Optional[RetryPolicy]) -> RetryPolicy:
+    """The relaunch schedule in effect: an explicit policy, or the
+    default ``RetryPolicy()`` when failures are modeled but no policy was
+    attached (a fleet that crashes but never retries must be asked for —
+    ``RetryPolicy(max_attempts=1)`` — not stumbled into)."""
+    return RetryPolicy() if retry is None else retry
+
+
+def _first_after(xp, crash, t):
+    """Per-row index of the first crash instant strictly after ``t``.
+
+    ``crash`` is (n, M) ascending per row, ``t`` is (n,).  Equivalent to
+    a per-row ``searchsorted(side="right")`` but written as a masked sum
+    so it is identical (and cheap, M is small) under numpy and jax.
+    """
+    return (crash <= t[:, None]).sum(axis=1)
+
+
+def _advance_up(xp, t, crash, recover):
+    """``t`` pushed out of any down interval [crash_m, recover_m) it
+    falls in — the "queue pauses until recovery" rule at dispatch."""
+    if crash.shape[1] == 0:
+        return t
+    m = _first_after(xp, crash, t) - 1          # last crash <= t
+    mc = xp.clip(m, 0, crash.shape[1] - 1)
+    r_m = xp.take_along_axis(recover, mc[:, None], axis=1)[:, 0]
+    down = (m >= 0) & (t < r_m)
+    return xp.where(down, r_m, t)
+
+
+def effective_finish(xp, start, svc, crash, recover, retry: RetryPolicy,
+                     jitter_u=None):
+    """(release, ok, attempts) of one task row under the failure schedule.
+
+    ``start`` (n,) is the dispatch instant (``max(arrival, F_w)`` — may
+    fall inside downtime), ``svc`` (n,) the nominal service times,
+    ``crash``/``recover`` (n, M) the per-worker schedule (M may be 0:
+    no crashes, e.g. a timeout-only policy).  ``jitter_u`` is the
+    (n, max_attempts-1) table of uniform backoff-jitter draws (None →
+    the deterministic midpoint schedule).
+
+    Returns the worker-release instant ``release`` (the completion
+    instant when ``ok``, else the recovery/timeout instant of the final
+    failed attempt), the completion mask ``ok``, and the number of
+    attempts spent.  The attempt loop is unrolled ``max_attempts`` times
+    (static), which is what makes this traceable inside the batched
+    lane scan.
+    """
+    n, m_events = crash.shape
+    inf = xp.asarray(xp.inf, svc.dtype)
+    pad = xp.full((n, 1), xp.inf, crash.dtype)
+    cpad = xp.concatenate([crash, pad], axis=1)
+    rpad = xp.concatenate([recover, pad], axis=1)
+    timeout = retry.timeout if retry.kills_on_timeout else None
+
+    t = _advance_up(xp, start, crash, recover)
+    finish = xp.full(t.shape, xp.inf, svc.dtype)
+    ok = xp.zeros(t.shape, bool)
+    release = t
+    attempts = xp.zeros(t.shape, xp.int32)
+    for a in range(retry.max_attempts):
+        idx = _first_after(xp, crash, t)[:, None]
+        c = xp.take_along_axis(cpad, idx, axis=1)[:, 0]
+        done = t + svc <= (c if timeout is None else
+                           xp.minimum(c, t + timeout))
+        live = ~ok
+        attempts = attempts + live.astype(xp.int32)
+        finish = xp.where(live & done, t + svc, finish)
+        ok = ok | done
+        # the failed attempt dies at min(crash, timeout); after a crash
+        # the worker is unavailable until recovery, after a timeout kill
+        # it stays up
+        r = xp.take_along_axis(rpad, idx, axis=1)[:, 0]
+        if timeout is None:
+            fail_at, resume = c, r
+        else:
+            to = t + timeout
+            fail_at = xp.minimum(c, to)
+            resume = xp.where(c <= to, r, to)
+        release = xp.where(ok, release, resume)
+        if a < retry.max_attempts - 1:
+            u = 0.5 if jitter_u is None else jitter_u[:, a]
+            relaunch = xp.maximum(resume, fail_at + retry.delay(a, u))
+            t = xp.where(ok, t, _advance_up(xp, relaunch, crash, recover))
+    release = xp.where(ok, finish, release)
+    # a fully idle schedule cell (M == 0, no timeout) can never fail:
+    # release is then finite by construction; keep inf out of the carry
+    return xp.where(xp.isfinite(release), release, inf), ok, attempts
+
+
+def job_resolution(xp, nat, ok, k, n):
+    """(D, success): when and how a job resolves under task loss.
+
+    ``nat`` (n,) are the per-task release instants, ``ok`` their
+    completion masks.  The job completes at the k-th smallest completed
+    release, or fails at the (n-k+1)-th smallest terminal-loss release —
+    at most one of the two order statistics exists (>=k completions
+    leave <=n-k losses and vice versa), so the finite one is the
+    resolution instant.
+    """
+    natq = xp.where(ok, nat, xp.inf)
+    failq = xp.where(ok, xp.inf, nat)
+    d_ok = xp.sort(natq)[k - 1]
+    d_fail = xp.sort(failq)[n - k]
+    success = d_ok <= d_fail
+    return xp.where(success, d_ok, d_fail), success
+
+
+def as_failure_arrays(crash_times: np.ndarray, recovery_times: np.ndarray,
+                      n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Validate an injected deterministic schedule: (n, M) each, rows
+    ascending, recovery no earlier than its crash, consecutive up
+    intervals non-overlapping.  The exact-parity conformance cells
+    inject these directly instead of sampling a ``FailureModel``."""
+    c = np.asarray(crash_times, dtype=np.float64)
+    r = np.asarray(recovery_times, dtype=np.float64)
+    if c.ndim != 2 or c.shape[0] != n or r.shape != c.shape:
+        raise ValueError(
+            f"crash/recovery schedules must both be (n={n}, M), got "
+            f"{c.shape} and {r.shape}")
+    if np.any(r < c):
+        raise ValueError("each recovery must be >= its crash instant")
+    if c.shape[1] > 1 and np.any(c[:, 1:] < r[:, :-1]):
+        raise ValueError(
+            "crash intervals must be disjoint and ascending per worker")
+    return c, r

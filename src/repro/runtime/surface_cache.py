@@ -41,8 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.policy import RetryPolicy
 from ..core.scenario import Scenario
-from .cluster_batched import (ClusterSweep, _sweep_core, summarize_sweep,
+from .cluster_batched import (ClusterSweep, _sweep_core,
+                              resolve_failure_args, summarize_sweep,
                               validate_sweep_args)
 
 __all__ = ["cached_sweep", "load_bucket", "reset_surface_cache_stats",
@@ -87,33 +89,42 @@ def reset_surface_cache_stats() -> None:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "scaling", "n", "ks", "num_jobs", "reps", "preempt"))
+    "scaling", "n", "ks", "num_jobs", "reps", "preempt", "retry"))
 def _cached_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
-                   ks, num_jobs, reps, preempt, arrivals, delta):
-    # dist / arrivals / delta arrive as traced pytrees: jax's jit cache
-    # keys on their STRUCTURE (the family), so new fitted floats reuse
-    # the executable.  The body is cluster_batched._sweep_core — the
-    # identical lane grid the uncached path compiles.
+                   ks, num_jobs, reps, preempt, arrivals, delta, failures,
+                   retry):
+    # dist / arrivals / delta / failures arrive as traced pytrees: jax's
+    # jit cache keys on their STRUCTURE (the family; for failures the
+    # static max_events aux), so new fitted floats reuse the executable.
+    # retry is static — it shapes the unrolled relaunch pass.  The body
+    # is cluster_batched._sweep_core — the identical lane grid the
+    # uncached path compiles.
     return _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling,
-                       n, ks, num_jobs, reps, preempt, arrivals, delta)
+                       n, ks, num_jobs, reps, preempt, arrivals, delta,
+                       failures, retry)
 
 
 def cached_sweep(scenario: Scenario, loads: Sequence[float],
                  ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
                  reps: int = 1, preempt: bool = True,
                  cancel_overhead: float = 0.0, seed: int = 0,
-                 warmup: Optional[int] = None) -> ClusterSweep:
+                 warmup: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None) -> ClusterSweep:
     """``cluster_batched.sweep`` through the compiled-surface cache.
 
     Same semantics and CRN discipline; parameters are traced and the
     load axis is bucket-padded, so repeated calls that differ only in
     fitted parameter values (or in the precise rates on the same-size
     grid) reuse one warm executable.  The returned surface is trimmed
-    back to the requested loads.
+    back to the requested loads.  A ``scenario.failures`` model rides
+    the same cache: its MTTF/MTTR are traced parameters (re-estimated
+    failure rates re-plan warm), while ``max_events`` and the ``retry``
+    policy shape the executable and so key it.
     """
     n = scenario.n
     ks, loads, warmup, arrivals, speeds = validate_sweep_args(
         scenario, loads, ks, num_jobs, reps, warmup)
+    failures, retry = resolve_failure_args(scenario, retry)
     L = len(loads)
     bucket = load_bucket(L)
     padded = tuple(loads) + (loads[-1],) * (bucket - L)
@@ -121,7 +132,9 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
     global _HITS, _MISSES
     cache_key = (type(scenario.dist).__name__, scenario.scaling.value, n,
                  ks, bucket, int(num_jobs), int(reps), bool(preempt),
-                 type(arrivals).__name__, scenario.delta is None)
+                 type(arrivals).__name__, scenario.delta is None,
+                 None if failures is None else int(failures.max_events),
+                 retry)
     if cache_key in _KEYS:
         _HITS += 1
         _KEYS[cache_key] += 1
@@ -129,15 +142,24 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
         _MISSES += 1
         _KEYS[cache_key] = 1
 
-    lat, busy, wasted, a_last = _cached_kernel(
+    out = _cached_kernel(
         jax.random.PRNGKey(seed), jnp.asarray(padded, jnp.float32), speeds,
         jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
         ks, int(num_jobs), int(reps), bool(preempt), arrivals,
-        None if scenario.delta is None else jnp.float32(scenario.delta))
+        None if scenario.delta is None else jnp.float32(scenario.delta),
+        failures, retry)
 
     # trim the padded lanes before aggregation: the surviving cells are
     # lane-independent under vmap, so they match the unpadded kernel
+    if retry is None:
+        lat, busy, wasted, a_last = out
+        ok = horizon = None
+    else:
+        lat, busy, wasted, a_last, ok, horizon = out
+        ok = np.asarray(ok)[:, :L]
+        horizon = np.asarray(horizon)[:, :L]
     return summarize_sweep(np.asarray(lat)[:, :L], np.asarray(busy)[:, :L],
                            np.asarray(wasted)[:, :L],
                            np.asarray(a_last)[:, :L],
-                           loads, ks, warmup, reps, num_jobs, n)
+                           loads, ks, warmup, reps, num_jobs, n,
+                           ok=ok, horizon=horizon)

@@ -37,6 +37,30 @@ class StraggleStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetHealth:
+    """Typed liveness/loss summary of one telemetry window of task
+    OUTCOMES (completed vs terminally lost, per worker).
+
+    Mirrors the ``StraggleStats`` / ``InsufficientTelemetry`` contract:
+    too few recorded outcomes returns the typed insufficiency result.
+    ``worker_live`` is per-worker "delivered at least one completion in
+    the window"; a worker with recorded outcomes that are ALL losses is
+    the canonical crash-looping signature the controller quarantines on.
+    """
+
+    worker_live: Tuple[bool, ...]       # any completion in the window
+    worker_loss_frac: Tuple[float, ...]  # per-worker loss fraction (0 when
+                                         # the worker has no outcomes yet)
+    loss_rate: float                    # pooled task-loss fraction
+    retries_per_task: float             # mean relaunches per recorded task
+    num_outcomes: int
+
+    @property
+    def num_live(self) -> int:
+        return sum(self.worker_live)
+
+
+@dataclasses.dataclass(frozen=True)
 class ArrivalStats:
     """Typed arrival summary of one telemetry window of job timestamps.
 
@@ -73,6 +97,11 @@ class Telemetry:
         self._times: Deque[float] = collections.deque(maxlen=self.window)
         self._arrivals: Deque[float] = collections.deque(maxlen=self.window)
         self._task_size: int = 1
+        # task outcomes: (worker index, completed?) pairs, ring-bounded so
+        # liveness tracks the RECENT fleet, not its whole history
+        self._outcomes: Deque[Tuple[int, bool]] = collections.deque(
+            maxlen=self.window)
+        self._retries: Deque[int] = collections.deque(maxlen=self.window)
 
     def record_step(self, worker_times: np.ndarray, task_size: int = 1):
         """Record the per-worker completion times of one step."""
@@ -95,9 +124,41 @@ class Telemetry:
             raise ValueError(f"arrival timestamp must be finite, got {t}")
         self._arrivals.append(t)
 
+    def record_outcomes(self, completed, lost) -> None:
+        """Record one step's task outcomes, per worker.
+
+        ``completed`` / ``lost`` are same-length boolean masks over the
+        fleet: worker w delivered its task, or worker w's task terminally
+        failed (relaunch budget exhausted).  A worker flagged in neither
+        mask (still running, cancelled by the job resolving) contributes
+        no outcome.  A worker flagged in both raises — a task cannot both
+        complete and be lost.
+        """
+        done = np.asarray(completed, dtype=bool).ravel()
+        dead = np.asarray(lost, dtype=bool).ravel()
+        if done.shape != dead.shape:
+            raise ValueError(
+                f"completed/lost masks must have the same shape, got "
+                f"{done.shape} vs {dead.shape}")
+        if bool((done & dead).any()):
+            raise ValueError("a task cannot be both completed and lost")
+        for w in np.flatnonzero(done | dead):
+            self._outcomes.append((int(w), bool(done[w])))
+
+    def record_retries(self, count: int) -> None:
+        """Record the relaunch count of one task attempt chain."""
+        c = int(count)
+        if c < 0:
+            raise ValueError(f"retry count must be >= 0, got {count}")
+        self._retries.append(c)
+
     @property
     def num_samples(self) -> int:
         return len(self._times)
+
+    @property
+    def num_outcomes(self) -> int:
+        return len(self._outcomes)
 
     @property
     def num_arrivals(self) -> int:
@@ -139,6 +200,34 @@ class Telemetry:
             mean_gap=mean,
             dispersion=var / max(mean * mean, 1e-300),
             num_gaps=int(gaps.size),
+        )
+
+    def fleet_health(self) -> Union[FleetHealth, InsufficientTelemetry]:
+        """Typed liveness/loss summary of the recorded task outcomes.
+
+        Fewer than ``min_samples`` outcomes returns
+        ``InsufficientTelemetry`` — the short-window contract shared with
+        ``straggle_stats``/``arrival_stats``, so a fleet that has barely
+        booted cannot read as "everything is down" (or "nothing ever
+        fails") off three data points.
+        """
+        if self.num_outcomes < self.min_samples:
+            return InsufficientTelemetry(have=self.num_outcomes,
+                                         needed=self.min_samples)
+        n = max(w for w, _ in self._outcomes) + 1
+        seen = np.zeros(n, dtype=np.int64)
+        okc = np.zeros(n, dtype=np.int64)
+        for w, ok in self._outcomes:
+            seen[w] += 1
+            okc[w] += ok
+        frac = np.where(seen > 0, (seen - okc) / np.maximum(seen, 1), 0.0)
+        return FleetHealth(
+            worker_live=tuple(bool(c) for c in okc),
+            worker_loss_frac=tuple(float(f) for f in frac),
+            loss_rate=float((seen - okc).sum() / seen.sum()),
+            retries_per_task=float(np.mean(self._retries))
+            if self._retries else 0.0,
+            num_outcomes=self.num_outcomes,
         )
 
     def straggle_stats(self) -> Union[StraggleStats, InsufficientTelemetry]:

@@ -27,8 +27,8 @@ import pytest
 
 from repro.api import LoadAwareLatency, Scenario
 from repro.control import RedundancyController, replay
-from repro.core import (BiModal, Pareto, Regime, Scaling, ShiftedExp,
-                        sample_regime_trace)
+from repro.core import (BiModal, FailureModel, Pareto, Regime, RetryPolicy,
+                        Scaling, ShiftedExp, sample_regime_trace)
 from repro.core.expectations import completion_curve
 from repro.core.scenario import (DeterministicArrivals, MMPPArrivals,
                                  PoissonArrivals)
@@ -300,3 +300,171 @@ class TestCachedSurface:
                 for e in un.events]
         assert any(e.cached for e in ca.events)
         assert not any(e.cached for e in un.events)
+
+
+# ==========================================================================
+# (d) failure semantics: crash-restart parity across the backends
+# ==========================================================================
+
+def _failure_schedule(n, mttf, mttr, events, seed):
+    """A deterministic crash/recovery schedule for the exact cells —
+    injected into BOTH backends, so parity is samplewise, not
+    distributional."""
+    rng = np.random.default_rng(seed)
+    up = rng.exponential(mttf, (n, events))
+    down = rng.exponential(mttr, (n, events))
+    crash = np.cumsum(up + np.pad(down[:, :-1], ((0, 0), (1, 0))), axis=1)
+    return crash, crash + down
+
+
+FAILURE_EXACT_CELLS = [
+    # (id, k, preempt, overhead, retry, mttf, mttr)
+    ("retry-backoff", 3, True, 0.0,
+     RetryPolicy(max_attempts=3, backoff_base=0.5), 40.0, 3.0),
+    ("retry-overhead", 3, True, 0.3,
+     RetryPolicy(max_attempts=2, backoff_base=1.0), 40.0, 3.0),
+    ("no-retry-losses", 3, True, 0.0,
+     RetryPolicy(max_attempts=1), 6.0, 4.0),
+    ("storm-splitting", 12, True, 0.0,
+     RetryPolicy(max_attempts=2, backoff_base=0.5), 12.0, 2.0),
+    ("no-preempt-remnants", 2, False, 0.0,
+     RetryPolicy(max_attempts=3, backoff_base=0.5), 25.0, 3.0),
+    ("jittered-backoff", 3, True, 0.2,
+     RetryPolicy(max_attempts=2, backoff_base=0.5, jitter=0.5), 20.0, 3.0),
+    ("timeout-kill", 12, True, 0.0,
+     RetryPolicy(max_attempts=3, timeout=60.0), 30.0, 3.0),
+    ("hedge-timeout-ignored", 3, True, 0.0,
+     RetryPolicy(max_attempts=2, timeout=50.0, hedge_on_timeout=True),
+     40.0, 3.0),
+]
+
+
+class TestFailureParity:
+    """The failure tentpole's contract: one crash-restart semantics,
+    two independent implementations (the oracle's event loop vs the
+    ``runtime.failures`` closed form inside the batched recurrence),
+    pinned exactly on injected schedules and distributionally under
+    stochastic MTTF/MTTR.  Exact cells keep clear of the documented
+    measure-zero tie boundaries (a job resolving at the very instant a
+    worker recovers or an attempt is dispatched), which continuous
+    schedules avoid almost surely."""
+
+    N = 12
+
+    @pytest.mark.parametrize(
+        "k,preempt,overhead,retry,mttf,mttr",
+        [c[1:] for c in FAILURE_EXACT_CELLS],
+        ids=[c[0] for c in FAILURE_EXACT_CELLS])
+    def test_injected_schedule_walks_the_same_trajectory(
+            self, k, preempt, overhead, retry, mttf, mttr):
+        crash, recover = _failure_schedule(self.N, mttf, mttr,
+                                           events=48, seed=13)
+        cfg = ClusterConfig(
+            n_workers=self.N, k=k, arrival_rate=0.05, num_jobs=250,
+            preempt=preempt, cancel_overhead=overhead, seed=7,
+            warmup=20, retry=retry)
+        dist = ShiftedExp(1.0, 10.0)
+        kw = dict(crash_times=crash, recovery_times=recover)
+        res_o = simulate_oracle(cfg, dist, SERVER, **kw)
+        res_b = simulate_one(cfg, dist, SERVER, **kw)
+        # same trajectory: every job resolves at the same instant with
+        # the same verdict (float32 lane accumulation vs float64 DES)
+        np.testing.assert_allclose(res_b.latencies, res_o.latencies,
+                                   rtol=2e-4, atol=2e-2)
+        np.testing.assert_array_equal(res_b.job_failed, res_o.job_failed)
+        assert res_b.failure_rate == res_o.failure_rate
+        if preempt:
+            assert res_b.utilization == pytest.approx(
+                res_o.utilization, rel=2e-3)
+            assert res_b.wasted_frac == pytest.approx(
+                res_o.wasted_frac, rel=2e-3, abs=2e-4)
+
+    def test_stochastic_failure_model_single_cell_parity(self):
+        """``cfg.failures`` samples the schedule under PRNGKey(seed+2)
+        on BOTH backends — the single-cell path stays samplewise exact
+        even for a stochastic model."""
+        cfg = ClusterConfig(
+            n_workers=self.N, k=3, arrival_rate=0.05, num_jobs=250,
+            seed=5, warmup=20,
+            failures=FailureModel(mttf=25.0, mttr=3.0, max_events=32),
+            retry=RetryPolicy(max_attempts=2, backoff_base=0.5))
+        dist = ShiftedExp(1.0, 10.0)
+        res_o = simulate_oracle(cfg, dist, SERVER)
+        res_b = simulate_one(cfg, dist, SERVER)
+        np.testing.assert_allclose(res_b.latencies, res_o.latencies,
+                                   rtol=2e-4, atol=2e-2)
+        np.testing.assert_array_equal(res_b.job_failed, res_o.job_failed)
+
+    def test_failure_model_never_perturbs_the_fault_free_path(self):
+        """Failure draws live on disjoint keys (seed+2, seed+3): the
+        fault-free trajectory of a config is bit-identical to what it
+        was before the failure axis existed."""
+        cfg0 = ClusterConfig(n_workers=self.N, k=3, arrival_rate=0.05,
+                             num_jobs=150, seed=9)
+        dist = ShiftedExp(1.0, 10.0)
+        base = simulate_one(cfg0, dist, SERVER)
+        again = simulate_one(dataclasses.replace(cfg0), dist, SERVER)
+        np.testing.assert_array_equal(base.latencies, again.latencies)
+        assert base.job_failed is None
+
+    def test_stochastic_sweep_distributional_parity(self):
+        """Whole failure surfaces under different schedule-key layouts
+        (batched: one schedule per rep; oracle: per cell-rep seed) agree
+        distributionally, including the failure-rate surface."""
+        sc = Scenario(ShiftedExp(1.0, 10.0), SERVER, self.N,
+                      failures=FailureModel(mttf=60.0, mttr=4.0,
+                                            max_events=48))
+        retry = RetryPolicy(max_attempts=2, backoff_base=0.5)
+        kw = dict(loads=[0.01, 0.04], ks=[1, 3, 12], num_jobs=500,
+                  reps=6, seed=3, retry=retry)
+        sb = sweep(sc, **kw)
+        so = sweep_oracle(sc, **kw)
+        np.testing.assert_allclose(sb.mean, so.mean, rtol=0.15)
+        np.testing.assert_allclose(sb.utilization, so.utilization,
+                                   rtol=0.15, atol=5e-3)
+        # failure rates are small counts: compare pooled, not cellwise
+        assert sb.metric("failure_rate").mean() == pytest.approx(
+            so.metric("failure_rate").mean(), abs=0.02)
+
+    def test_timeout_only_policy_needs_no_failure_model(self):
+        """A killing timeout without a FailureModel activates the
+        failure lanes with an empty crash schedule — on both backends
+        and through the sweep entry points."""
+        retry = RetryPolicy(max_attempts=2, backoff_base=0.5, timeout=25.0)
+        cfg = ClusterConfig(n_workers=self.N, k=12, arrival_rate=0.05,
+                            num_jobs=250, seed=3, warmup=20, retry=retry)
+        dist = ShiftedExp(1.0, 10.0)
+        res_o = simulate_oracle(cfg, dist, SERVER)
+        res_b = simulate_one(cfg, dist, SERVER)
+        np.testing.assert_allclose(res_b.latencies, res_o.latencies,
+                                   rtol=2e-4, atol=2e-2)
+        np.testing.assert_array_equal(res_b.job_failed, res_o.job_failed)
+        assert res_o.job_failed is not None      # routed to failure loop
+        sc = Scenario(dist, SERVER, self.N)
+        sw = sweep(sc, loads=[0.05], ks=[12], num_jobs=250, seed=3,
+                   retry=retry)
+        assert sw.failure_rate is not None
+
+    def test_cached_failure_surface_equals_uncached(self):
+        """The failure surface rides the compiled-surface cache: same
+        numbers as the uncached sweep, and re-fitted MTTF/MTTR floats
+        hit the warm executable."""
+        retry = RetryPolicy(max_attempts=2, backoff_base=0.5)
+        kw = dict(loads=[0.02, 0.05], ks=[1, 3, 12], num_jobs=300,
+                  reps=2, seed=0, retry=retry)
+
+        def scen(mttf, mttr):
+            return Scenario(ShiftedExp(1.0, 10.0), SERVER, self.N,
+                            failures=FailureModel(mttf=mttf, mttr=mttr,
+                                                  max_events=32))
+
+        a = sweep(scen(30.0, 3.0), **kw)
+        b = cached_sweep(scen(30.0, 3.0), **kw)
+        for m in ("mean", "p95", "utilization", "failure_rate"):
+            np.testing.assert_allclose(b.metric(m), a.metric(m),
+                                       rtol=1e-5, err_msg=m)
+        first = surface_cache_stats()
+        cached_sweep(scen(22.0, 2.5), **kw)      # fresh floats, same key
+        after = surface_cache_stats()
+        assert after["misses"] == first["misses"]
+        assert after["hits"] == first["hits"] + 1

@@ -1,0 +1,424 @@
+"""The fleet-degradation path end to end: outcome telemetry
+(``FleetHealth``), the streaming loss-rate estimator, the failure-drift
+CUSUM, the controller's quarantine + rule-of-three redundancy floor +
+probational restoration, the oracle fallback on surface-cache errors,
+crash-safe checkpointing (torn-file recovery), and the coded trainer's
+decode-retry-with-backoff."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import LoadAwareLatency, Scenario
+from repro.control import RedundancyController
+from repro.control.controller import ControllerConfig
+from repro.control.detector import FailureDriftDetector
+from repro.control.estimators import LossRateEstimator
+from repro.core import Scaling, ShiftedExp
+from repro.core.policy import RetryPolicy
+from repro.runtime.telemetry import (FleetHealth, InsufficientTelemetry,
+                                     Telemetry)
+
+N = 12
+
+
+# ==========================================================================
+# FleetHealth telemetry (runtime.telemetry)
+# ==========================================================================
+
+class TestFleetHealth:
+    def test_short_window_returns_typed_insufficiency(self):
+        tel = Telemetry(min_samples=8)
+        tel.record_outcomes([True, False], [False, False])
+        stats = tel.fleet_health()
+        assert isinstance(stats, InsufficientTelemetry)
+        assert not stats                      # `if stats:` reads as unusable
+        assert stats.have == 1 and stats.needed == 8
+
+    def test_crash_looping_worker_signature(self):
+        """A worker whose recorded outcomes are ALL losses is dead to the
+        window: not live, loss fraction 1.0 — the quarantine signature."""
+        tel = Telemetry(min_samples=4)
+        done = np.array([True, True, False, True])
+        lost = np.array([False, False, True, False])
+        for _ in range(4):
+            tel.record_outcomes(done, lost)
+        h = tel.fleet_health()
+        assert isinstance(h, FleetHealth)
+        assert h.worker_live == (True, True, False, True)
+        assert h.worker_loss_frac[2] == 1.0
+        assert h.worker_loss_frac[0] == 0.0
+        assert h.num_live == 3
+        assert h.loss_rate == pytest.approx(0.25)
+
+    def test_retries_per_task_is_window_mean(self):
+        tel = Telemetry(min_samples=2)
+        tel.record_outcomes([True, True], [False, False])
+        for c in (0, 1, 0, 3):
+            tel.record_retries(c)
+        assert tel.fleet_health().retries_per_task == pytest.approx(1.0)
+
+    def test_contradictory_outcome_masks_raise(self):
+        tel = Telemetry()
+        with pytest.raises(ValueError):
+            tel.record_outcomes([True, True], [True, False])
+        with pytest.raises(ValueError):
+            tel.record_outcomes([True], [True, False])
+        with pytest.raises(ValueError):
+            tel.record_retries(-1)
+
+    def test_unflagged_workers_contribute_no_outcome(self):
+        tel = Telemetry(min_samples=2)
+        for _ in range(3):
+            tel.record_outcomes([True, False, False],
+                                [False, False, True])   # worker 1: neither
+        h = tel.fleet_health()
+        assert h.num_outcomes == 6            # 2 per step, not 3
+
+
+# ==========================================================================
+# LossRateEstimator (control.estimators)
+# ==========================================================================
+
+class TestLossRateEstimator:
+    def test_tracks_the_loss_rate(self):
+        est = LossRateEstimator(forget=1.0, min_outcomes=32)
+        rng = np.random.default_rng(0)
+        est.observe(rng.random(4000) < 0.2)
+        assert est.ready
+        assert est.rate() == pytest.approx(0.2, abs=0.02)
+        assert est.upper() >= est.rate()
+
+    def test_rule_of_three_on_a_loss_free_stream(self):
+        """Zero observed losses is not zero risk: the upper confidence
+        rate is 3/weight — the redundancy floor's input."""
+        est = LossRateEstimator(forget=1.0, min_outcomes=32)
+        est.observe(np.zeros(100, bool))
+        assert est.rate() == 0.0
+        assert est.upper() == pytest.approx(3.0 / 100.0)
+
+    def test_reset_drops_evidence(self):
+        est = LossRateEstimator(min_outcomes=4)
+        est.observe([True, False, True, False])
+        assert est.ready
+        est.reset()
+        assert not est.ready and est.weight == 0.0
+        with pytest.raises(ValueError):
+            est.model()
+
+    def test_forgetting_tracks_a_shift(self):
+        est = LossRateEstimator(forget=0.99, min_outcomes=32)
+        rng = np.random.default_rng(1)
+        est.observe(rng.random(2000) < 0.02)
+        est.observe(rng.random(600) < 0.5)
+        assert est.rate() > 0.3               # recent storm dominates
+
+
+# ==========================================================================
+# FailureDriftDetector (control.detector)
+# ==========================================================================
+
+class TestFailureDriftDetector:
+    def test_alarms_quickly_on_a_crash_storm(self):
+        det = FailureDriftDetector()
+        det.rebase(0.02, at=0)
+        rng = np.random.default_rng(2)
+        ev = det.update(rng.random(200) < 0.4, at=0)
+        assert ev is not None and ev.kind == "loss_up"
+        assert ev.at < 100
+        assert ev.start <= ev.at
+
+    def test_matched_stream_outlives_storm_detection_by_far(self):
+        """The null ARL is finite by design (the controller rebases the
+        CUSUM at every commit); what matters is the SEPARATION — a
+        matched stream survives hundreds of outcomes where a storm
+        alarms within tens."""
+        det = FailureDriftDetector()
+        det.rebase(0.05, at=0)
+        rng = np.random.default_rng(3)
+        assert det.update(rng.random(300) < 0.05, at=0) is None
+        null_ats = []
+        for seed in range(8):
+            d = FailureDriftDetector()
+            d.rebase(0.05, at=0)
+            r = np.random.default_rng(seed)
+            ev = d.update(r.random(20000) < 0.05, at=0)
+            null_ats.append(ev.at if ev is not None else 20000)
+        storm = FailureDriftDetector()
+        storm.rebase(0.05, at=0)
+        storm_ev = storm.update(
+            np.random.default_rng(3).random(20000) < 0.4, at=0)
+        assert storm_ev is not None
+        assert min(null_ats) > 10 * storm_ev.at
+
+    def test_clustered_losses_needed_under_a_near_zero_commit(self):
+        """The winsorized LLR cap: one loss under a ~0 commit contributes
+        at most ``cap`` nats, so a single unlucky loss can never cross
+        the threshold by itself."""
+        det = FailureDriftDetector()
+        det.rebase(0.0, at=0)
+        x = np.zeros(41, bool)
+        x[20] = True
+        assert det.update(x, at=0) is None
+        assert det.g_up < det.threshold
+
+    def test_healing_alarms_on_the_down_side(self):
+        det = FailureDriftDetector()
+        det.rebase(0.3, at=0)
+        ev = det.update(np.zeros(400, bool), at=0)
+        assert ev is not None and ev.kind == "loss_down"
+
+    def test_down_side_disarmed_below_min_down(self):
+        """With a near-zero committed rate there is nothing to relax:
+        clean outcomes must not accumulate 'healing' evidence."""
+        det = FailureDriftDetector()
+        det.rebase(0.01, at=0)                # < min_down
+        assert det.update(np.zeros(1000, bool), at=0) is None
+        assert det.g_dn == 0.0
+
+
+# ==========================================================================
+# Controller: quarantine, redundancy floor, restoration, fallback
+# ==========================================================================
+
+FAST_CFG = ControllerConfig(boot_samples=24, refit_samples=24,
+                            loss_forget=0.99, quarantine_weight=6.0,
+                            loss_refresh_outcomes=96)
+
+
+def _step(ctl, rng, dead=(), n=N, delta=1.0, w=2.0):
+    t = delta + rng.exponential(w, n)
+    loss = np.zeros(n, bool)
+    if dead:
+        loss[list(dead)] = True
+        t[list(dead)] = np.nan
+    return ctl.observe(t, losses=loss)
+
+
+class TestControllerDegradation:
+    def test_quarantines_crash_loopers_and_shrinks_the_fleet(self):
+        bad = (3, 7)
+        ctl = RedundancyController(
+            Scenario(ShiftedExp(1.0, 2.0), Scaling.SERVER_DEPENDENT, N),
+            config=FAST_CFG)
+        rng = np.random.default_rng(4)
+        for _ in range(120):
+            _step(ctl, rng, dead=bad)
+        assert ctl.quarantined == bad
+        assert ctl.policy.n == N - len(bad)   # plan on the live fleet
+        assert ctl.loss_model is not None
+        assert ctl.loss_model.rate == pytest.approx(2 / 12, abs=0.05)
+        assert any(e.kind in ("boot", "failure") and e.loss is not None
+                   for e in ctl.events)
+
+    def test_healed_workers_are_restored(self):
+        """Quarantine is evidence-bound, not sticky: when the storm ends,
+        the down-side CUSUM alarms, the refit commits a clean loss model,
+        and the decayed storm-era evidence releases the workers — the
+        fleet returns to full size."""
+        bad = (3, 7)
+        ctl = RedundancyController(
+            Scenario(ShiftedExp(1.0, 2.0), Scaling.SERVER_DEPENDENT, N),
+            config=FAST_CFG)
+        rng = np.random.default_rng(5)
+        for _ in range(120):
+            _step(ctl, rng, dead=bad)
+        assert ctl.quarantined == bad
+        for _ in range(200):
+            _step(ctl, rng)                   # everyone healthy again
+        assert ctl.quarantined == ()
+        assert ctl.policy.n == N
+        kinds = {e.kind for e in ctl.events}
+        assert "failure" in kinds
+
+    def test_loss_evidence_takes_zero_redundancy_off_the_table(self):
+        """DATA_DEPENDENT with a dominant deterministic part: the
+        no-failure optimum is k = n (pure splitting, zero parity).  Any
+        committed loss evidence must floor the plan below that — losing
+        ONE task of a k = n job fails the whole job."""
+        sc = Scenario(ShiftedExp(3.0, 1.0), Scaling.DATA_DEPENDENT, N)
+        ctl = RedundancyController(sc, config=FAST_CFG)
+        assert ctl.policy.k == N              # the fault-free prior plan
+        rng = np.random.default_rng(6)
+        for _ in range(60):
+            dead = tuple(np.flatnonzero(rng.random(N) < 0.05))
+            _step(ctl, rng, dead=dead, delta=3.0, w=1.0)
+        assert ctl.loss_model is not None
+        assert ctl.policy.k < N
+        assert ctl.quarantined == ()          # background loss, no looper
+
+    def test_surface_cache_error_falls_back_to_oracle(self, monkeypatch):
+        """REGRESSION: a compiled-surface failure mid-commit must not
+        crash the control loop — the commit re-plans on the discrete-
+        event oracle and flags ``fallback`` on the event."""
+        import repro.runtime.cluster as rcluster
+        real = rcluster.resolve_sweep_backend
+
+        def flaky(backend):
+            if backend == "cached":
+                def boom(*a, **k):
+                    raise RuntimeError("surface compile exploded")
+                return boom
+            return real(backend)
+
+        monkeypatch.setattr(rcluster, "resolve_sweep_backend", flaky)
+        ctl = RedundancyController(
+            Scenario(ShiftedExp(1.0, 2.0), Scaling.SERVER_DEPENDENT, 8),
+            objective=LoadAwareLatency(num_jobs=80, reps=1,
+                                       backend="cached", preempt=False),
+            config=ControllerConfig(boot_samples=24, refit_samples=24))
+        rng = np.random.default_rng(7)
+        t = 0.0
+        for _ in range(40):
+            t += 30.0
+            ctl.observe(1.0 + rng.exponential(2.0, 8), timestamp=t)
+        assert ctl.events                     # the loop kept committing
+        assert all(e.fallback for e in ctl.events if e.cached)
+        assert any(e.fallback for e in ctl.events)
+        assert ctl.policy.k in ctl.scenario.legal_ks()
+
+
+# ==========================================================================
+# Crash-safe checkpointing (checkpoint.store)
+# ==========================================================================
+
+ckpt = pytest.importorskip("repro.checkpoint")
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal(3).astype(np.float32)}
+
+
+class TestTornCheckpoint:
+    def test_truncated_leaf_falls_back_to_previous_step(self, tmp_path):
+        """REGRESSION: recovery is verified, not assumed.  A leaf torn
+        mid-write (file shorter than its npy header promises) must fail
+        ``is_intact`` and ``latest_step`` must serve the newest step that
+        still verifies — never the torn one ``restore`` would choke on."""
+        root = str(tmp_path)
+        ckpt.save(root, 5, _tree(0))
+        ckpt.save(root, 10, _tree(1))
+        assert ckpt.latest_step(root) == 10
+        leaf = os.path.join(root, "step_000000010", "leaf_00000.npy")
+        size = os.path.getsize(leaf)
+        with open(leaf, "r+b") as f:
+            f.truncate(size // 2)
+        assert not ckpt.is_intact(root, 10)
+        assert ckpt.is_intact(root, 5)
+        assert ckpt.latest_step(root) == 5
+        tree, manifest = ckpt.restore(root, 5, _tree(0))
+        np.testing.assert_array_equal(tree["w"], _tree(0)["w"])
+        assert manifest["step"] == 5
+
+    def test_corrupt_manifest_is_skipped(self, tmp_path):
+        root = str(tmp_path)
+        ckpt.save(root, 3, _tree(0))
+        ckpt.save(root, 4, _tree(1))
+        with open(os.path.join(root, "step_000000004",
+                               "manifest.json"), "w") as f:
+            f.write("{not json")
+        assert ckpt.latest_step(root) == 3
+
+    def test_stale_tmp_debris_does_not_block_a_retry(self, tmp_path):
+        """A crash between temp-write and rename leaves ``.tmp_step_X``
+        behind; the next save of the same step must clear it and land."""
+        root = str(tmp_path)
+        debris = os.path.join(root, ".tmp_step_000000007")
+        os.makedirs(debris)
+        with open(os.path.join(debris, "leaf_00000.npy"), "w") as f:
+            f.write("torn")
+        ckpt.save(root, 7, _tree(2))
+        assert ckpt.latest_step(root) == 7
+        assert ckpt.is_intact(root, 7)
+        assert not os.path.exists(debris)
+
+    def test_no_intact_step_returns_none(self, tmp_path):
+        root = str(tmp_path)
+        ckpt.save(root, 1, _tree(0))
+        os.remove(os.path.join(root, "step_000000001", "manifest.json"))
+        assert ckpt.latest_step(root) is None
+
+
+# ==========================================================================
+# CodedTrainer decode retry (runtime.coded_step)
+# ==========================================================================
+
+class TestTrainerDecodeRetry:
+    def _trainer(self, alive_fn, retry=None, telemetry=None):
+        from repro.configs.base import ModelConfig
+        from repro.data import DataConfig
+        from repro.optim import adamw
+        from repro.runtime import CodedStepConfig, CodedTrainer
+        cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                          num_heads=2, num_kv_heads=1, d_ff=64,
+                          vocab_size=257, flash_block_kv=16, remat="none",
+                          compute_dtype="float32", param_dtype="float32")
+        return CodedTrainer(cfg, DataConfig(vocab_size=257, seq_len=16,
+                                            global_batch=8),
+                            CodedStepConfig(n_workers=4, c=2, unique_batch=8),
+                            adamw.AdamWConfig(lr=1e-3), alive_fn=alive_fn,
+                            jit=False, retry=retry, telemetry=telemetry)
+
+    def test_repoll_rescues_a_straggled_group(self):
+        """First gather wipes out group 0 (undecodable); the re-poll
+        after the backoff grace sees the late worker arrive — the masks
+        OR and decode succeeds without the full-barrier fallback."""
+        polls = []
+
+        def alive_fn(step):
+            polls.append(step)
+            return np.array([0, 0, 1, 1], bool) if len(polls) == 1 \
+                else np.array([1, 0, 1, 1], bool)
+
+        tel = Telemetry(min_samples=2)
+        retry = RetryPolicy(max_attempts=3, backoff_base=0.5)
+        tr = self._trainer(alive_fn, retry=retry, telemetry=tel)
+        alive = tr.gather_alive(0)
+        np.testing.assert_array_equal(alive, [True, False, True, True])
+        assert tr.decode_retries == 1
+        assert tr.retry_wait == pytest.approx(retry.delay(0))
+        assert len(polls) == 2
+        tr.decode_coefficients(alive)
+        assert tr.decode_failures == 0        # rescued, no fallback
+
+    def test_retries_surface_in_fleet_health(self):
+        calls = [0]
+
+        def alive_fn(step):
+            calls[0] += 1
+            return np.array([0, 0, 1, 1], bool) if calls[0] == 1 \
+                else np.ones(4, bool)
+
+        tel = Telemetry(min_samples=2)
+        tr = self._trainer(alive_fn, retry=RetryPolicy(), telemetry=tel)
+        tr.gather_alive(0)                    # one retry
+        tr.gather_alive(1)                    # clean
+        tel.record_outcomes(np.ones(4, bool), np.zeros(4, bool))
+        assert tel.fleet_health().retries_per_task == pytest.approx(0.5)
+
+    def test_persistent_wipeout_still_falls_back_once(self):
+        """A group that stays dead through the re-poll exhausts the one
+        retry and lands on the existing full-barrier fallback."""
+        dead = np.array([0, 0, 1, 1], bool)
+        tr = self._trainer(lambda s: dead,
+                           retry=RetryPolicy(max_attempts=2))
+        alive = tr.gather_alive(0)
+        np.testing.assert_array_equal(alive, dead)
+        assert tr.decode_retries == 1
+        tr.decode_coefficients(alive)
+        assert tr.decode_failures == 1
+
+    def test_without_retry_policy_no_repoll(self):
+        polls = [0]
+
+        def alive_fn(step):
+            polls[0] += 1
+            return np.array([0, 0, 1, 1], bool)
+
+        tr = self._trainer(alive_fn)
+        tr.gather_alive(0)
+        assert polls[0] == 1
+        assert tr.decode_retries == 0 and tr.retry_wait == 0.0

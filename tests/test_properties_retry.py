@@ -1,0 +1,126 @@
+"""Property tests for the relaunch axis: ``RetryPolicy``'s backoff
+schedule and the shared failure-semantics helpers it drives
+(``runtime.failures.effective_finish`` / ``job_resolution``)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error, when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.policy import RetryPolicy  # noqa: E402
+from repro.runtime.failures import effective_finish, job_resolution  # noqa: E402
+
+policies = st.builds(
+    RetryPolicy,
+    max_attempts=st.integers(1, 6),
+    backoff_base=st.floats(0.0, 5.0),
+    backoff_mult=st.floats(1.0, 4.0),
+    backoff_cap=st.floats(5.0, 50.0),
+    jitter=st.floats(0.0, 1.0),
+)
+
+
+class TestBackoffSchedule:
+    @given(policies, st.integers(0, 10), st.integers(0, 10))
+    def test_monotone_in_retry_index(self, p, i, j):
+        """At any FIXED jitter draw the delay never shrinks with the
+        retry index (exponential growth, then the cap plateau)."""
+        lo, hi = sorted((i, j))
+        for u in (0.0, 0.25, 0.5, 1.0 - 1e-9):
+            assert p.delay(lo, u) <= p.delay(hi, u) + 1e-12
+
+    @given(policies, st.integers(0, 12), st.floats(0.0, 1.0, exclude_max=True))
+    def test_bounded_by_cap_and_jitter_band(self, p, i, u):
+        """delay(i, u) lives in base_i * [1 - jitter, 1 + jitter] with
+        base_i = min(base * mult^i, cap) — so it is globally bounded by
+        cap * (1 + jitter) and never negative."""
+        base_i = min(p.backoff_base * p.backoff_mult ** i, p.backoff_cap)
+        d = p.delay(i, u)
+        assert 0.0 <= d <= p.backoff_cap * (1.0 + p.jitter) + 1e-9
+        assert base_i * (1.0 - p.jitter) - 1e-9 <= d
+        assert d <= base_i * (1.0 + p.jitter) + 1e-9
+
+    @given(policies, st.integers(0, 12))
+    def test_midpoint_is_deterministic_schedule(self, p, i):
+        """u = 0.5 (the default) is the jitter-free schedule exactly."""
+        base_i = min(p.backoff_base * p.backoff_mult ** i, p.backoff_cap)
+        assert p.delay(i) == pytest.approx(base_i)
+
+    @given(policies)
+    def test_negative_index_rejected(self, p):
+        with pytest.raises(ValueError):
+            p.delay(-1)
+
+
+# small schedule worlds for the end-to-end attempt loop
+schedules = st.integers(1, 4).flatmap(lambda n: st.tuples(
+    st.just(n),
+    st.lists(st.lists(st.floats(0.1, 50.0), min_size=0, max_size=3),
+             min_size=n, max_size=n),
+    st.lists(st.floats(0.1, 20.0), min_size=n, max_size=n),
+    st.lists(st.floats(0.0, 10.0), min_size=n, max_size=n),
+))
+
+
+def _build(n, gaps, svc, start):
+    """Per-worker ascending crash instants from positive gaps, padded to a
+    rectangular (n, M) with +inf; recovery 0.5 after each crash."""
+    m = max((len(g) for g in gaps), default=0)
+    crash = np.full((n, max(m, 1)), np.inf)
+    for w, g in enumerate(gaps):
+        c = np.cumsum(g)
+        crash[w, :len(c)] = c
+    recover = np.where(np.isfinite(crash), crash + 0.5, np.inf)
+    return crash, recover, np.asarray(svc), np.asarray(start)
+
+
+class TestEffectiveFinish:
+    @given(schedules, policies)
+    @settings(max_examples=60)
+    def test_attempts_never_exceed_budget(self, world, p):
+        n, gaps, svc, start = world
+        crash, recover, svc, start = _build(n, gaps, svc, start)
+        release, ok, attempts = effective_finish(
+            np, start, svc, crash, recover, p)
+        assert np.all(attempts >= 1)
+        assert np.all(attempts <= p.max_attempts)
+
+    @given(schedules, policies)
+    @settings(max_examples=60)
+    def test_release_after_dispatch_and_service_covered(self, world, p):
+        n, gaps, svc, start = world
+        crash, recover, svc, start = _build(n, gaps, svc, start)
+        release, ok, attempts = effective_finish(
+            np, start, svc, crash, recover, p)
+        assert np.all(np.isfinite(release))
+        assert np.all(release >= start - 1e-9)
+        # a completed task spent at least one full service time
+        assert np.all(release[ok] >= (start + svc)[ok] - 1e-9)
+
+    @given(schedules, policies)
+    @settings(max_examples=60)
+    def test_no_crashes_means_first_attempt_completes(self, world, p):
+        n, gaps, svc, start = world
+        _, _, svc, start = _build(n, gaps, svc, start)
+        crash = np.full((n, 0), np.inf)
+        recover = np.full((n, 0), np.inf)
+        release, ok, attempts = effective_finish(
+            np, start, svc, crash, recover, p)
+        assert bool(ok.all())
+        assert np.all(attempts == 1)
+        np.testing.assert_allclose(release, start + svc)
+
+    @given(schedules, policies, st.integers(1, 4))
+    @settings(max_examples=60)
+    def test_job_resolution_is_exclusive(self, world, p, k):
+        """The job either completes at the k-th completion or fails at
+        the (n-k+1)-th loss — exactly one of the two order statistics is
+        finite, and success iff at least k tasks completed."""
+        n, gaps, svc, start = world
+        if k > n:
+            return
+        crash, recover, svc, start = _build(n, gaps, svc, start)
+        release, ok, _ = effective_finish(np, start, svc, crash, recover, p)
+        d, success = job_resolution(np, release, ok, k, n)
+        assert bool(success) == (int(ok.sum()) >= k)
+        assert np.isfinite(d)
