@@ -1,0 +1,162 @@
+"""Assignment placement: grouped dispatch vs random placement under
+heterogeneous worker speeds (Behrouzi-Far & Soljanin, arXiv:1808.02838).
+
+Four gates, emitted to ``bench_results/BENCH_assign.json``:
+
+1. **Placement ordering** — on a fleet where 1/3 of the workers are 3x
+   slow, round-robin striding (one straggler per replication group)
+   beats balanced uniform-random placement on mean job latency at low
+   load, the fixed-placement regime of 1808.02838.  The comparison is
+   CRN-paired: both strategies replay the same service tables, so the
+   gap is pure placement.
+2. **g=1 recovery** — ``ReplicationGroups(g=1)`` and ``AllWorkers()``
+   reproduce the legacy ungrouped engine bit-for-bit (np.array_equal on
+   per-job latencies), i.e. the grouped kernels are a strict
+   generalization, not a parallel implementation.
+3. **One-compile co-optimization** — ``co_sweep`` evaluates the whole
+   (assignment x k x load) grid as ONE compiled call (compile-counter
+   delta == 1), the co-planning hot path.
+4. **Warm re-plan latency** — through the compiled-surface cache a
+   repeat co_sweep with fresh traced data (new seed / measured speeds)
+   returns in < 50 ms: the controller can re-place the fleet inside a
+   control tick.
+
+    PYTHONPATH=src python -m benchmarks.assignment_sweep           # full
+    PYTHONPATH=src python -m benchmarks.assignment_sweep --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.assign.strategies import (AllWorkers, RandomGroups,
+                                     ReplicationGroups, RoundRobin,
+                                     SpeedAware)
+from repro.assign.surface import co_sweep
+from repro.core.distributions import Scaling, ShiftedExp
+from repro.core.scenario import Scenario
+from repro.runtime import surface_cache
+from repro.runtime.cluster_batched import sweep, sweep_compile_count
+
+from .common import Check, emit_json
+
+DIST = ShiftedExp(1.0, 1.25)
+SCALING = Scaling.SERVER_DEPENDENT
+
+
+def _mean_over_seeds(scenario, load, k, assignment, num_jobs, warmup, seeds):
+    means = []
+    for s in seeds:
+        sw = sweep(scenario, loads=[load], ks=[k], num_jobs=num_jobs,
+                   seed=s, preempt=False, warmup=warmup,
+                   assignment=assignment)
+        means.append(float(sw.mean[0, 0]))
+    return float(np.mean(means))
+
+
+def run(n: int = 12, num_jobs: int = 1500, smoke: bool = False,
+        **_) -> bool:
+    if smoke:
+        num_jobs = 300
+    check = Check("assignment_sweep")
+    # 1/3 of the fleet is 3x slow, slow workers adjacent in index —
+    # the layout where striding vs blocking placement differs most
+    speeds = (3.0,) * (n // 3) + (1.0,) * (n - n // 3)
+    het = Scenario(DIST, SCALING, n, worker_speeds=speeds)
+    lam_max = 1.0 / (DIST.mean() * n)
+    load = 0.1 * lam_max          # fixed-placement (low-load) regime
+    k, g = 4, 4                   # fractional repetition: groups of n/g
+    warmup = num_jobs // 10
+    seeds = range(2 if smoke else 4)
+
+    # -- gate 1: round-robin beats random placement (CRN-paired) -----------
+    lat = {name: _mean_over_seeds(het, load, k, a, num_jobs, warmup, seeds)
+           for name, a in [("round_robin", RoundRobin(g=g)),
+                           ("random", RandomGroups(g=g)),
+                           ("speed_aware", SpeedAware(g=g)),
+                           ("all_workers", AllWorkers())]}
+    margin = lat["random"] / lat["round_robin"] - 1.0
+    check.expect("round-robin < random placement (heterogeneous, low load)",
+                 lat["round_robin"] < lat["random"],
+                 f"rr={lat['round_robin']:.3f} rand={lat['random']:.3f} "
+                 f"(+{100 * margin:.1f}%)")
+
+    # -- gate 2: g=1 and AllWorkers recover the legacy path exactly --------
+    legacy = sweep(het, loads=[load], ks=[k], num_jobs=num_jobs, seed=0,
+                   preempt=False, warmup=warmup)
+    exact = True
+    for a in (ReplicationGroups(g=1), AllWorkers()):
+        grouped = sweep(het, loads=[load], ks=[k], num_jobs=num_jobs,
+                        seed=0, preempt=False, warmup=warmup, assignment=a)
+        exact &= all(np.array_equal(legacy.metric(m), grouped.metric(m))
+                     for m in ("mean", "p50", "p95", "p99", "utilization",
+                               "wasted_frac", "throughput"))
+    check.expect("g=1 / AllWorkers == legacy engine bit-for-bit", exact)
+
+    # -- gate 3: co-optimized surface is ONE compiled call -----------------
+    cands = [AllWorkers(), RoundRobin(), RandomGroups(), SpeedAware()]
+    co_loads = [load, 0.5 * lam_max]
+    c0 = sweep_compile_count()
+    surf = co_sweep(het, co_loads, cands, num_jobs=num_jobs,
+                    preempt=False, warmup=warmup, backend="batched")
+    compiles = sweep_compile_count() - c0
+    check.expect("co-optimized (assignment x k x load) grid compiles once",
+                 compiles == 1, f"{compiles} compile(s), "
+                 f"{len(cands)}x{len(surf.ks)}x{len(co_loads)} cells")
+    k_lo, a_lo = surf.kstar()[float(load)]
+    check.expect("co-surface argmin is a legal (k, assignment) cell",
+                 het.n % k_lo == 0 and a_lo in cands,
+                 f"k*={k_lo}, {type(a_lo).__name__}")
+
+    # -- gate 4: warm cached re-plan under 50 ms ---------------------------
+    # the controller's re-plan shape: ONE load (the measured arrival
+    # rate), every legal k, all placement candidates — fresh seed and
+    # fresh measured speeds are traced data, so only execution is paid
+    plan_jobs = num_jobs if smoke else 500
+
+    def replan(seed):
+        return co_sweep(het, [0.5 * lam_max], cands, num_jobs=plan_jobs,
+                        preempt=False, warmup=plan_jobs // 10, seed=seed,
+                        backend="cached")
+
+    replan(0)  # cold: compile + populate the surface cache
+    times = []
+    for s in (1, 2, 3):
+        t0 = time.perf_counter()
+        replan(s)
+        times.append((time.perf_counter() - t0) * 1e3)
+    warm_ms = min(times)
+    budget = 250.0 if smoke else 50.0
+    check.expect(f"warm cached co-sweep re-plan < {budget:.0f} ms",
+                 warm_ms < budget, f"{warm_ms:.1f} ms")
+
+    emit_json("BENCH_assign_smoke" if smoke else "BENCH_assign", dict(
+        n=n, num_jobs=num_jobs, warmup=warmup, smoke=smoke,
+        worker_speeds=list(speeds), k=k, groups=g,
+        load_fraction=0.1, seeds=len(list(seeds)),
+        mean_latency=dict((nm, round(v, 4)) for nm, v in lat.items()),
+        rr_vs_random_margin_pct=round(100 * margin, 2),
+        g1_bit_exact=bool(exact),
+        co_grid_compiles=compiles,
+        co_kstar_low_load=dict(k=int(k_lo), assignment=repr(a_lo)),
+        warm_replan_ms=round(warm_ms, 2),
+    ))
+    return check.summary()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run: compile + gates on small sizes (CI)")
+    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--num-jobs", type=int, default=1500)
+    args = ap.parse_args(argv)
+    return 0 if run(n=args.n, num_jobs=args.num_jobs,
+                    smoke=args.smoke) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,9 +16,9 @@ def main(argv=None):
                     help="fewer MC trials (CI mode)")
     args = ap.parse_args(argv)
 
-    from . import (cluster_sweep, coded_step, control_loop, fault_injection,
-                   fig_bimodal, fig_pareto, fig_sexp, kernels, planner_sweep,
-                   queueing, table1)
+    from . import (assignment_sweep, cluster_sweep, coded_step, control_loop,
+                   fault_injection, fig_bimodal, fig_pareto, fig_sexp,
+                   kernels, planner_sweep, queueing, table1)
     mc = 4_000 if args.fast else 20_000
     jobs = 400 if args.fast else 1200
 
@@ -27,6 +27,9 @@ def main(argv=None):
          planner_sweep.run),
         ("cluster_sweep (batched queueing lanes vs DES oracle)",
          lambda: cluster_sweep.run(smoke=args.fast)),
+        ("assignment_sweep (grouped placement vs random; (k, assignment) "
+         "co-optimization)",
+         lambda: assignment_sweep.run(smoke=args.fast)),
         ("control_loop (adaptive controller regret vs static plans)",
          lambda: control_loop.run(smoke=args.fast)),
         ("fault_injection (crash-restart surface + storm degradation)",

@@ -1,0 +1,92 @@
+"""Task placement: replication groups, speed-aware packing, and the
+jointly optimal (k, assignment) decision.
+
+    PYTHONPATH=src python examples/assignment.py
+
+The paper's dispatch races every job's n tasks on all n workers.  At
+fleet scale that is one point in a placement space (Behrouzi-Far &
+Soljanin, arXiv:1808.02838): partition the workers into g replication
+groups, give each group k/g sub-tasks, and the job completes when every
+group delivers its share.  This example shows, on a fleet where a third
+of the workers are 3x slow:
+
+1. placement ORDER at a fixed k — round-robin striding (one straggler
+   per group) beats random placement, which beats packing the slow
+   machines together (all CRN-paired: same service draws, pure
+   placement effect);
+2. the jointly optimal (k, assignment) at one load via
+   ``Planner.co_plan`` — the whole (k x placement) grid is ONE compiled
+   call, so placement costs nothing extra to optimize;
+3. how the winning placement shifts with load: free fan-out wins when
+   servers are idle, grouped dispatch takes over as occupancy bites.
+"""
+import numpy as np
+
+from repro.api import (AllWorkers, LoadAwareLatency, Planner, RandomGroups,
+                       ReplicationGroups, RoundRobin, Scenario, SpeedAware)
+from repro.core import Scaling, ShiftedExp
+
+N = 12
+DIST = ShiftedExp(1.0, 1.25)
+SPEEDS = (3.0,) * 4 + (1.0,) * 8          # 4 slow machines, adjacent
+sc = Scenario(DIST, Scaling.SERVER_DEPENDENT, N, worker_speeds=SPEEDS)
+lam_max = 1.0 / (DIST.mean() * N)
+law = LoadAwareLatency(num_jobs=1200, reps=2, preempt=False, seed=0)
+
+print("=" * 70)
+print(f"1. placement order at fixed k=4, g=4 (groups of {N // 4}), "
+      "low load")
+print("=" * 70)
+strategies = [
+    ("all-workers fan-out", AllWorkers()),
+    ("round-robin groups ", RoundRobin(g=4)),
+    ("random groups      ", RandomGroups(g=4)),
+    ("speed-aware packing", SpeedAware(g=4)),
+    ("contiguous blocks  ", ReplicationGroups(g=4)),
+]
+sc_k4 = Scenario(DIST, Scaling.SERVER_DEPENDENT, N, worker_speeds=SPEEDS,
+                 candidate_ks=(4,))   # g=4 is only legal where 4 | k
+for label, a in strategies:
+    surf = LoadAwareLatency(num_jobs=1200, reps=2, preempt=False, seed=0,
+                            assignment=a).surface(sc_k4, [0.1 * lam_max])
+    print(f"  {label}: mean latency {surf.mean[0, 0]:6.2f}")
+print("  (striding spreads the 4 slow machines one-per-group; packing "
+      "them\n   concentrates the damage but every job still waits on "
+      "that group)")
+
+print()
+print("=" * 70)
+print("2. co-optimized (k, assignment) at one load — one compiled call")
+print("=" * 70)
+candidates = [AllWorkers(), RoundRobin(), RandomGroups(), SpeedAware()]
+planner = Planner(law)
+plan = planner.co_plan(sc, candidates,
+                       objective=LoadAwareLatency(
+                           arrival_rate=0.5 * lam_max, num_jobs=1200,
+                           reps=2, preempt=False, seed=0))
+print(f"  k* = {plan.k}  placement = "
+      f"{plan.assignment if plan.assignment is not None else AllWorkers()}")
+print(f"  envelope curve (per k, best placement): "
+      + ", ".join(f"k={k}: {v:.1f}" for k, v in sorted(plan.curve.items())))
+print(f"  policy: {plan.policy}")
+
+print()
+print("=" * 70)
+print("3. the winning placement vs load (code rate pinned at k=4)")
+print("=" * 70)
+# when k is free, fan-out + a smaller k absorbs the heterogeneity; pin
+# the code rate (a storage/bandwidth constraint) and placement becomes
+# the only free knob — the 1808.02838 setting
+law_q = LoadAwareLatency(num_jobs=1200, reps=2, preempt=True, seed=0)
+loads = [f * lam_max for f in (2.0, 4.0, 8.0, 12.0)]
+surf = law_q.co_surface(sc_k4, loads, candidates)
+cube = surf.metric("mean")
+for i, lam in enumerate(loads):
+    k, a = surf.kstar("mean")[float(lam)]
+    per = ", ".join(f"{type(c).__name__}={cube[j, i, 0]:.1f}"
+                    for j, c in enumerate(candidates))
+    print(f"  load {lam / lam_max:5.1f} x unit:  winner = "
+          f"{type(a).__name__:12s} ({per})")
+print("  (fan-out's global k-of-n order statistic wins while servers are"
+      "\n   idle; near saturation per-job random grouping load-balances —"
+      "\n   groups cancel locally and release servers earlier)")

@@ -47,6 +47,8 @@ from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from .assign.strategies import (AllWorkers, Assignment, RandomGroups,
+                                ReplicationGroups, RoundRobin, SpeedAware)
 from .core.batched import binom_lt_curves
 from .core.expectations import completion_curve
 from .core.planner import Plan, theorem_kstar
@@ -61,6 +63,8 @@ __all__ = [
     "FRCompletionTime", "Planner", "AdaptivePlanner",
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
     "MMPPArrivals",
+    "Assignment", "AllWorkers", "ReplicationGroups", "RoundRobin",
+    "RandomGroups", "SpeedAware",
 ]
 
 
@@ -181,6 +185,11 @@ class LoadAwareLatency:
     ``reps`` averages that many replications on either backend — common-
     random-number lanes in the same compiled call (batched) or repeated
     cells on shifted seeds (oracle), pooled the same way.
+
+    ``assignment`` scores every k under that task placement
+    (``repro.assign``); None is the paper's all-workers fan-out.  To
+    OPTIMIZE over placements instead of fixing one, use
+    ``Planner.co_plan`` / ``Planner.co_kstar_vs_load``.
     """
 
     arrival_rate: float = 0.05
@@ -192,6 +201,7 @@ class LoadAwareLatency:
     backend: str = "batched"
     warmup: Optional[int] = None
     reps: int = 1
+    assignment: Optional["Assignment"] = None
     name: str = "load_aware_latency"
 
     def __post_init__(self):
@@ -217,7 +227,23 @@ class LoadAwareLatency:
                    num_jobs=self.num_jobs, reps=self.reps,
                    preempt=self.preempt,
                    cancel_overhead=self.cancel_overhead,
-                   seed=self.seed, warmup=self.warmup)
+                   seed=self.seed, warmup=self.warmup,
+                   assignment=self.assignment)
+
+    def co_surface(self, scenario: Scenario, loads: Sequence[float],
+                   assignments: Sequence, ks: Optional[Sequence[int]] = None):
+        """The (loads x ks x assignments) ``AssignmentSurface`` — the whole
+        co-optimization grid in one compiled call on the batched/cached
+        backends (``assign.surface.co_sweep`` with this objective's
+        queueing knobs)."""
+        from .assign.surface import co_sweep
+        return co_sweep(scenario, list(loads), assignments,
+                        ks=list(ks) if ks is not None else None,
+                        num_jobs=self.num_jobs, reps=self.reps,
+                        preempt=self.preempt,
+                        cancel_overhead=self.cancel_overhead,
+                        seed=self.seed, warmup=self.warmup,
+                        backend=self.backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,6 +310,61 @@ class Planner:
             else LoadAwareLatency())
         return obj.surface(scenario, loads,
                            scenario.legal_ks()).kstar(obj.metric)
+
+    def _load_aware(self, objective) -> "LoadAwareLatency":
+        if objective is not None:
+            return objective
+        if isinstance(self.objective, LoadAwareLatency):
+            return self.objective
+        return LoadAwareLatency()
+
+    def co_plan(self, scenario: Scenario, assignments: Sequence,
+                objective: Optional["LoadAwareLatency"] = None) -> Plan:
+        """The jointly optimal (k, assignment) decision at one load.
+
+        Every (k, assignment) cell of the grid — each legal k under each
+        candidate placement, exactly CRN-paired on service draws — runs
+        in ONE compiled call (``assign.surface.co_sweep``); the argmin is
+        a within-sample decision.  The returned ``Plan`` carries the
+        winning placement (``plan.assignment``, also attached to
+        ``plan.policy``) and its ``curve`` is the ENVELOPE: per k, the
+        best placement's cost.  Put ``AllWorkers()`` (or None) first in
+        ``assignments`` to prefer the paper's dispatch on ties.
+        """
+        obj = self._load_aware(objective)
+        surf = obj.co_surface(scenario, [obj.arrival_rate], assignments,
+                              ks=scenario.legal_ks())
+        cube = surf.metric(obj.metric)[:, 0, :]          # (A, K)
+        flat = int(np.argmin(cube))                      # first min wins
+        ai, kj = divmod(flat, len(surf.ks))
+        k_best = int(surf.ks[kj])
+        best_assignment = surf.assignments[ai]
+        tk, tname = theorem_kstar(scenario.dist, scenario.scaling,
+                                  scenario.n, scenario.delta)
+        policy = Policy(n=scenario.n, k=k_best)
+        return Plan(
+            n=scenario.n,
+            k=k_best,
+            expected_time=float(cube[ai, kj]),
+            strategy=policy.strategy,
+            code_rate=policy.code_rate,
+            task_size=policy.task_size,
+            curve=surf.min_curve(0, obj.metric),
+            theorem_k=tk,
+            theorem_name=tname,
+            assignment=best_assignment,
+        )
+
+    def co_kstar_vs_load(self, scenario: Scenario, loads: Sequence[float],
+                         assignments: Sequence,
+                         objective: Optional["LoadAwareLatency"] = None
+                         ) -> Dict[float, tuple]:
+        """load -> jointly optimal (k, assignment) over a load sweep —
+        the co-optimized counterpart of ``kstar_vs_load``, still one
+        compiled call for the whole (loads x ks x assignments) grid."""
+        obj = self._load_aware(objective)
+        return obj.co_surface(scenario, loads, assignments,
+                              ks=scenario.legal_ks()).kstar(obj.metric)
 
     def sweep(self, scenarios: Sequence[Scenario],
               objective: Optional[Objective] = None) -> List[Plan]:

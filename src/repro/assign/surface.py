@@ -1,0 +1,222 @@
+"""(k, assignment) co-optimization: one compiled call for the whole grid.
+
+``runtime.cluster_batched.sweep`` already folds every (load, k) queueing
+cell of ONE placement into a single executable.  Placement adds a third
+axis — and because the grouped kernels take their rank/mask arrays as
+traced DATA with only the max group count static, the assignment axis
+can ride the SAME lane dimension: ``co_sweep`` flattens the A x K
+(assignment, k) grid into one extended k-lane axis and runs the entire
+(loads x A x K) surface through one ``_sweep_kernel`` (or
+``_cached_kernel``) invocation.
+
+CRN discipline: task size s = n/k is independent of the grouping, so
+every assignment lane at the same k consumes the IDENTICAL service
+table — the placement comparison is exactly paired, and the argmin over
+(k, assignment) is a within-sample decision, not a noise race.
+
+``backend="oracle"`` is the validation twin: one discrete-event sweep
+per assignment, same summaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.policy import RetryPolicy
+from ..core.scenario import Scenario
+from .strategies import AllWorkers, Assignment, group_ids_matrix
+
+__all__ = ["AssignmentSurface", "co_sweep"]
+
+
+@dataclasses.dataclass
+class AssignmentSurface:
+    """The (loads x ks) surface per assignment, plus joint argmins.
+
+    ``sweeps[i]`` is the full ``ClusterSweep`` of ``assignments[i]`` —
+    every per-placement metric (mean/p95/utilization/...) is available
+    exactly as from a single-assignment sweep; this object adds the
+    CO-optimized views across the placement axis.
+    """
+
+    assignments: Tuple[Assignment, ...]
+    sweeps: Tuple["ClusterSweep", ...]  # noqa: F821 — runtime import
+
+    @property
+    def loads(self) -> Tuple[float, ...]:
+        return self.sweeps[0].loads
+
+    @property
+    def ks(self) -> Tuple[int, ...]:
+        return self.sweeps[0].ks
+
+    def sweep_for(self, assignment: Optional[Assignment]):
+        """The ``ClusterSweep`` of one strategy (None = AllWorkers)."""
+        a = AllWorkers() if assignment is None else assignment
+        for cand, sw in zip(self.assignments, self.sweeps):
+            if cand == a:
+                return sw
+        raise KeyError(f"{a!r} is not on this surface "
+                       f"(assignments: {self.assignments})")
+
+    def metric(self, name: str) -> np.ndarray:
+        """The stacked (A, L, K) metric cube."""
+        return np.stack([sw.metric(name) for sw in self.sweeps])
+
+    def min_curve(self, load_idx: int = 0, metric: str = "mean"
+                  ) -> Dict[int, float]:
+        """k -> best-over-assignments metric at one load: the envelope
+        the planner's objective actually sees once placement is free."""
+        cube = self.metric(metric)[:, load_idx, :]        # (A, K)
+        return {int(k): float(v) for k, v in zip(self.ks, cube.min(axis=0))}
+
+    def kstar(self, metric: str = "mean"
+              ) -> Dict[float, Tuple[int, Assignment]]:
+        """load -> jointly optimal (k, assignment).
+
+        Ties resolve to the earliest assignment in ``assignments`` and,
+        within it, the smallest k (ks are ascending) — so AllWorkers
+        first in the list means "prefer the paper's dispatch unless a
+        placement strictly wins".
+        """
+        cube = self.metric(metric)                        # (A, L, K)
+        out = {}
+        for i, lam in enumerate(self.loads):
+            flat = int(np.argmin(cube[:, i, :]))          # first min wins
+            a, j = divmod(flat, len(self.ks))
+            out[float(lam)] = (int(self.ks[j]), self.assignments[a])
+        return out
+
+
+def _resolved(assignments: Sequence[Optional[Assignment]]
+              ) -> Tuple[Assignment, ...]:
+    out = []
+    for a in assignments:
+        a = AllWorkers() if a is None else a
+        if not isinstance(a, Assignment):
+            raise TypeError(f"assignments must be Assignment strategies "
+                            f"(or None), got {a!r}")
+        out.append(a)
+    if not out:
+        raise ValueError("co_sweep needs at least one assignment")
+    return tuple(out)
+
+
+def co_sweep(scenario: Scenario, loads: Sequence[float],
+             assignments: Sequence[Optional[Assignment]],
+             ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
+             reps: int = 1, preempt: bool = True,
+             cancel_overhead: float = 0.0, seed: int = 0,
+             warmup: Optional[int] = None,
+             retry: Optional[RetryPolicy] = None,
+             backend: str = "batched") -> AssignmentSurface:
+    """Every (load, k, assignment) cell — batched/cached in ONE call.
+
+    The A x K grid flattens into the kernel's k-lane axis: ``ks`` tiled
+    A times as the static lane tuple, the per-lane within-group ranks
+    and (num_jobs, n) placement masks concatenated as traced data, and
+    the single static group count taken as the max over the grid (lanes
+    with fewer groups pad with empty rows the kernels mask out).  Each
+    assignment must be legal for every k in ``ks`` (g | k and g | n).
+
+    ``backend="cached"`` routes the same flattened grid through the
+    compiled-surface cache — the key carries the ASSIGNMENT SIGNATURES
+    (structural: group counts, not mask contents), so a control-loop
+    re-plan with fresh speed estimates reuses the warm executable.
+    ``backend="oracle"`` runs one discrete-event sweep per assignment.
+    """
+    assignments = _resolved(assignments)
+    if backend == "oracle":
+        from ..runtime.cluster_oracle import sweep_oracle
+        sweeps = tuple(
+            sweep_oracle(scenario, loads, ks=ks, num_jobs=num_jobs,
+                         reps=reps, preempt=preempt,
+                         cancel_overhead=cancel_overhead, seed=seed,
+                         warmup=warmup, retry=retry, assignment=a)
+            for a in assignments)
+        return AssignmentSurface(assignments=assignments, sweeps=sweeps)
+    if backend not in ("batched", "cached"):
+        raise ValueError(f"backend must be 'batched', 'cached', or "
+                         f"'oracle', got {backend!r}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..runtime.cluster_batched import (_sweep_kernel,
+                                           resolve_failure_args,
+                                           summarize_sweep,
+                                           validate_sweep_args)
+
+    n = scenario.n
+    ks, loads, warmup, arrivals, speeds = validate_sweep_args(
+        scenario, loads, ks, num_jobs, reps, warmup)
+    failures, retry = resolve_failure_args(scenario, retry)
+    K, A, L = len(ks), len(assignments), len(loads)
+
+    # -- flatten the (assignment, k) grid into one lane axis ---------------
+    rs, gids, gmax = [], [], 1
+    for a in assignments:
+        for k in ks:
+            g, r, gid = group_ids_matrix(a, n, k, int(num_jobs),
+                                         scenario.worker_speeds)
+            gmax = max(gmax, g)
+            rs.append(r)
+            gids.append(gid)
+    ks_ext = tuple(ks) * A
+    group_r = jnp.asarray(rs, jnp.int32)                  # (A*K,)
+    group_ids = jnp.asarray(np.stack(gids), jnp.int32)    # (A*K, jobs, n)
+
+    key = jax.random.PRNGKey(seed)
+    co = jnp.float32(cancel_overhead)
+    if backend == "batched":
+        out = _sweep_kernel(
+            key, jnp.asarray(loads, jnp.float32), speeds, co,
+            scenario.dist, scenario.scaling, n, ks_ext, int(num_jobs),
+            int(reps), bool(preempt), arrivals,
+            None if scenario.delta is None else float(scenario.delta),
+            failures, retry, gmax, group_r, group_ids)
+        trim = L
+    else:
+        from ..runtime.surface_cache import (_cached_kernel, load_bucket,
+                                             record_cache_key)
+        bucket = load_bucket(L)
+        padded = tuple(loads) + (loads[-1],) * (bucket - L)
+        record_cache_key(
+            ("co", type(scenario.dist).__name__, scenario.scaling.value, n,
+             ks_ext, bucket, int(num_jobs), int(reps), bool(preempt),
+             type(arrivals).__name__, scenario.delta is None,
+             None if failures is None else int(failures.max_events),
+             retry, gmax,
+             tuple(a.cache_signature(n, ks) for a in assignments)))
+        out = _cached_kernel(
+            key, jnp.asarray(padded, jnp.float32), speeds, co,
+            scenario.dist, scenario.scaling, n, ks_ext, int(num_jobs),
+            int(reps), bool(preempt), arrivals,
+            None if scenario.delta is None else jnp.float32(scenario.delta),
+            failures, retry, gmax, group_r, group_ids)
+        trim = L
+
+    if retry is None:
+        lat, busy, wasted, a_last = out
+        ok = horizon = None
+    else:
+        lat, busy, wasted, a_last, ok, horizon = out
+        ok = np.asarray(ok)[:, :trim]
+        horizon = np.asarray(horizon)[:, :trim]
+    lat = np.asarray(lat)[:, :trim]
+    busy = np.asarray(busy)[:, :trim]
+    wasted = np.asarray(wasted)[:, :trim]
+    a_last = np.asarray(a_last)[:, :trim]
+
+    # -- slice the flattened lane axis back into per-assignment surfaces ---
+    sweeps = []
+    for ai in range(A):
+        c = slice(ai * K, (ai + 1) * K)
+        sweeps.append(summarize_sweep(
+            lat[:, :, c, :], busy[:, :, c], wasted[:, :, c], a_last,
+            loads, ks, warmup, reps, num_jobs, n,
+            ok=None if ok is None else ok[:, :, c, :],
+            horizon=None if horizon is None else horizon[:, :, c]))
+    return AssignmentSurface(assignments=assignments, sweeps=tuple(sweeps))

@@ -122,6 +122,19 @@ class ControllerConfig:
                                         # alarms again (p0 ~ 0 after the
                                         # heal commit leaves nothing for
                                         # the down side to detect); 0=off
+    #: candidate task placements for (k, assignment) co-optimization in
+    #: load-aware mode (``repro.assign`` strategies; () = placement off,
+    #: every plan is all-workers fan-out).  Put ``AllWorkers()`` first:
+    #: ties then prefer the paper's dispatch.  A ``SpeedAware`` entry
+    #: without explicit speeds is re-resolved against the controller's
+    #: measured per-worker estimates at every commit — slow-machine
+    #: packing, quarantine, and redundancy become one decision.
+    assignments: Tuple = ()
+    speed_forget: float = 0.995     # per-step decay of the per-worker
+                                    # speed accumulators
+    speed_min_mass: float = 4.0     # decayed per-worker sample mass
+                                    # before its own estimate is trusted
+                                    # (below: neutral 1.0)
 
     def __post_init__(self):
         if self.boot_samples < 2 or self.refit_samples < 2:
@@ -159,6 +172,19 @@ class ControllerConfig:
             raise ValueError(
                 f"loss_refresh_outcomes must be >= 0 (0 = off), "
                 f"got {self.loss_refresh_outcomes}")
+        if self.assignments:
+            from ..assign.strategies import Assignment
+            for a in self.assignments:
+                if not isinstance(a, Assignment):
+                    raise TypeError(
+                        f"assignments must be Assignment strategies, "
+                        f"got {a!r}")
+        if not (0.0 < self.speed_forget <= 1.0):
+            raise ValueError(
+                f"speed_forget must be in (0, 1], got {self.speed_forget}")
+        if self.speed_min_mass <= 0.0:
+            raise ValueError(
+                f"speed_min_mass must be > 0, got {self.speed_min_mass}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -325,6 +351,12 @@ class RedundancyController:
         self._w_out = np.zeros(scenario.n)    # decayed per-worker outcomes
         self._w_loss = np.zeros(scenario.n)   # decayed per-worker losses
         self._fell_back = False
+        # -- the placement (assignment) side --------------------------------
+        self._w_time = np.zeros(scenario.n)   # decayed per-worker service
+        self._w_tcnt = np.zeros(scenario.n)   # sums and sample masses
+        self._co_curve = None     # (assignments, ks, (A, K) cube) of the
+        #                           last co-optimized re-plan, for the
+        #                           placement hysteresis gate
 
     # -- read side ----------------------------------------------------------
     @property
@@ -338,6 +370,22 @@ class RedundancyController:
     @property
     def switches(self) -> List[ControlEvent]:
         return [e for e in self.events if e.switched]
+
+    def measured_speeds(self) -> Optional[Tuple[float, ...]]:
+        """Median-normalized per-worker speed multipliers from the
+        decayed accumulators (the ``Telemetry.worker_speed_stats``
+        convention: larger = slower).  None until at least one worker
+        clears the evidence floor; workers individually below it read as
+        neutral 1.0."""
+        mass = self._w_tcnt
+        good = mass >= self.config.speed_min_mass
+        if not good.any():
+            return None
+        est = self._w_time / np.maximum(mass, 1e-300)
+        med = float(np.median(est[good]))
+        speeds = np.ones(mass.size)
+        speeds[good] = est[good] / max(med, 1e-300)
+        return tuple(float(s) for s in speeds)
 
     def drift_events(self) -> List[ControlEvent]:
         return [e for e in self.events if e.kind == "drift"]
@@ -372,6 +420,15 @@ class RedundancyController:
         again — a double count that distorts the whole k-curve.
         """
         raw = np.asarray(worker_times, dtype=np.float64).ravel()
+        if raw.size == self.scenario.n:
+            # positional per-worker speed attribution (same alignment
+            # rule as the quarantine counters): decayed per-worker mean
+            # service times feed SpeedAware placement re-plans
+            fin = np.isfinite(raw) & (raw > 0)
+            self._w_time *= self.config.speed_forget
+            self._w_tcnt *= self.config.speed_forget
+            self._w_time[fin] += raw[fin]
+            self._w_tcnt[fin] += 1.0
         x = raw[np.isfinite(raw)]
         if x.size == 0:
             # the job still ARRIVED even if its step produced no finite
@@ -733,6 +790,13 @@ class RedundancyController:
                             >= self.config.switch_cost)
         if switched:
             self._policy = new
+        if self._co_curve is not None:
+            # placement rides the SAME commit: re-place the final policy
+            # (switched or held) at its k through the placement gate.  A
+            # held-but-re-placed policy still counts as a switch — the
+            # placement masks changed, actuators must redeploy.
+            self._policy, placed = self._place(self._policy)
+            switched = switched or placed
         # actuators see EVERY committed model, not just k switches —
         # model-dependent actuation (e.g. hedged-serving replicas) must
         # track a family change even when k* happens to stay put
@@ -785,13 +849,43 @@ class RedundancyController:
         from ..runtime.cluster import resolve_sweep_backend
         obj = self.load_objective
         am = self.arrival_model
-        run = resolve_sweep_backend(obj.backend)
         sc = dataclasses.replace(scenario, arrivals=am.process())
-        kwargs = dict(loads=[am.rate * unit], ks=sc.legal_ks(),
-                      num_jobs=obj.num_jobs, reps=obj.reps,
-                      preempt=obj.preempt,
+        self._co_curve = None
+        kwargs = dict(ks=sc.legal_ks(), num_jobs=obj.num_jobs,
+                      reps=obj.reps, preempt=obj.preempt,
                       cancel_overhead=obj.cancel_overhead, seed=obj.seed,
                       warmup=obj.warmup)
+        candidates = self._placement_candidates(sc)
+        if candidates is not None:
+            # (k, assignment) co-optimization: the whole grid in one
+            # compiled (cached) call; the returned curve is the ENVELOPE
+            # (per k, the best placement), so the k hysteresis gate in
+            # _commit judges k moves at their achievable best.  Measured
+            # per-worker speeds enter the plan scenario itself — the
+            # surface must SEE the heterogeneity for placements to
+            # differentiate (speeds are traced data: the executable
+            # stays warm across drifting estimates)
+            measured = self.measured_speeds()
+            if measured is not None and sc.worker_speeds is None \
+                    and len(measured) == sc.n:
+                sc = dataclasses.replace(sc, worker_speeds=measured)
+            from ..assign.surface import co_sweep
+            try:
+                surf = co_sweep(sc, [am.rate * unit], candidates,
+                                backend=obj.backend, **kwargs)
+            except Exception as exc:
+                if obj.backend == "oracle":
+                    raise
+                _warn_surface_fallback(exc)
+                self._fell_back = True
+                surf = co_sweep(sc, [am.rate * unit], candidates,
+                                backend="oracle", **kwargs)
+            cube = surf.metric(obj.metric)[:, 0, :]          # (A, K)
+            self._co_curve = (surf.assignments, list(surf.ks), cube)
+            return {int(k): float(v)
+                    for k, v in zip(surf.ks, cube.min(axis=0))}
+        run = resolve_sweep_backend(obj.backend)
+        kwargs["loads"] = [am.rate * unit]
         try:
             sw = run(sc, **kwargs)
         except Exception as exc:
@@ -805,6 +899,79 @@ class RedundancyController:
             self._fell_back = True
             sw = resolve_sweep_backend("oracle")(sc, **kwargs)
         return sw.curve(0, obj.metric)
+
+    def _placement_candidates(self, sc: Scenario):
+        """The legal, speed-resolved placement candidates for this plan
+        scenario (None = co-optimization off, the plain k-curve path).
+
+        ``SpeedAware`` entries without explicit speeds are re-resolved
+        against the controller's measured per-worker estimates (when the
+        fleet size still matches — a quarantine shrink invalidates the
+        per-index alignment, and the entry then falls back to the
+        scenario's speeds).  Candidates made illegal by a fleet shrink
+        (their g no longer divides n or some k) are dropped.
+        ``AllWorkers`` is always in the pool, first, so ties prefer the
+        paper's dispatch and fan-out is never optimized away untested.
+        """
+        if not self.config.assignments or self.load_objective is None:
+            return None
+        from ..assign.strategies import (AllWorkers, SpeedAware,
+                                         is_all_workers)
+        measured = self.measured_speeds()
+        ks = sc.legal_ks()
+        out = []
+        for a in self.config.assignments:
+            if isinstance(a, SpeedAware) and a.speeds is None and \
+                    measured is not None and len(measured) == sc.n:
+                a = a.with_speeds(measured)
+            try:
+                for k in ks:
+                    a.validate(sc.n, k)
+            except ValueError:
+                continue
+            out.append(a)
+        if not any(is_all_workers(a) for a in out):
+            out.insert(0, AllWorkers())
+        return out if len(out) > 1 else None
+
+    def _place(self, policy: Policy):
+        """The placement decision at the committed k, from the co-curve
+        of the commit in progress: the best candidate wins only past the
+        same hysteresis bar as a k switch (placement churn carries
+        redeploy cost too).  Placements are compared STRUCTURALLY
+        (``cache_signature``): a SpeedAware refresh with drifted measured
+        speeds updates the attached masks without reading as a switch.
+
+        Returns (re-placed policy, placement-moved flag).
+        """
+        from ..assign.strategies import is_all_workers
+        cands, ks, cube = self._co_curve
+        if policy.k not in ks:
+            return policy, False
+
+        def same(a, b) -> bool:
+            if is_all_workers(a) and is_all_workers(b):
+                return True
+            if is_all_workers(a) or is_all_workers(b):
+                return False
+            return a.cache_signature(policy.n, tuple(ks)) == \
+                b.cache_signature(policy.n, tuple(ks))
+
+        col = cube[:, ks.index(policy.k)]
+        ai = int(np.argmin(col))
+        best, best_cost = cands[ai], float(col[ai])
+        cur = policy.assignment
+        cur_idx = next((i for i, c in enumerate(cands) if same(c, cur)),
+                       None)
+        if cur_idx is None:
+            chosen = best       # current placement not even a candidate
+        else:
+            gain = float(col[cur_idx]) - best_cost
+            rel = gain / max(best_cost, 1e-12)
+            chosen = best if rel >= self.config.hysteresis \
+                else cands[cur_idx]
+        attach = None if is_all_workers(chosen) else chosen
+        return policy.with_assignment(attach), not same(chosen, cur)
 
     def _hedged_plan_dist(self, fitted: FittedModel):
         """What to PLAN under (the committed model itself is always the

@@ -634,14 +634,17 @@ class LossRateEstimator:
                          num_outcomes=self.w)
 
 
-def fit_window(samples: np.ndarray) -> FittedModel:
+def fit_window(samples: np.ndarray, task_size=None,
+               scaling=None) -> FittedModel:
     """One-shot exact-likelihood fit of a telemetry window — the
     change-point refit path: the SAME selection policy as
     ``Telemetry.fit`` (``core.distributions.select_service_time``),
-    returning the control loop's typed ``FittedModel``."""
+    returning the control loop's typed ``FittedModel``.  ``task_size`` /
+    ``scaling`` rank candidates by the task-level predictive likelihood
+    at the planned task size (additive scaling only)."""
     x = np.asarray(samples, dtype=np.float64).ravel()
     x = x[np.isfinite(x)]
-    d, family = select_service_time(x)
+    d, family = select_service_time(x, task_size=task_size, scaling=scaling)
     scale = bimodal_low_mode(x) if family == "bimodal" else 1.0
     return FittedModel(dist=d, family=family, scale=scale,
                        num_samples=float(x.size))

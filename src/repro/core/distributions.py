@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -411,8 +411,51 @@ def fit_service_time(samples: np.ndarray, family: str) -> ServiceTime:
     raise ValueError(f"unknown family {family!r}")
 
 
+#: minimum number of non-overlapping s-blocks for the task-level score
+#: to be statistically meaningful; below this the CU score is kept.
+MIN_TASK_BLOCKS = 8
+
+
+def task_loglik(dist: ServiceTime, samples: np.ndarray, task_size: int
+                ) -> float:
+    """Interval log-likelihood of s-block SUMS under the fitted model's
+    additive task law — the task-level predictive score.
+
+    The planner runs tasks of s CUs; under additive scaling a task's
+    time is the sum of s CU times, and the family that best explains CU
+    telemetry need not best explain the s-summed law the plan actually
+    depends on (a heavy CU tail central-limits away at large s; an atom
+    convolves into a lattice).  The samples are cut into
+    ``m = len(x) // s`` non-overlapping blocks, each block summed, and
+    every block sum y scored by the model's exact s-fold task
+    probability ``P{y - h/2 < Y <= y + h/2}`` via
+    ``core.scenario.task_survival`` (closed forms where available; the
+    Pareto-additive law is the cached 200k-draw MC tail, deterministic
+    under ``PRNGKey(12345)``, so scores are reproducible).  A BiModal
+    fit lives in the paper's unit-low-mode convention, so block sums are
+    normalized by ``bimodal_low_mode`` of the CU window first — the same
+    transform the fit applied.
+    """
+    from .scenario import task_survival  # late: scenario imports this module
+    x = np.asarray(samples, dtype=np.float64).ravel()
+    s = int(task_size)
+    m = x.size // s
+    if m < 2:
+        raise ValueError(
+            f"need at least 2 blocks of {s} samples, got {x.size}")
+    y = np.sort(x[:m * s].reshape(m, s).sum(axis=1))
+    if isinstance(dist, BiModal):
+        y = y / bimodal_low_mode(x)
+    h = sample_resolution(y)
+    p = task_survival(dist, Scaling.ADDITIVE, s, y - 0.5 * h) \
+        - task_survival(dist, Scaling.ADDITIVE, s, y + 0.5 * h)
+    return float(np.log(np.maximum(p, 1e-300)).sum())
+
+
 def select_service_time(samples: np.ndarray,
-                        families: Tuple[str, ...] = FAMILIES
+                        families: Tuple[str, ...] = FAMILIES,
+                        task_size: Optional[int] = None,
+                        scaling: Optional[Scaling] = None
                         ) -> Tuple[ServiceTime, str]:
     """Fit every candidate family and pick the best by exact
     log-likelihood (``service_loglik``) — the SINGLE selection policy
@@ -424,11 +467,24 @@ def select_service_time(samples: np.ndarray,
     density*interval), so it only competes when the window actually
     contains a second mode.  Ties resolve to the earlier family in
     ``families``.
+
+    With ``scaling=Scaling.ADDITIVE`` and a planned ``task_size`` s > 1
+    (and at least ``MIN_TASK_BLOCKS`` non-overlapping s-blocks of
+    telemetry), candidates are ranked by ``task_loglik`` instead: the
+    predictive likelihood of s-block sums under each model's own
+    additive task law.  Fits stay CU-level (the planner needs the CU
+    distribution); only the SCORE moves to the scale the plan is
+    evaluated at.  Non-additive scalings keep the CU score — their task
+    laws are monotone transforms of the CU law, so the ranking cannot
+    differ.
     """
     x = np.asarray(samples, dtype=np.float64).ravel()
     x = x[np.isfinite(x)]
     if x.size < 2:
         raise ValueError(f"need at least 2 samples, got {x.size}")
+    s = 1 if task_size is None else int(task_size)
+    task_level = (scaling is Scaling.ADDITIVE and s > 1
+                  and x.size // s >= MIN_TASK_BLOCKS)
     best = None
     for family in families:
         try:
@@ -437,7 +493,7 @@ def select_service_time(samples: np.ndarray,
             continue
         if isinstance(d, BiModal) and not (0.0 < d.eps < 1.0):
             continue
-        ll = service_loglik(d, x)
+        ll = task_loglik(d, x, s) if task_level else service_loglik(d, x)
         if best is None or ll > best[2]:
             best = (d, family, ll)
     if best is None:

@@ -119,8 +119,10 @@ def erlang_survival(t: np.ndarray, s: int, W: float = 1.0) -> np.ndarray:
     x = np.maximum(t / W, 0.0)
     # log terms: l*log(x) - lgamma(l+1); logsumexp over l then subtract x
     ls = np.arange(s, dtype=np.float64)
+    # x <= 0 rows are overwritten to survival 1.0 below; use logx = 0
+    # there instead of -inf so the l = 0 term is not 0 * -inf = nan
     with np.errstate(divide="ignore"):
-        logx = np.where(x > 0, np.log(np.maximum(x, 1e-300)), -np.inf)
+        logx = np.where(x > 0, np.log(np.maximum(x, 1e-300)), 0.0)
     logterms = ls[None, :] * logx.reshape(-1, 1) - np.array(
         [math.lgamma(l + 1.0) for l in range(s)]
     )

@@ -58,12 +58,18 @@ class Plan:
     curve: dict                 # k -> E[Y_{k:n}] for all divisors
     theorem_k: Optional[float]  # closed-form k* where the paper gives one
     theorem_name: Optional[str]
+    #: co-optimized task placement (None = all-workers fan-out); set by
+    #: ``Planner.co_plan`` when the (k, assignment) grid is argmin'd
+    #: jointly.  Excluded from the decision identity like Policy's field.
+    assignment: Optional["Assignment"] = dataclasses.field(
+        default=None, compare=False)
 
     @property
     def policy(self) -> "Policy":
-        """The decision as the runtime's typed ``Policy`` (lossless k<->c)."""
+        """The decision as the runtime's typed ``Policy`` (lossless k<->c;
+        a co-optimized placement rides along on ``Policy.assignment``)."""
         from .policy import Policy
-        return Policy(n=self.n, k=self.k)
+        return Policy(n=self.n, k=self.k, assignment=self.assignment)
 
 
 class Strategy:

@@ -111,15 +111,21 @@ class RetryPolicy:
 class Policy:
     """An [n, k] redundancy decision (k divides n).
 
-    ``retry`` attaches the relaunch axis (``RetryPolicy``) to the
-    redundancy decision; it is excluded from ordering/equality so the
+    ``retry`` attaches the relaunch axis (``RetryPolicy``) and
+    ``assignment`` the placement axis (``assign.Assignment``) to the
+    redundancy decision; both are excluded from ordering/equality so the
     decision identity stays the (n, k) pair — two plans that dispatch
-    identically compare equal even if their retry schedules differ.
+    the same amount of redundancy compare equal even if their retry
+    schedules or placements differ.
     """
 
     n: int
     k: int
     retry: Optional[RetryPolicy] = dataclasses.field(
+        default=None, compare=False)
+    #: task-to-worker placement; None = all-workers fan-out (the paper's
+    #: dispatch and the backward-compatible engine default)
+    assignment: Optional["Assignment"] = dataclasses.field(
         default=None, compare=False)
 
     def __post_init__(self):
@@ -133,10 +139,20 @@ class Policy:
         if self.retry is not None and not isinstance(self.retry, RetryPolicy):
             raise TypeError(
                 f"retry must be a RetryPolicy, got {self.retry!r}")
+        if self.assignment is not None:
+            from ..assign.strategies import Assignment
+            if not isinstance(self.assignment, Assignment):
+                raise TypeError(f"assignment must be an Assignment "
+                                f"strategy, got {self.assignment!r}")
+            self.assignment.validate(self.n, self.k)
 
     def with_retry(self, retry: Optional[RetryPolicy]) -> "Policy":
         """The same [n, k] decision under a different relaunch schedule."""
         return dataclasses.replace(self, retry=retry)
+
+    def with_assignment(self, assignment: Optional["Assignment"]) -> "Policy":
+        """The same [n, k] decision under a different task placement."""
+        return dataclasses.replace(self, assignment=assignment)
 
     # -- lossless re-expressions -------------------------------------------
     @property

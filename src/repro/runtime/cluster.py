@@ -69,6 +69,7 @@ class ClusterConfig:
     failures: Optional[FailureModel] = None     # None -> fault-free fleet
     retry: Optional[RetryPolicy] = None         # None -> RetryPolicy() when
     #                                             failures are modeled
+    assignment: Optional["Assignment"] = None   # None -> all-workers fan-out
 
     def __post_init__(self):
         if self.n_workers % self.k:
@@ -85,6 +86,12 @@ class ClusterConfig:
                 f"failures must be a FailureModel, got {self.failures!r}")
         if self.retry is not None and not isinstance(self.retry, RetryPolicy):
             raise TypeError(f"retry must be a RetryPolicy, got {self.retry!r}")
+        if self.assignment is not None:
+            from ..assign.strategies import Assignment
+            if not isinstance(self.assignment, Assignment):
+                raise TypeError(f"assignment must be an Assignment strategy, "
+                                f"got {self.assignment!r}")
+            self.assignment.validate(self.n_workers, self.k)
 
 
 @dataclasses.dataclass

@@ -50,11 +50,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..assign.strategies import (Assignment, GroupLanes, build_lanes,
+                                 group_ids_matrix, is_all_workers)
 from ..core.distributions import Scaling
 from ..core.policy import RetryPolicy
 from ..core.scenario import FailureModel, PoissonArrivals, Scenario
 from .cluster import ClusterConfig, ClusterResult, default_warmup
-from .failures import effective_finish, job_resolution, resolve_retry
+from .failures import (effective_finish, group_resolution, job_resolution,
+                       resolve_retry)
 
 __all__ = ["ClusterSweep", "resolve_failure_args", "simulate_one",
            "summarize_sweep", "sweep", "sweep_compile_count",
@@ -190,9 +193,158 @@ def _scan_lane_failures(A, S, k, cancel_overhead, preempt: bool, crash,
     return lat, okj, busy, wasted
 
 
+def _scan_lane_grouped(A, S, k, cancel_overhead, preempt: bool, r, gid,
+                       groups: int):
+    """The fault-free lane under a grouped assignment (per-group any-r).
+
+    ``gid`` (num_jobs, n) maps worker -> replication group per job (the
+    mask is DATA, riding the scan xs; ``groups`` — the max group count —
+    is the only static).  ``r`` is the traced within-group completion
+    rank k/g.  Group i resolves at its r-th smallest finish D_i and
+    cancels its OWN remnants at D_i (group-local, not at job
+    completion); the job completes at D = max_i D_i.  With one group and
+    r = k this is exactly ``_scan_lane``; padded empty groups (lanes
+    with g < groups) sort to +inf and drop out of the max.
+    """
+    n = S.shape[1]
+    garange = jnp.arange(groups, dtype=jnp.int32)
+
+    def step(carry, inp):
+        F, busy, wasted = carry
+        a, srow, grow = inp
+        start = jnp.maximum(a, F)
+        nat = start + srow
+        maskg = grow[None, :] == garange[:, None]          # (G, n)
+        natm = jnp.where(maskg, nat[None, :], jnp.inf)
+        # r-th smallest per group via comparison counts — min{v : #(<=v)
+        # >= r} — instead of jnp.sort: XLA's CPU sort is comparator-
+        # driven and ~8x slower than SIMD compares at these widths, and
+        # this runs every job step of the co-planning hot loop.  Exact
+        # same value (including ties), so g=1 stays bit-equal to the
+        # ungrouped lane; padded empty rows count inf<=inf and read inf.
+        cnt = (natm[:, None, :] <= natm[:, :, None]).sum(axis=2)
+        Dg = jnp.where(cnt >= r, natm, jnp.inf).min(axis=1)
+        nonempty = maskg.any(axis=1)
+        D = jnp.where(nonempty, Dg, -jnp.inf).max()
+        Dw = Dg[grow]                                      # per-worker cutoff
+        # per group: first r finishers, ties at D_i by worker index
+        # (membership-masked: a padded empty group has D_i = +inf, and
+        # inf == inf must not mark anybody)
+        ltg = maskg & (natm < Dg[:, None])
+        eqg = maskg & (natm == Dg[:, None])
+        take_eq = r - ltg.sum(axis=1)
+        compg = ltg | (eqg & (jnp.cumsum(eqg, axis=1) * eqg
+                              <= take_eq[:, None]))
+        completed = compg.any(axis=0)
+        inservice = (~completed) & (start < Dw)
+        if preempt:
+            cut = Dw - start + cancel_overhead
+            run = jnp.where(completed, srow,
+                            jnp.where(inservice, cut, 0.0))
+            waste = jnp.where(inservice, cut, 0.0)
+            F_next = jnp.where(completed, nat,
+                               jnp.where(inservice, Dw + cancel_overhead, F))
+        else:
+            run = jnp.where(completed | inservice, srow, 0.0)
+            waste = jnp.where(inservice, srow, 0.0)
+            F_next = jnp.where(completed | inservice, nat, F)
+        return (F_next, busy + run.sum(), wasted + waste.sum()), D - a
+
+    zero = jnp.zeros((), S.dtype)
+    (_, busy, wasted), lat = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), (A, S, gid))
+    return lat, busy, wasted
+
+
+def _scan_lane_grouped_failures(A, S, k, cancel_overhead, preempt: bool,
+                                crash, recover, jitter_u,
+                                retry: RetryPolicy, r, gid, groups: int):
+    """The failure lane under a grouped assignment.
+
+    Same clairvoyant recurrence as ``_scan_lane_failures`` with
+    ``failures.group_resolution`` in place of ``job_resolution``: group i
+    completes at its r-th surviving finish or fails at its
+    (c-r+1)-th terminal loss, the job succeeds iff every group does
+    (completing at max_i D_i) and FAILS the instant the first group
+    exhausts its replicas.  Per-worker cutoffs are
+    C_w = min(D_{g(w)}, D): a group cancels its own remnants at its own
+    resolution, and a job failure cuts every still-unresolved group at
+    the failure instant.  The first-r tie cap applies only to groups
+    that resolved successfully at or before D; survivors in any other
+    group complete whenever they finish by the cutoff (the failure-mode
+    rule of the ungrouped lane, applied per group).
+    """
+    n = S.shape[1]
+    crash = jnp.asarray(crash, S.dtype)
+    recover = jnp.asarray(recover, S.dtype)
+    have_jitter = jitter_u is not None
+    garange = jnp.arange(groups, dtype=jnp.int32)
+
+    def step(carry, inp):
+        F, busy, wasted = carry
+        if have_jitter:
+            a, srow, grow, urow = inp
+        else:
+            a, srow, grow = inp
+            urow = None
+        start = jnp.maximum(a, F)
+        nat, ok, _ = effective_finish(jnp, start, srow, crash, recover,
+                                      retry, urow)
+        maskg = grow[None, :] == garange[:, None]          # (G, n)
+        Dg, gok, D, success = group_resolution(jnp, nat, ok, maskg, r)
+        Cg = jnp.minimum(Dg, D)
+        Cw = Cg[grow]
+        natqm = jnp.where(maskg & ok[None, :], nat[None, :], jnp.inf)
+        ltg = natqm < Cg[:, None]
+        eqg = natqm == Cg[:, None]
+        res_ok = gok & (Dg <= D)
+        take_eq = jnp.where(res_ok, r - ltg.sum(axis=1), eqg.sum(axis=1))
+        compg = ltg | (eqg & (jnp.cumsum(eqg, axis=1) * eqg
+                              <= take_eq[:, None]))
+        completed = compg.any(axis=0)
+        resolved_fail = (~ok) & (nat <= Cw)
+        engaged = (~completed) & (~resolved_fail) & (start < Cw)
+        occ = nat - start
+        if preempt:
+            cut = Cw - start + cancel_overhead
+            run = jnp.where(completed | resolved_fail, occ,
+                            jnp.where(engaged, cut, 0.0))
+            waste = jnp.where(resolved_fail, occ,
+                              jnp.where(engaged, cut, 0.0))
+            F_next = jnp.where(completed | resolved_fail, nat,
+                               jnp.where(engaged, Cw + cancel_overhead, F))
+        else:
+            started = completed | resolved_fail | engaged
+            run = jnp.where(started, occ, 0.0)
+            waste = jnp.where(resolved_fail | engaged, occ, 0.0)
+            F_next = jnp.where(started, nat, F)
+        return (F_next, busy + run.sum(), wasted + waste.sum()), \
+            (D - a, success)
+
+    zero = jnp.zeros((), S.dtype)
+    xs = (A, S, gid, jitter_u) if have_jitter else (A, S, gid)
+    (_, busy, wasted), (lat, okj) = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), xs)
+    return lat, okj, busy, wasted
+
+
 @functools.partial(jax.jit, static_argnames=("preempt",))
 def _one_kernel(A, S, k, cancel_overhead, preempt):
     return _scan_lane(A, S, k, cancel_overhead, preempt)
+
+
+@functools.partial(jax.jit, static_argnames=("preempt", "groups"))
+def _one_kernel_grouped(A, S, k, cancel_overhead, r, gid, preempt, groups):
+    return _scan_lane_grouped(A, S, k, cancel_overhead, preempt, r, gid,
+                              groups)
+
+
+@functools.partial(jax.jit, static_argnames=("preempt", "retry", "groups"))
+def _one_kernel_grouped_failures(A, S, k, cancel_overhead, crash, recover,
+                                 jitter_u, r, gid, preempt, retry, groups):
+    return _scan_lane_grouped_failures(A, S, k, cancel_overhead, preempt,
+                                       crash, recover, jitter_u, retry, r,
+                                       gid, groups)
 
 
 @functools.partial(jax.jit, static_argnames=("preempt", "retry"))
@@ -225,19 +377,43 @@ def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
     svc, arrivals = _draw_inputs(cfg, dist, scaling, delta,
                                  service_times, arrival_times)
     fail = _draw_failures(cfg, crash_times, recovery_times)
+    assignment = getattr(cfg, "assignment", None)
+    lanes = None
+    if not is_all_workers(assignment):
+        g, r, gid = group_ids_matrix(assignment, cfg.n_workers, cfg.k,
+                                     cfg.num_jobs, cfg.worker_speeds)
+        lanes = (g, jnp.int32(r), jnp.asarray(gid, jnp.int32))
     if fail is None:
-        lat, busy, wasted = _one_kernel(
-            jnp.asarray(arrivals, jnp.float32), jnp.asarray(svc, jnp.float32),
-            jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead), cfg.preempt)
+        if lanes is None:
+            lat, busy, wasted = _one_kernel(
+                jnp.asarray(arrivals, jnp.float32),
+                jnp.asarray(svc, jnp.float32),
+                jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead),
+                cfg.preempt)
+        else:
+            g, r, gid = lanes
+            lat, busy, wasted = _one_kernel_grouped(
+                jnp.asarray(arrivals, jnp.float32),
+                jnp.asarray(svc, jnp.float32),
+                jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead), r, gid,
+                cfg.preempt, g)
         okj = None
     else:
         crash, recover, jitter_u, retry = fail
-        lat, okj, busy, wasted = _one_kernel_failures(
-            jnp.asarray(arrivals, jnp.float32), jnp.asarray(svc, jnp.float32),
-            jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead),
-            jnp.asarray(crash, jnp.float32), jnp.asarray(recover, jnp.float32),
-            None if jitter_u is None else jnp.asarray(jitter_u, jnp.float32),
-            cfg.preempt, retry)
+        jargs = (jnp.asarray(arrivals, jnp.float32),
+                 jnp.asarray(svc, jnp.float32),
+                 jnp.int32(cfg.k), jnp.float32(cfg.cancel_overhead),
+                 jnp.asarray(crash, jnp.float32),
+                 jnp.asarray(recover, jnp.float32),
+                 None if jitter_u is None
+                 else jnp.asarray(jitter_u, jnp.float32))
+        if lanes is None:
+            lat, okj, busy, wasted = _one_kernel_failures(
+                *jargs, cfg.preempt, retry)
+        else:
+            g, r, gid = lanes
+            lat, okj, busy, wasted = _one_kernel_grouped_failures(
+                *jargs, r, gid, cfg.preempt, retry, g)
         okj = np.asarray(okj, dtype=bool)
     lat = np.asarray(lat, dtype=np.float64)
     busy = float(busy)
@@ -259,7 +435,8 @@ def simulate_one(cfg: ClusterConfig, dist, scaling: Scaling,
 
 def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
                 ks, num_jobs, reps, preempt, arrivals, delta,
-                failures=None, retry=None):
+                failures=None, retry=None, groups=None, group_r=None,
+                group_ids=None):
     """The (reps x loads x ks) lane grid, shared by the two jit wrappers:
     ``_sweep_kernel`` folds dist/arrival parameters as compile-time
     constants (one-off surfaces), while the compiled-surface cache
@@ -273,6 +450,13 @@ def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
     k and load lanes — machines crash identically whatever policy serves
     them, the CRN discipline that pairs the failure surface.  Returns an
     extra (reps, L, K, num_jobs) success mask and per-lane horizon.
+
+    A grouped assignment arrives as (``groups`` static max group count,
+    ``group_r`` (K,) within-group ranks, ``group_ids`` (K, num_jobs, n)
+    worker->group masks — traced DATA, so re-placements reuse the warm
+    executable).  Task size s = n/k is independent of the grouping, so
+    the CRN service tables are shared unchanged across assignment lanes:
+    placement comparisons are exactly paired.
     """
     global _SWEEP_TRACES
     _SWEEP_TRACES += 1  # trace-time side effect: counts compiles, not calls
@@ -298,12 +482,23 @@ def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
             lambda r: arrivals.times(k_arrv, num_jobs, r))(loads)
 
         if retry is None:
-            def lane(A, S, k):
-                return _scan_lane(A, S, k, cancel_overhead, preempt)
+            if groups is None:
+                def lane(A, S, k):
+                    return _scan_lane(A, S, k, cancel_overhead, preempt)
 
-            over_k = jax.vmap(lane, in_axes=(None, 0, 0))
-            over_loads = jax.vmap(over_k, in_axes=(0, None, None))
-            lat, busy, wasted = over_loads(A_all, S_all, k_arr)
+                over_k = jax.vmap(lane, in_axes=(None, 0, 0))
+                over_loads = jax.vmap(over_k, in_axes=(0, None, None))
+                lat, busy, wasted = over_loads(A_all, S_all, k_arr)
+            else:
+                def lane(A, S, k, r, gid):
+                    return _scan_lane_grouped(A, S, k, cancel_overhead,
+                                              preempt, r, gid, groups)
+
+                over_k = jax.vmap(lane, in_axes=(None, 0, 0, 0, 0))
+                over_loads = jax.vmap(
+                    over_k, in_axes=(0, None, None, None, None))
+                lat, busy, wasted = over_loads(A_all, S_all, k_arr,
+                                               group_r, group_ids)
             return lat, busy, wasted, A_all[:, -1]
 
         # -- failures: one fleet schedule per rep, shared across lanes ----
@@ -321,13 +516,24 @@ def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
                 jax.random.fold_in(rep_key, 8),
                 (num_jobs, n, retry.max_attempts - 1))
 
-        def lane(A, S, k):
-            return _scan_lane_failures(A, S, k, cancel_overhead, preempt,
-                                       crash, recover, jitter_u, retry)
+        if groups is None:
+            def lane(A, S, k):
+                return _scan_lane_failures(A, S, k, cancel_overhead, preempt,
+                                           crash, recover, jitter_u, retry)
 
-        over_k = jax.vmap(lane, in_axes=(None, 0, 0))
-        over_loads = jax.vmap(over_k, in_axes=(0, None, None))
-        lat, okj, busy, wasted = over_loads(A_all, S_all, k_arr)
+            over_k = jax.vmap(lane, in_axes=(None, 0, 0))
+            over_loads = jax.vmap(over_k, in_axes=(0, None, None))
+            lat, okj, busy, wasted = over_loads(A_all, S_all, k_arr)
+        else:
+            def lane(A, S, k, r, gid):
+                return _scan_lane_grouped_failures(
+                    A, S, k, cancel_overhead, preempt, crash, recover,
+                    jitter_u, retry, r, gid, groups)
+
+            over_k = jax.vmap(lane, in_axes=(None, 0, 0, 0, 0))
+            over_loads = jax.vmap(over_k, in_axes=(0, None, None, None, None))
+            lat, okj, busy, wasted = over_loads(A_all, S_all, k_arr,
+                                                group_r, group_ids)
         # failure resolutions need not be monotone in j, so the horizon
         # is the max resolution instant, not the last job's
         horizon = (A_all[:, None, :] + lat).max(axis=-1)
@@ -338,7 +544,15 @@ def _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling, n,
 
 _sweep_kernel = functools.partial(jax.jit, static_argnames=(
     "dist", "scaling", "n", "ks", "num_jobs", "reps", "preempt",
-    "arrivals", "delta", "failures", "retry"))(_sweep_core)
+    "arrivals", "delta", "failures", "retry", "groups"))(_sweep_core)
+
+
+def lanes_as_jnp(lanes: Optional[GroupLanes]):
+    """GroupLanes -> the (groups, group_r, group_ids) kernel triple."""
+    if lanes is None:
+        return None, None, None
+    return (lanes.groups, jnp.asarray(lanes.r, jnp.int32),
+            jnp.asarray(lanes.gid, jnp.int32))
 
 
 @dataclasses.dataclass
@@ -501,7 +715,8 @@ def sweep(scenario: Scenario, loads: Sequence[float],
           ks: Optional[Sequence[int]] = None, num_jobs: int = 1000,
           reps: int = 1, preempt: bool = True, cancel_overhead: float = 0.0,
           seed: int = 0, warmup: Optional[int] = None,
-          retry: Optional[RetryPolicy] = None) -> ClusterSweep:
+          retry: Optional[RetryPolicy] = None,
+          assignment: Optional[Assignment] = None) -> ClusterSweep:
     """Every (load, k) queueing cell of a scenario in one compiled call.
 
     ``loads`` are mean arrival rates; the scenario's ``arrivals`` process
@@ -516,18 +731,24 @@ def sweep(scenario: Scenario, loads: Sequence[float],
     recurrence (relaunches under ``retry``, default ``RetryPolicy()``);
     the resulting surface carries ``failure_rate`` and its latency stats
     cover completed jobs only.
+
+    ``assignment`` switches every lane to the grouped per-group-any-r
+    recurrence (see ``assign.strategies``); ``None``/``AllWorkers`` run
+    the historical ungrouped path bit-for-bit.
     """
     n = scenario.n
     ks, loads, warmup, arrivals, speeds = validate_sweep_args(
         scenario, loads, ks, num_jobs, reps, warmup)
     failures, retry = resolve_failure_args(scenario, retry)
+    groups, group_r, group_ids = lanes_as_jnp(build_lanes(
+        assignment, n, ks, int(num_jobs), scenario.worker_speeds))
 
     out = _sweep_kernel(
         jax.random.PRNGKey(seed), jnp.asarray(loads, jnp.float32), speeds,
         jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
         ks, int(num_jobs), int(reps), bool(preempt), arrivals,
         None if scenario.delta is None else float(scenario.delta),
-        failures, retry)
+        failures, retry, groups, group_r, group_ids)
 
     if retry is None:
         lat, busy, wasted, a_last = out

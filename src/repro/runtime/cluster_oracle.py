@@ -33,6 +33,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..assign.strategies import group_ids_matrix, is_all_workers
 from ..core.distributions import Scaling, ServiceTime
 from ..core.policy import RetryPolicy
 from ..core.scenario import Scenario, sample_task_matrix
@@ -173,6 +174,17 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
     if fail is not None:
         return _simulate_oracle_failures(cfg, svc, arrivals, *fail)
 
+    # grouped assignment: per-group any-r completion with GROUP-LOCAL
+    # remnant cancellation at each group's own resolution instant — the
+    # event-loop mirror of ``_scan_lane_grouped`` (see assign.strategies)
+    grouped = not is_all_workers(getattr(cfg, "assignment", None))
+    if grouped:
+        g, gneed, gid = group_ids_matrix(cfg.assignment, n, k,
+                                         cfg.num_jobs, cfg.worker_speeds)
+        done_groups: set = set()              # resolved (job, group) pairs
+        fin_g: Dict[int, List[int]] = {}
+        groups_done: Dict[int, int] = {}
+
     workers = [_Worker() for _ in range(n)]
     jobs: Dict[int, JobStats] = {}
     finished_tasks: Dict[int, int] = {}
@@ -185,11 +197,17 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
         heapq.heappush(events, (float(t), seq, "arrive", (j,)))
         seq += 1
 
+    def purged(job: int, widx: int) -> bool:
+        """Queued task no longer needed: its job — or, under a grouped
+        assignment, its (job, group) — already resolved."""
+        return job in done_jobs or (
+            grouped and (job, gid[job, widx]) in done_groups)
+
     def start_next(w: _Worker, widx: int, now: float):
         nonlocal seq
         while w.queue:
             job, st = w.queue.popleft()
-            if job in done_jobs:
+            if purged(job, widx):
                 continue                      # purged from queue (free)
             w.current = (job, now, st)
             w.busy_until = now + st
@@ -199,6 +217,30 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
             return
         w.current = None
 
+    def cancel_inflight(job: int, now: float, widxs, skip: _Worker):
+        """Cancel a resolved (job|group)'s running remnants: purge
+        queues lazily; preempt in-service tasks at ``now`` with the
+        cancel-overhead window occupying the server."""
+        nonlocal seq
+        for widx2 in widxs:
+            w2 = workers[widx2]
+            if w2 is skip:
+                continue
+            if w2.current is not None and w2.current[0] == job:
+                if cfg.preempt:
+                    _, t02, _ = w2.current
+                    oh = cfg.cancel_overhead
+                    w2.busy_time += (now - t02) + oh
+                    w2.wasted_time += (now - t02) + oh
+                    w2.busy_until = now + oh
+                    if oh > 0.0:
+                        w2.current = (_SENTINEL, now, oh)
+                        heapq.heappush(
+                            events, (now + oh, seq, "free", (widx2,)))
+                        seq += 1
+                    else:
+                        start_next(w2, widx2, now)
+
     completed = 0
     while events and completed < cfg.num_jobs:
         now, _, kind, payload = heapq.heappop(events)
@@ -206,6 +248,9 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
             (j,) = payload
             jobs[j] = JobStats(arrival=now)
             finished_tasks[j] = 0
+            if grouped:
+                fin_g[j] = [0] * g
+                groups_done[j] = 0
             for widx, w in enumerate(workers):
                 w.queue.append((j, svc[j, widx]))
                 if w.current is None:
@@ -223,9 +268,9 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
                 continue                      # stale event (cancelled)
             _, t0, st = w.current
             w.busy_time += now - t0
-            if job in done_jobs:
+            if purged(job, widx):
                 w.wasted_time += now - t0     # remnant ran to completion
-            else:
+            elif not grouped:
                 finished_tasks[job] += 1
                 if finished_tasks[job] == k:
                     done_jobs.add(job)
@@ -234,24 +279,22 @@ def simulate_oracle(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,
                     # cancel: purge queues; preempt in-service remnants.
                     # cancel_overhead is accounted busy AND wasted, and
                     # occupies the server until the purge window ends.
-                    for widx2, w2 in enumerate(workers):
-                        if w2 is w:
-                            continue
-                        if w2.current is not None and w2.current[0] == job:
-                            if cfg.preempt:
-                                _, t02, _ = w2.current
-                                oh = cfg.cancel_overhead
-                                w2.busy_time += (now - t02) + oh
-                                w2.wasted_time += (now - t02) + oh
-                                w2.busy_until = now + oh
-                                if oh > 0.0:
-                                    w2.current = (_SENTINEL, now, oh)
-                                    heapq.heappush(
-                                        events,
-                                        (now + oh, seq, "free", (widx2,)))
-                                    seq += 1
-                                else:
-                                    start_next(w2, widx2, now)
+                    cancel_inflight(job, now, range(n), w)
+            else:
+                gi = gid[job, widx]
+                fin_g[job][gi] += 1
+                if fin_g[job][gi] == gneed:
+                    # group resolved: cancel ITS remnants here and now —
+                    # group-local, the job may still be racing elsewhere
+                    done_groups.add((job, int(gi)))
+                    groups_done[job] += 1
+                    cancel_inflight(
+                        job, now,
+                        [i for i in range(n) if gid[job, i] == gi], w)
+                    if groups_done[job] == g:
+                        done_jobs.add(job)
+                        jobs[job].done = now
+                        completed += 1
             start_next(w, widx, now)
 
     horizon = max((j.done for j in jobs.values() if j.done > 0),
@@ -334,6 +377,20 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
     kills = retry.kills_on_timeout
     losses_to_fail = n - k + 1
 
+    # grouped assignment: each group of c = n/g workers must deliver
+    # r = k/g survivors; a group FAILS at its (c-r+1)-th terminal loss
+    # and the job fails the instant the FIRST group does (see
+    # failures.group_resolution for the closed-form twin)
+    grouped = not is_all_workers(getattr(cfg, "assignment", None))
+    if grouped:
+        g, gneed, gid = group_ids_matrix(cfg.assignment, n, k,
+                                         cfg.num_jobs, cfg.worker_speeds)
+        group_losses_to_fail = n // g - gneed + 1
+        done_groups: set = set()              # resolved (job, group) pairs
+        fin_g: Dict[int, List[int]] = {}
+        lost_g: Dict[int, List[int]] = {}
+        groups_done: Dict[int, int] = {}
+
     workers = [_FWorker() for _ in range(n)]
     jobs: Dict[int, JobStats] = {}
     finished_tasks: Dict[int, int] = {}
@@ -368,12 +425,18 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
         else:
             push(now + st, "finish", (widx, job, now))
 
+    def purged(job: int, widx: int) -> bool:
+        """Task no longer needed: its job — or, under a grouped
+        assignment, its (job, group) — already resolved."""
+        return job in done_jobs or (
+            grouped and (job, gid[job, widx]) in done_groups)
+
     def start_next(w: _FWorker, widx: int, now: float):
         if not w.up or w.current is not None:
             return
         while w.queue:
             job, st = w.queue.popleft()
-            if job in done_jobs:
+            if purged(job, widx):
                 continue                  # purged from queue (free)
             dispatch(w, widx, job, max(jobs[job].arrival, w.F), st, 1, now)
             return
@@ -382,15 +445,22 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
                           release: float):
         """A task exhausted its attempts: occupancy is wasted, the
         worker's logical free time is the release instant, and (for a
-        live job) the loss counts toward job failure."""
+        live job/group) the loss counts toward failure."""
         w.busy_time += release - t0
         w.wasted_time += release - t0
         w.F = release
         w.current = None
-        if job not in done_jobs:
-            lost_tasks[job] += 1
-            if lost_tasks[job] == losses_to_fail:
-                resolve_job(job, release, success=False)
+        if not purged(job, widx):
+            if not grouped:
+                lost_tasks[job] += 1
+                if lost_tasks[job] == losses_to_fail:
+                    resolve_job(job, release, success=False)
+            else:
+                gi = gid[job, widx]
+                lost_g[job][gi] += 1
+                # one exhausted group sinks the whole job, instantly
+                if lost_g[job][gi] == group_losses_to_fail:
+                    resolve_job(job, release, success=False)
         start_next(w, widx, release)
 
     def fail_attempt(w: _FWorker, widx: int, job: int, t0: float, st: float,
@@ -409,12 +479,11 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
         else:                             # timeout exhaust: final here
             resolve_task_loss(w, widx, job, t0, resume)
 
-    def resolve_job(job: int, now: float, success: bool):
-        nonlocal resolved
-        done_jobs.add(job)
-        jobs[job].done = now
-        job_ok[job] = success
-        resolved += 1
+    def cancel_tasks(job: int, now: float, widxs):
+        """Cancel ``job``'s remnants on ``widxs`` at resolution instant
+        ``now`` — shared by group-local resolution (a group's members at
+        its own instant) and job resolution (every not-yet-resolved
+        group at D)."""
         oh = cfg.cancel_overhead
 
         def cut(w2: _FWorker, widx2: int, t0: float):
@@ -429,7 +498,8 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
                 w2.current = None
                 start_next(w2, widx2, now)
 
-        for widx2, w2 in enumerate(workers):
+        for widx2 in widxs:
+            w2 = workers[widx2]
             cur = w2.current
             if cur is not None and cur[0] != "purge" and cur[1] == job:
                 # in flight — running, backing off, or dying.  Preempt:
@@ -447,9 +517,9 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
             # recurrence classifies on: engaged if that precedes D, even
             # though no attempt ever ran — so cut it (or, without
             # preempt, launch it as a remnant at recovery).
-            while w2.queue and w2.queue[0][0] in done_jobs \
-                    and w2.queue[0][0] != job:
-                w2.queue.popleft()        # earlier resolved jobs: free
+            while w2.queue and w2.queue[0][0] != job \
+                    and purged(w2.queue[0][0], widx2):
+                w2.queue.popleft()        # earlier resolved work: free
             if not w2.queue or w2.queue[0][0] != job:
                 continue
             t0 = max(jobs[job].arrival, w2.F)
@@ -462,6 +532,21 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
                 w2.current = ("wait", job, t0, st, 0, t0)
                 push(now, "redispatch", (widx2, job, 0))
 
+    def resolve_job(job: int, now: float, success: bool):
+        nonlocal resolved
+        done_jobs.add(job)
+        jobs[job].done = now
+        job_ok[job] = success
+        resolved += 1
+        if grouped:
+            # groups that already resolved cancelled their own remnants
+            # at their own instants; only unresolved groups remain
+            widxs = [i for i in range(n)
+                     if (job, gid[job, i]) not in done_groups]
+        else:
+            widxs = range(n)
+        cancel_tasks(job, now, widxs)
+
     while events and resolved < cfg.num_jobs:
         now, _, kind, payload = heapq.heappop(events)
         if kind == "arrive":
@@ -469,6 +554,10 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
             jobs[j] = JobStats(arrival=now)
             finished_tasks[j] = 0
             lost_tasks[j] = 0
+            if grouped:
+                fin_g[j] = [0] * g
+                lost_g[j] = [0] * g
+                groups_done[j] = 0
             for widx, w in enumerate(workers):
                 w.queue.append((j, svc[j, widx]))
                 start_next(w, widx, now)
@@ -540,12 +629,27 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
             w.busy_time += now - t0
             w.F = now
             w.current = None
-            if job in done_jobs:
+            if purged(job, widx):
                 w.wasted_time += now - t0   # remnant ran out (no preempt)
-            else:
+            elif not grouped:
                 finished_tasks[job] += 1
                 if finished_tasks[job] == k:
                     resolve_job(job, now, success=True)
+            else:
+                gi = gid[job, widx]
+                fin_g[job][gi] += 1
+                if fin_g[job][gi] == gneed:
+                    # group delivered its r survivors: cancel ITS
+                    # remnants now (group-local); the job resolves once
+                    # every group has
+                    done_groups.add((job, int(gi)))
+                    groups_done[job] += 1
+                    cancel_tasks(
+                        job, now,
+                        [i for i in range(n)
+                         if gid[job, i] == gi and i != widx])
+                    if groups_done[job] == g:
+                        resolve_job(job, now, success=True)
             start_next(w, widx, now)
 
     order = sorted(jobs)
@@ -568,7 +672,8 @@ def _simulate_oracle_failures(cfg: ClusterConfig, svc: np.ndarray,
 def sweep_oracle(scenario: Scenario, loads, ks=None, num_jobs: int = 1000,
                  reps: int = 1, preempt: bool = True,
                  cancel_overhead: float = 0.0, seed: int = 0,
-                 warmup=None, retry: Optional[RetryPolicy] = None):
+                 warmup=None, retry: Optional[RetryPolicy] = None,
+                 assignment=None):
     """The (loads x ks) surface on the oracle, cell by cell — the slow
     validation twin of ``cluster_batched.sweep`` with the same
     ``ClusterSweep`` result type and defaults (``warmup=None`` resolves
@@ -616,7 +721,8 @@ def sweep_oracle(scenario: Scenario, loads, ks=None, num_jobs: int = 1000,
                     arrivals=scenario.arrivals,
                     worker_speeds=scenario.worker_speeds,
                     failures=failures,
-                    retry=retry if faulty else None)
+                    retry=retry if faulty else None,
+                    assignment=assignment)
                 res = simulate_oracle(cfg, scenario.dist, scenario.scaling,
                                       delta=scenario.delta)
                 lats.append(res.steady_latencies)

@@ -36,8 +36,8 @@ import numpy as np
 
 from ..core.policy import RetryPolicy
 
-__all__ = ["as_failure_arrays", "effective_finish", "job_resolution",
-           "resolve_retry"]
+__all__ = ["as_failure_arrays", "effective_finish", "group_resolution",
+           "job_resolution", "resolve_retry"]
 
 
 def resolve_retry(retry: Optional[RetryPolicy]) -> RetryPolicy:
@@ -146,6 +146,43 @@ def job_resolution(xp, nat, ok, k, n):
     d_fail = xp.sort(failq)[n - k]
     success = d_ok <= d_fail
     return xp.where(success, d_ok, d_fail), success
+
+
+def group_resolution(xp, nat, ok, maskg, r):
+    """Group-aware job resolution: per-group any-r, max over groups.
+
+    ``maskg`` (G, n) is the worker->group membership mask (padded rows
+    may be all-False), ``r`` the within-group completion rank k/g.  Group
+    i completes at its r-th smallest surviving release ``d_ok_i``, or
+    FAILS at its (c_i - r + 1)-th smallest terminal loss ``d_fail_i``
+    (c_i group size) — per group exactly :func:`job_resolution` with
+    (k, n) -> (r, c_i).  The JOB then succeeds iff every group succeeds,
+    completing at the max of the group instants; it fails the instant
+    the FIRST group exhausts its replicas.
+
+    Returns ``(Dg, group_ok, D, success)``: per-group resolution
+    instants (+inf on padded empty rows), per-group success, the job
+    resolution instant, and job success.  With one all-True group row
+    and r = k this reduces bit-for-bit to :func:`job_resolution`.
+    """
+    gsize = maskg.sum(axis=1)
+    natq = xp.where(maskg & ok[None, :], nat[None, :], xp.inf)
+    failq = xp.where(maskg & ~ok[None, :], nat[None, :], xp.inf)
+    d_ok = xp.take_along_axis(
+        xp.sort(natq, axis=1),
+        xp.full((maskg.shape[0], 1), r - 1, dtype=xp.int32), axis=1)[:, 0]
+    # loss rank c - r + 1 -> sorted index c - r, clipped at 0 so padded
+    # (c = 0) rows read a junk-but-unused +inf entry
+    fidx = xp.clip(gsize - r, 0, maskg.shape[1] - 1).astype(xp.int32)
+    d_fail = xp.take_along_axis(
+        xp.sort(failq, axis=1), fidx[:, None], axis=1)[:, 0]
+    nonempty = gsize > 0
+    group_ok = ~nonempty | (d_ok <= d_fail)
+    Dg = xp.where(group_ok, d_ok, d_fail)
+    success = xp.all(group_ok)
+    d_done = xp.where(nonempty, Dg, -xp.inf).max()
+    failg = xp.where(group_ok, xp.inf, Dg)
+    return Dg, group_ok, xp.where(success, d_done, failg.min()), success
 
 
 def as_failure_arrays(crash_times: np.ndarray, recovery_times: np.ndarray,

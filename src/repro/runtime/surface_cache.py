@@ -41,14 +41,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..assign.strategies import Assignment, build_lanes
 from ..core.policy import RetryPolicy
 from ..core.scenario import Scenario
-from .cluster_batched import (ClusterSweep, _sweep_core,
+from .cluster_batched import (ClusterSweep, _sweep_core, lanes_as_jnp,
                               resolve_failure_args, summarize_sweep,
                               validate_sweep_args)
 
-__all__ = ["cached_sweep", "load_bucket", "reset_surface_cache_stats",
-           "surface_cache_stats"]
+__all__ = ["cached_sweep", "load_bucket", "record_cache_key",
+           "reset_surface_cache_stats", "surface_cache_stats"]
 
 #: Load-grid lengths are padded up to one of these (ascending).
 _LOAD_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -88,20 +89,37 @@ def reset_surface_cache_stats() -> None:
     _MISSES = 0
 
 
+def record_cache_key(cache_key: tuple) -> bool:
+    """Count one cache lookup; True when the key was already compiled.
+    Shared by ``cached_sweep`` and the co-optimizing assignment surface
+    (``assign.surface.co_sweep``), which builds its own flattened key."""
+    global _HITS, _MISSES
+    if cache_key in _KEYS:
+        _HITS += 1
+        _KEYS[cache_key] += 1
+        return True
+    _MISSES += 1
+    _KEYS[cache_key] = 1
+    return False
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "scaling", "n", "ks", "num_jobs", "reps", "preempt", "retry"))
+    "scaling", "n", "ks", "num_jobs", "reps", "preempt", "retry", "groups"))
 def _cached_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
                    ks, num_jobs, reps, preempt, arrivals, delta, failures,
-                   retry):
+                   retry, groups=None, group_r=None, group_ids=None):
     # dist / arrivals / delta / failures arrive as traced pytrees: jax's
     # jit cache keys on their STRUCTURE (the family; for failures the
     # static max_events aux), so new fitted floats reuse the executable.
-    # retry is static — it shapes the unrolled relaunch pass.  The body
-    # is cluster_batched._sweep_core — the identical lane grid the
+    # retry is static — it shapes the unrolled relaunch pass.  A grouped
+    # assignment contributes ONE static (the max group count); its rank
+    # and mask arrays are traced data, so a placement re-plan (e.g.
+    # SpeedAware with fresh measured speeds) reuses the executable.  The
+    # body is cluster_batched._sweep_core — the identical lane grid the
     # uncached path compiles.
     return _sweep_core(key, loads, speeds, cancel_overhead, dist, scaling,
                        n, ks, num_jobs, reps, preempt, arrivals, delta,
-                       failures, retry)
+                       failures, retry, groups, group_r, group_ids)
 
 
 def cached_sweep(scenario: Scenario, loads: Sequence[float],
@@ -109,7 +127,8 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
                  reps: int = 1, preempt: bool = True,
                  cancel_overhead: float = 0.0, seed: int = 0,
                  warmup: Optional[int] = None,
-                 retry: Optional[RetryPolicy] = None) -> ClusterSweep:
+                 retry: Optional[RetryPolicy] = None,
+                 assignment: Optional[Assignment] = None) -> ClusterSweep:
     """``cluster_batched.sweep`` through the compiled-surface cache.
 
     Same semantics and CRN discipline; parameters are traced and the
@@ -119,35 +138,35 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
     back to the requested loads.  A ``scenario.failures`` model rides
     the same cache: its MTTF/MTTR are traced parameters (re-estimated
     failure rates re-plan warm), while ``max_events`` and the ``retry``
-    policy shape the executable and so key it.
+    policy shape the executable and so key it.  An ``assignment``
+    strategy keys the cache by its STRUCTURAL signature
+    (``Assignment.cache_signature`` — group counts, not mask contents),
+    so a placement re-plan from fresh telemetry is a warm call.
     """
     n = scenario.n
     ks, loads, warmup, arrivals, speeds = validate_sweep_args(
         scenario, loads, ks, num_jobs, reps, warmup)
     failures, retry = resolve_failure_args(scenario, retry)
+    lanes = build_lanes(assignment, n, ks, int(num_jobs),
+                        scenario.worker_speeds)
+    groups, group_r, group_ids = lanes_as_jnp(lanes)
     L = len(loads)
     bucket = load_bucket(L)
     padded = tuple(loads) + (loads[-1],) * (bucket - L)
 
-    global _HITS, _MISSES
-    cache_key = (type(scenario.dist).__name__, scenario.scaling.value, n,
-                 ks, bucket, int(num_jobs), int(reps), bool(preempt),
-                 type(arrivals).__name__, scenario.delta is None,
-                 None if failures is None else int(failures.max_events),
-                 retry)
-    if cache_key in _KEYS:
-        _HITS += 1
-        _KEYS[cache_key] += 1
-    else:
-        _MISSES += 1
-        _KEYS[cache_key] = 1
+    record_cache_key(
+        (type(scenario.dist).__name__, scenario.scaling.value, n,
+         ks, bucket, int(num_jobs), int(reps), bool(preempt),
+         type(arrivals).__name__, scenario.delta is None,
+         None if failures is None else int(failures.max_events),
+         retry, None if lanes is None else lanes.signature))
 
     out = _cached_kernel(
         jax.random.PRNGKey(seed), jnp.asarray(padded, jnp.float32), speeds,
         jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
         ks, int(num_jobs), int(reps), bool(preempt), arrivals,
         None if scenario.delta is None else jnp.float32(scenario.delta),
-        failures, retry)
+        failures, retry, groups, group_r, group_ids)
 
     # trim the padded lanes before aggregation: the surviving cells are
     # lane-independent under vmap, so they match the unpadded kernel

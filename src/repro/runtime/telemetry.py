@@ -76,6 +76,35 @@ class ArrivalStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class WorkerSpeedStats:
+    """Typed per-worker relative-speed estimate from step telemetry.
+
+    ``speeds`` are decayed-mean service-time multipliers NORMALIZED by
+    the fleet median — 1.0 is a median machine, 3.0 a machine whose
+    tasks take three times as long.  The convention matches
+    ``Scenario.worker_speeds`` (and ``assign.SpeedAware``): multipliers
+    scale task time, larger = slower.  ``counts`` are the (decayed)
+    per-worker sample masses behind each estimate; workers that have
+    contributed fewer than the minimum keep the neutral 1.0.
+    """
+
+    speeds: Tuple[float, ...]          # median-normalized multipliers
+    counts: Tuple[float, ...]          # decayed sample mass per worker
+    num_samples: int                   # raw (undecayed) recordings
+
+    @property
+    def slowest(self) -> int:
+        """Index of the slowest (largest-multiplier) worker."""
+        return int(np.argmax(self.speeds))
+
+    @property
+    def spread(self) -> float:
+        """max/min speed ratio — 1.0 on a homogeneous fleet; the
+        controller's trigger for considering placement re-plans."""
+        return float(max(self.speeds) / min(self.speeds))
+
+
+@dataclasses.dataclass(frozen=True)
 class InsufficientTelemetry:
     """Typed "not enough data" result — returned instead of NaN-laden
     stats when the window is empty or shorter than the minimum (the seed
@@ -92,6 +121,12 @@ class InsufficientTelemetry:
 class Telemetry:
     window: int = 512
     min_samples: int = 8
+    #: per-step decay of the per-worker speed accumulators (exponential
+    #: forgetting, so speed estimates track the CURRENT fleet)
+    speed_decay: float = 0.97
+    #: minimum decayed sample mass before a worker's own estimate is
+    #: trusted (below it the worker reads as a neutral 1.0)
+    min_worker_mass: float = 4.0
 
     def __post_init__(self):
         self._times: Deque[float] = collections.deque(maxlen=self.window)
@@ -102,6 +137,11 @@ class Telemetry:
         self._outcomes: Deque[Tuple[int, bool]] = collections.deque(
             maxlen=self.window)
         self._retries: Deque[int] = collections.deque(maxlen=self.window)
+        # per-worker decayed service sums/masses (lazily sized to the
+        # fleet on the first aligned recording)
+        self._w_sum: np.ndarray = None
+        self._w_cnt: np.ndarray = None
+        self._w_raw: int = 0
 
     def record_step(self, worker_times: np.ndarray, task_size: int = 1):
         """Record the per-worker completion times of one step."""
@@ -109,6 +149,59 @@ class Telemetry:
         for t in np.asarray(worker_times, dtype=np.float64).ravel():
             if math.isfinite(t):
                 self._times.append(float(t))
+
+    def record_worker_times(self, worker_times) -> None:
+        """Record one step's per-worker service times, ALIGNED by index.
+
+        Unlike :meth:`record_step` (which pools times for the family
+        fit), position w here is worker w's time — the alignment is what
+        makes per-worker speed estimation possible.  Non-finite or
+        non-positive entries mean "worker contributed no completion this
+        step" and are skipped.  A recording with a different fleet size
+        resets the accumulators (the fleet was resized; old per-index
+        estimates no longer describe the same machines).
+        """
+        x = np.asarray(worker_times, dtype=np.float64).ravel()
+        if self._w_sum is None or self._w_sum.size != x.size:
+            self._w_sum = np.zeros(x.size)
+            self._w_cnt = np.zeros(x.size)
+            self._w_raw = 0
+        fin = np.isfinite(x) & (x > 0)
+        self._w_sum *= self.speed_decay
+        self._w_cnt *= self.speed_decay
+        self._w_sum[fin] += x[fin]
+        self._w_cnt[fin] += 1.0
+        self._w_raw += int(fin.sum())
+
+    def worker_speed_stats(self) -> Union["WorkerSpeedStats",
+                                          "InsufficientTelemetry"]:
+        """Typed per-worker speed multipliers from the decayed sums.
+
+        Follows the ``InsufficientTelemetry`` contract: too few total
+        recordings — or no worker past ``min_worker_mass`` — returns the
+        typed insufficiency result.  Workers individually below the mass
+        floor read as neutral 1.0, so one barely-seen machine cannot be
+        declared the fleet's straggler off a single draw.  The returned
+        multipliers are median-normalized, ready for
+        ``assign.SpeedAware.with_speeds`` or ``Scenario.worker_speeds``.
+        """
+        if self._w_sum is None or self._w_raw < self.min_samples:
+            return InsufficientTelemetry(have=self._w_raw,
+                                         needed=self.min_samples)
+        mass = self._w_cnt
+        good = mass >= self.min_worker_mass
+        if not good.any():
+            return InsufficientTelemetry(have=self._w_raw,
+                                         needed=self.min_samples)
+        est = np.where(good, self._w_sum / np.maximum(mass, 1e-300), 1.0)
+        med = float(np.median(est[good]))
+        speeds = np.ones(est.size)
+        speeds[good] = est[good] / max(med, 1e-300)
+        return WorkerSpeedStats(
+            speeds=tuple(float(s) for s in speeds),
+            counts=tuple(float(c) for c in mass),
+            num_samples=int(self._w_raw),
+        )
 
     def record_arrival(self, timestamp: float):
         """Record one job arrival instant (monotone non-decreasing)."""
@@ -169,16 +262,22 @@ class Telemetry:
 
     # -- model selection ----------------------------------------------------
 
-    def fit(self) -> Tuple[ServiceTime, str]:
+    def fit(self, task_size=None, scaling=None) -> Tuple[ServiceTime, str]:
         """Best-fitting family among the paper's three, by exact
         log-likelihood (``core.distributions.select_service_time``; the
         seed's finite-difference density was identically ~0 on Bi-Modal's
-        step tail, so bimodal could essentially never win selection)."""
+        step tail, so bimodal could essentially never win selection).
+
+        ``task_size`` / ``scaling`` switch the SCORE to the task-level
+        predictive likelihood of s-block sums (additive scaling only) —
+        rank models at the size the plan will actually run, not at CU
+        granularity; see ``select_service_time``."""
         if self.num_samples < self.min_samples:
             raise ValueError(
                 f"not enough telemetry samples "
                 f"({self.num_samples} < {self.min_samples})")
-        return select_service_time(self.samples())
+        return select_service_time(self.samples(), task_size=task_size,
+                                   scaling=scaling)
 
     def arrival_stats(self) -> Union[ArrivalStats, InsufficientTelemetry]:
         """Typed rate/burstiness summary of the recorded job timestamps.

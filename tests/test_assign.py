@@ -1,0 +1,467 @@
+"""The task-to-worker assignment subsystem: strategy semantics, the
+grouped resolution closed form, engine equivalence at g=1, the
+(k, assignment) co-optimized surface, speed telemetry, and the
+controller's placement re-planning.
+
+The cross-backend trajectory parity of grouped dispatch lives in
+``test_conformance.py`` (placement cells); this module pins the UNITS:
+mask construction, cache signatures, the numpy reference for
+``group_resolution``, and the co-sweep's slicing/tie-breaking.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import LoadAwareLatency, Scenario
+from repro.assign import (AllWorkers, AssignmentSurface, GroupLanes,
+                          RandomGroups, ReplicationGroups, RoundRobin,
+                          SpeedAware, build_lanes, co_sweep,
+                          group_ids_matrix, is_all_workers)
+from repro.control import RedundancyController
+from repro.control.controller import ControllerConfig
+from repro.core import Pareto, Scaling, ShiftedExp
+from repro.core.distributions import (MIN_TASK_BLOCKS, select_service_time,
+                                      task_loglik)
+from repro.core.policy import Policy
+from repro.runtime.cluster_batched import sweep, sweep_compile_count
+from repro.runtime.failures import group_resolution, job_resolution
+from repro.runtime.telemetry import InsufficientTelemetry, Telemetry
+
+SERVER = Scaling.SERVER_DEPENDENT
+N = 12
+
+
+# ==========================================================================
+# strategies: masks, validation, signatures
+# ==========================================================================
+
+class TestStrategies:
+    def test_validation_rejects_illegal_group_counts(self):
+        with pytest.raises(ValueError, match="divide k"):
+            RoundRobin(g=3).validate(12, 4)
+        with pytest.raises(ValueError, match="divide n"):
+            ReplicationGroups(g=5).validate(12, 10)
+        with pytest.raises(ValueError, match="1 <= g"):
+            RoundRobin(g=6).validate(12, 4)
+        # g=None defaults to g=k: fractional repetition, always legal
+        # when k | n (the Policy invariant)
+        for k in (1, 2, 3, 4, 6, 12):
+            RoundRobin().validate(12, k)
+            assert RoundRobin().num_groups(12, k) == k
+
+    def test_replication_groups_are_contiguous_blocks(self):
+        gid = ReplicationGroups(g=4).group_ids(12, 4, 3)
+        assert gid.shape == (3, 12)
+        np.testing.assert_array_equal(gid[0], np.repeat(np.arange(4), 3))
+        np.testing.assert_array_equal(gid[0], gid[2])   # static per job
+
+    def test_round_robin_strides(self):
+        gid = RoundRobin(g=4).group_ids(12, 4, 2)
+        np.testing.assert_array_equal(gid[0], np.tile(np.arange(4), 3))
+
+    def test_speed_aware_packs_slowest_together(self):
+        speeds = (1.0,) * 9 + (3.0, 3.0, 3.0)      # three slow, at the end
+        gid = SpeedAware(g=4).group_ids(12, 4, 1, speeds=speeds)[0]
+        # larger multiplier = slower; the slow trio shares group 0
+        assert set(gid[-3:]) == {0}
+        # explicit speeds on the strategy override call-site speeds
+        pinned = SpeedAware(g=4, speeds=speeds)
+        np.testing.assert_array_equal(
+            pinned.group_ids(12, 4, 1, speeds=(1.0,) * 12)[0], gid)
+        with pytest.raises(ValueError, match="speeds"):
+            SpeedAware(g=4).group_ids(12, 4, 1, speeds=(1.0, 2.0))
+
+    def test_speed_aware_with_speeds_and_structural_signature(self):
+        a = SpeedAware(g=2)
+        b = a.with_speeds([3.0, 1.0] * 6)
+        assert b.speeds == (3.0, 1.0) * 6 and a.speeds is None
+        # the signature is structural: measured-speed refreshes must hit
+        # the warm executable, so speeds stay OUT of the key
+        ks = (2, 4)
+        assert a.cache_signature(12, ks) == b.cache_signature(12, ks)
+        assert AllWorkers().cache_signature(12, ks) is None
+
+    def test_random_groups_balanced_and_seed_deterministic(self):
+        a = RandomGroups(g=4, seed=3)
+        gid = a.group_ids(12, 4, 50)
+        assert gid.shape == (50, 12)
+        # balanced partition: every group holds exactly n/g workers,
+        # for every job
+        counts = np.stack([(gid == g).sum(axis=1) for g in range(4)])
+        assert (counts == 3).all()
+        np.testing.assert_array_equal(gid, a.group_ids(12, 4, 50))
+        assert not np.array_equal(
+            gid, RandomGroups(g=4, seed=4).group_ids(12, 4, 50))
+        # per-job placement genuinely varies
+        assert not all(np.array_equal(gid[0], gid[j]) for j in range(50))
+        assert a.per_job() and not RoundRobin().per_job()
+
+    def test_is_all_workers(self):
+        assert is_all_workers(None) and is_all_workers(AllWorkers())
+        assert not is_all_workers(RoundRobin())
+
+    def test_group_ids_matrix_resolves_all_workers_to_one_group(self):
+        g, r, gid = group_ids_matrix(AllWorkers(), 12, 3, 5)
+        assert (g, r) == (1, 3)
+        np.testing.assert_array_equal(gid, np.zeros((5, 12), np.int32))
+        g, r, gid = group_ids_matrix(RoundRobin(), 12, 4, 5)
+        assert (g, r) == (4, 1) and gid.shape == (5, 12)
+
+    def test_build_lanes(self):
+        assert build_lanes(None, 12, (1, 3), 10) is None
+        assert build_lanes(AllWorkers(), 12, (1, 3), 10) is None
+        lanes = build_lanes(RoundRobin(), 12, (2, 4, 6), 10)
+        assert isinstance(lanes, GroupLanes)
+        assert lanes.groups == 6                      # max over lanes
+        np.testing.assert_array_equal(lanes.r, [1, 1, 1])   # k/g = 1
+        assert lanes.gid.shape == (3, 10, 12)
+        assert lanes.signature == RoundRobin().cache_signature(12, (2, 4, 6))
+
+
+# ==========================================================================
+# group_resolution: numpy reference + reduction to job_resolution
+# ==========================================================================
+
+def _ref_group_resolution(nat, ok, maskg, r):
+    """Per-group job_resolution with (k, n) -> (r, c_i), then the
+    max/first-failure combine — the spec, written independently."""
+    G = maskg.shape[0]
+    Dg = np.full(G, np.inf)
+    gok = np.ones(G, bool)
+    for i in range(G):
+        idx = np.where(maskg[i])[0]
+        if idx.size == 0:
+            continue
+        d, s = job_resolution(np, nat[idx], ok[idx], r, idx.size)
+        Dg[i], gok[i] = float(d), bool(s)
+    success = gok.all()
+    if success:
+        D = Dg[maskg.any(axis=1)].max()
+    else:
+        D = Dg[~gok].min()
+    return Dg, gok, D, success
+
+
+class TestGroupResolution:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_matches_per_group_job_resolution(self, seed):
+        rng = np.random.default_rng(seed)
+        n, g, r = 12, 3, 2
+        nat = rng.exponential(5.0, n)
+        ok = rng.random(n) > 0.3
+        gid = rng.permutation(np.arange(n) % g)
+        # pad with an empty group row: the engines' G_max padding
+        maskg = np.zeros((g + 1, n), bool)
+        maskg[gid, np.arange(n)] = True
+        Dg, gok, D, success = group_resolution(np, nat, ok, maskg, r)
+        rDg, rgok, rD, rsuccess = _ref_group_resolution(nat, ok, maskg, r)
+        np.testing.assert_allclose(Dg[:g], rDg[:g])
+        np.testing.assert_array_equal(gok, rgok)
+        assert D == pytest.approx(rD) and success == rsuccess
+        assert gok[g] and Dg[g] == np.inf        # padded row: vacuous
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_single_group_reduces_to_job_resolution(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        n, k = 12, 3
+        nat = rng.exponential(5.0, n)
+        ok = rng.random(n) > 0.25
+        maskg = np.ones((1, n), bool)
+        Dg, gok, D, success = group_resolution(np, nat, ok, maskg, k)
+        d_ref, s_ref = job_resolution(np, nat, ok, k, n)
+        assert D == d_ref and success == bool(s_ref)
+        assert Dg[0] == d_ref and gok[0] == bool(s_ref)
+
+    def test_fails_at_first_exhausted_group(self):
+        # group 0 loses both replicas early; group 1 would finish late
+        nat = np.array([1.0, 2.0, 8.0, 9.0])
+        ok = np.array([False, False, True, True])
+        maskg = np.array([[True, True, False, False],
+                          [False, False, True, True]])
+        Dg, gok, D, success = group_resolution(np, nat, ok, maskg, 1)
+        assert not success and D == 2.0          # (c-r+1)=2nd loss instant
+        assert not gok[0] and gok[1]
+
+
+# ==========================================================================
+# engine equivalence: g=1 / AllWorkers are the legacy path, bit for bit
+# ==========================================================================
+
+METRICS = ("mean", "p50", "p95", "p99", "utilization", "wasted_frac",
+           "throughput")
+
+
+class TestLegacyEquivalence:
+    def test_all_workers_and_g1_are_bitwise_legacy(self):
+        sc = Scenario(ShiftedExp(1.0, 10.0), SERVER, N,
+                      worker_speeds=(1.0,) * 9 + (2.0, 3.0, 0.5))
+        kw = dict(loads=[0.01, 0.05], num_jobs=200, reps=2, seed=4,
+                  preempt=True)
+        legacy = sweep(sc, **kw)
+        for a in (AllWorkers(), ReplicationGroups(g=1)):
+            got = sweep(sc, assignment=a, **kw)
+            for m in METRICS:
+                np.testing.assert_array_equal(got.metric(m),
+                                              legacy.metric(m), err_msg=m)
+
+
+# ==========================================================================
+# co_sweep: one flattened call == per-assignment sweeps; surface views
+# ==========================================================================
+
+class TestCoSweep:
+    SC = Scenario(ShiftedExp(1.0, 10.0), SERVER, N,
+                  worker_speeds=(3.0,) * 4 + (1.0,) * 8)
+    KW = dict(loads=[0.02, 0.05], ks=[2, 4], num_jobs=150, reps=2, seed=1,
+              preempt=True)
+
+    def test_flattened_grid_equals_per_assignment_sweeps(self):
+        cands = [AllWorkers(), RoundRobin(), RandomGroups(seed=2),
+                 SpeedAware()]
+        surf = co_sweep(self.SC, assignments=cands, **self.KW)
+        assert surf.assignments == tuple(cands)
+        for a in cands:
+            solo = sweep(self.SC, assignment=a, **self.KW)
+            rode = surf.sweep_for(a)
+            for m in METRICS:
+                np.testing.assert_array_equal(rode.metric(m),
+                                              solo.metric(m), err_msg=m)
+
+    def test_whole_grid_is_one_compile(self):
+        kw = dict(self.KW, num_jobs=137)         # unique shape: fresh trace
+        before = sweep_compile_count()
+        co_sweep(self.SC, assignments=[AllWorkers(), RoundRobin(),
+                                       SpeedAware()], **kw)
+        assert sweep_compile_count() - before == 1
+
+    def test_surface_views_and_tie_breaking(self):
+        surf = co_sweep(self.SC, assignments=[AllWorkers(), RoundRobin()],
+                        **self.KW)
+        cube = surf.metric("mean")
+        assert cube.shape == (2, 2, 2)                     # (A, L, K)
+        env = surf.min_curve(1)
+        for j, k in enumerate(surf.ks):
+            assert env[k] == cube[:, 1, j].min()
+        for lam, (k, a) in surf.kstar("mean").items():
+            ai = surf.assignments.index(a)
+            i = list(surf.loads).index(lam)
+            assert cube[ai, i, surf.ks.index(k)] == cube[:, i, :].min()
+        # exact ties resolve to the earliest assignment, then smallest k
+        tied = AssignmentSurface(assignments=surf.assignments,
+                                 sweeps=(surf.sweeps[0], surf.sweeps[0]))
+        k, a = tied.kstar("mean")[tied.loads[0]]
+        assert isinstance(a, AllWorkers)
+        with pytest.raises(KeyError, match="not on this surface"):
+            surf.sweep_for(RandomGroups())
+
+    def test_none_resolves_to_all_workers_and_bad_inputs_raise(self):
+        surf = co_sweep(self.SC, assignments=[None], **self.KW)
+        assert surf.assignments == (AllWorkers(),)
+        with pytest.raises(ValueError, match="at least one"):
+            co_sweep(self.SC, assignments=[], **self.KW)
+        with pytest.raises(TypeError, match="Assignment"):
+            co_sweep(self.SC, assignments=["round_robin"], **self.KW)
+        with pytest.raises(ValueError, match="backend"):
+            co_sweep(self.SC, assignments=[None], backend="bogus",
+                     **self.KW)
+
+    def test_cached_backend_same_numbers_and_warm_speed_refresh(self):
+        from repro.runtime.surface_cache import (reset_surface_cache_stats,
+                                                 surface_cache_stats)
+        cands = [AllWorkers(), SpeedAware()]
+        a = co_sweep(self.SC, assignments=cands, **self.KW)
+        reset_surface_cache_stats()
+        b = co_sweep(self.SC, assignments=cands, backend="cached",
+                     **self.KW)
+        for m in METRICS:
+            np.testing.assert_allclose(b.metric(m), a.metric(m), rtol=1e-5,
+                                       err_msg=m)
+        first = surface_cache_stats()
+        # drifted measured speeds: same structural signature, warm hit
+        drifted = [AllWorkers(),
+                   SpeedAware().with_speeds((2.7,) * 4 + (1.1,) * 8)]
+        co_sweep(self.SC, assignments=drifted, backend="cached", **self.KW)
+        after = surface_cache_stats()
+        assert after["misses"] == first["misses"]
+        assert after["hits"] == first["hits"] + 1
+
+
+# ==========================================================================
+# scaling-aware family selection (the task-level score)
+# ==========================================================================
+
+class TestScalingAwareSelection:
+    """Under ADDITIVE scaling the plan is evaluated on s-task SUMS, and
+    the best CU-level fit is not always the best model OF THE SUMS —
+    selection must score at the scale the plan runs at."""
+
+    X = np.asarray(Pareto(1.0, 2.2).sample(jax.random.PRNGKey(6), (96,)))
+
+    def test_task_level_score_fixes_cu_misselection(self):
+        _, cu_pick = select_service_time(self.X)
+        d_task, task_pick = select_service_time(
+            self.X, task_size=6, scaling=Scaling.ADDITIVE)
+        assert cu_pick == "shifted_exp"      # the CU-level mistake
+        assert task_pick == "pareto"
+        # the task pick predicts held-out 6-block sums strictly better
+        d_cu, _ = select_service_time(self.X)
+        held = np.asarray(
+            Pareto(1.0, 2.2).sample(jax.random.PRNGKey(777), (600,)))
+        assert task_loglik(d_task, held, 6) > task_loglik(d_cu, held, 6)
+
+    def test_non_additive_scalings_keep_the_cu_score(self):
+        # monotone per-task transforms cannot change the ranking
+        for scal in (Scaling.SERVER_DEPENDENT, Scaling.DATA_DEPENDENT):
+            _, pick = select_service_time(self.X, task_size=6, scaling=scal)
+            assert pick == "shifted_exp"
+
+    def test_short_window_guard_keeps_cu_score(self):
+        # 96 // 16 = 6 < MIN_TASK_BLOCKS: too few block sums to score on
+        assert self.X.size // 16 < MIN_TASK_BLOCKS
+        _, pick = select_service_time(self.X, task_size=16,
+                                      scaling=Scaling.ADDITIVE)
+        assert pick == "shifted_exp"
+
+    def test_task_loglik_needs_two_blocks(self):
+        with pytest.raises(ValueError, match="block"):
+            task_loglik(ShiftedExp(1.0, 1.0), np.ones(5), 3)
+
+
+# ==========================================================================
+# per-worker speed telemetry
+# ==========================================================================
+
+class TestWorkerSpeedStats:
+    TRUTH = (3.0, 1.0, 1.0, 1.0, 1.0, 1.0)
+
+    def test_insufficient_before_min_samples(self):
+        t = Telemetry(min_samples=8)
+        st = t.worker_speed_stats()
+        assert isinstance(st, InsufficientTelemetry) and not st
+        assert (st.have, st.needed) == (0, 8)
+
+    def test_estimates_track_truth_median_normalized(self):
+        t = Telemetry(min_samples=8)
+        rng = np.random.default_rng(0)
+        for _ in range(60):
+            t.record_worker_times(np.asarray(self.TRUTH)
+                                  * rng.exponential(1.0))
+        st = t.worker_speed_stats()
+        assert st
+        np.testing.assert_allclose(st.speeds, self.TRUTH, rtol=1e-9)
+        assert st.num_samples == 60 * 6
+
+    def test_workers_below_mass_floor_read_neutral(self):
+        t = Telemetry(min_samples=8, min_worker_mass=4.0)
+        step = np.array([5.0, 1.0, np.nan, np.nan, np.nan, np.nan])
+        for _ in range(12):
+            t.record_worker_times(step)
+        st = t.worker_speed_stats()
+        assert st.speeds[0] > 1.0 > st.speeds[1]
+        assert st.speeds[2:] == (1.0,) * 4        # never past the floor
+
+    def test_fleet_resize_resets_accumulators(self):
+        t = Telemetry(min_samples=8)
+        for _ in range(20):
+            t.record_worker_times(np.ones(6))
+        assert t.worker_speed_stats()
+        t.record_worker_times(np.ones(4))         # the fleet changed size
+        assert isinstance(t.worker_speed_stats(), InsufficientTelemetry)
+
+
+# ==========================================================================
+# the controller's placement decision
+# ==========================================================================
+
+PRIOR = Scenario(ShiftedExp(1.0, 10.0), SERVER, N)
+
+
+def _controller(assignments, objective="default"):
+    if objective == "default":
+        objective = LoadAwareLatency(num_jobs=150, reps=1, preempt=False,
+                                     backend="batched")
+    return RedundancyController(
+        PRIOR, objective=objective,
+        config=ControllerConfig(assignments=tuple(assignments)))
+
+
+class TestControllerPlacement:
+    def test_candidates_off_without_config_or_objective(self):
+        assert _controller(()). _placement_candidates(PRIOR) is None
+        ctl = RedundancyController(
+            PRIOR, config=ControllerConfig(assignments=(RoundRobin(),)))
+        assert ctl.load_objective is None
+        assert ctl._placement_candidates(PRIOR) is None
+
+    def test_candidates_resolve_and_drop_illegal(self):
+        ctl = _controller((RoundRobin(), RoundRobin(g=5)))
+        cands = ctl._placement_candidates(PRIOR)
+        # g=5 divides neither n=12 nor most legal ks: dropped;
+        # AllWorkers is inserted first so ties prefer the paper's dispatch
+        assert cands == [AllWorkers(), RoundRobin()]
+        # a pool of one is no pool: co-optimization stays off
+        assert _controller((RoundRobin(g=5),))._placement_candidates(
+            PRIOR) is None
+
+    def test_speed_aware_candidate_gets_measured_speeds(self):
+        ctl = _controller((SpeedAware(),))
+        ctl._w_time = np.asarray((2.0,) * 4 + (1.0,) * 8) * 10.0
+        ctl._w_tcnt = np.full(N, 10.0)
+        cands = ctl._placement_candidates(PRIOR)
+        sa = next(c for c in cands if isinstance(c, SpeedAware))
+        # median-normalized: the slow block reads 2x, the median machine 1x
+        assert sa.speeds == (2.0,) * 4 + (1.0,) * 8
+
+    def test_place_switches_only_past_hysteresis(self):
+        ctl = _controller((RoundRobin(),))
+        cands = [AllWorkers(), RoundRobin()]
+        ks = [2, 4]
+        pol = Policy(N, 4)
+        # round-robin wins k=4 by 50%: well past the 10% bar
+        ctl._co_curve = (cands, ks,
+                         np.array([[10.0, 9.0], [10.0, 6.0]]))
+        placed, moved = ctl._place(pol)
+        assert moved and isinstance(placed.assignment, RoundRobin)
+        # within the bar: stay with the current (all-workers) placement
+        ctl._co_curve = (cands, ks,
+                         np.array([[10.0, 6.3], [10.0, 6.0]]))
+        placed, moved = ctl._place(pol)
+        assert not moved and placed.assignment is None
+        # k off the co-curve: no placement opinion
+        ctl._co_curve = (cands, ks, np.zeros((2, 2)))
+        assert ctl._place(Policy(N, 3)) == (Policy(N, 3), False)
+
+    def test_speed_refresh_is_not_a_switch(self):
+        """A SpeedAware already attached, re-planned with drifted measured
+        speeds: masks update, but structurally nothing moved."""
+        ctl = _controller((SpeedAware(),))
+        old = SpeedAware().with_speeds((2.0,) * 4 + (1.0,) * 8)
+        new = SpeedAware().with_speeds((2.9,) * 4 + (1.1,) * 8)
+        pol = Policy(N, 4).with_assignment(old)
+        ctl._co_curve = ([AllWorkers(), new], [4],
+                         np.array([[10.0], [8.0]]))
+        placed, moved = ctl._place(pol)
+        assert not moved                      # same structure, no churn
+        assert placed.assignment.speeds == new.speeds   # masks refreshed
+
+    def test_closed_loop_commit_builds_the_co_curve(self):
+        """End to end: a load-aware controller with placement candidates
+        re-plans through the co-optimized surface and attaches a legal
+        (or no) placement to the committed policy."""
+        ctl = _controller((RoundRobin(), SpeedAware()))
+        x = np.asarray(ShiftedExp(1.0, 10.0).sample(
+            jax.random.PRNGKey(2), (40, N)))
+        t = 0.0
+        committed = False
+        for row in x:
+            t += 25.0
+            ev = ctl.observe(row, timestamp=t)
+            committed = committed or ev is not None
+        assert committed and ctl._co_curve is not None
+        cands, ks, cube = ctl._co_curve
+        assert cube.shape == (len(cands), len(ks))
+        pol = ctl.policy
+        if pol.assignment is not None:
+            pol.assignment.validate(pol.n, pol.k)

@@ -26,6 +26,8 @@ import numpy as np
 import pytest
 
 from repro.api import LoadAwareLatency, Scenario
+from repro.assign import (AllWorkers, RandomGroups, ReplicationGroups,
+                          RoundRobin, SpeedAware, co_sweep)
 from repro.control import RedundancyController, replay
 from repro.core import (BiModal, FailureModel, Pareto, Regime, RetryPolicy,
                         Scaling, ShiftedExp, sample_regime_trace)
@@ -468,3 +470,89 @@ class TestFailureParity:
         after = surface_cache_stats()
         assert after["misses"] == first["misses"]
         assert after["hits"] == first["hits"] + 1
+
+
+# ==========================================================================
+# (e) placement semantics: grouped dispatch parity across the backends
+# ==========================================================================
+
+ASSIGN_EXACT_CELLS = [
+    # (id, assignment, k, preempt, speeds, failures?)
+    ("fr-groups", ReplicationGroups(), 4, True, None, False),
+    ("round-robin-hetero", RoundRobin(), 4, True, SPEEDS12, False),
+    ("two-groups-nopreempt", RandomGroups(g=2, seed=5), 4, False, None,
+     False),
+    ("speed-aware-hetero", SpeedAware(g=2), 6, True, SPEEDS12, False),
+    ("random-per-job", RandomGroups(), 6, True, None, False),
+    ("groups-under-failures", RoundRobin(), 4, True, None, True),
+]
+
+
+class TestAssignmentParity:
+    """The grouped per-group-min/max-over-groups recurrence and the
+    oracle's event loop resolve every job identically on a shared
+    (service matrix, arrival stream, placement mask) trajectory — the
+    placement analogue of ``TestExactTrajectoryParity``."""
+
+    N = 12
+
+    @pytest.mark.parametrize(
+        "assignment,k,preempt,speeds,failures",
+        [c[1:] for c in ASSIGN_EXACT_CELLS],
+        ids=[c[0] for c in ASSIGN_EXACT_CELLS])
+    def test_grouped_trajectory_parity(self, assignment, k, preempt,
+                                       speeds, failures):
+        kw = {}
+        if failures:
+            crash, recover = _failure_schedule(self.N, 30.0, 3.0,
+                                               events=48, seed=21)
+            kw = dict(crash_times=crash, recovery_times=recover)
+        cfg = ClusterConfig(
+            n_workers=self.N, k=k, arrival_rate=0.05, num_jobs=200,
+            preempt=preempt, seed=7, worker_speeds=speeds,
+            assignment=assignment,
+            retry=RetryPolicy(max_attempts=2, backoff_base=0.5)
+            if failures else None)
+        dist = ShiftedExp(1.0, 10.0)
+        svc = arr = None
+        if not failures:
+            svc, arr = _draw_inputs(cfg, dist, SERVER, None, None, None)
+            kw = dict(service_times=svc, arrival_times=arr)
+        res_o = simulate_oracle(cfg, dist, SERVER, **kw)
+        res_b = simulate_one(cfg, dist, SERVER, **kw)
+        np.testing.assert_allclose(res_b.latencies, res_o.latencies,
+                                   rtol=2e-4, atol=2e-3)
+        if failures:
+            np.testing.assert_array_equal(res_b.job_failed,
+                                          res_o.job_failed)
+        if preempt:
+            assert res_b.utilization == pytest.approx(
+                res_o.utilization, rel=2e-3)
+            assert res_b.wasted_frac == pytest.approx(
+                res_o.wasted_frac, rel=2e-3, abs=2e-4)
+
+    def test_grouped_sweep_distributional_parity(self):
+        """Whole grouped surfaces under the backends' own key
+        disciplines agree statistically, heterogeneous fleet included."""
+        sc = Scenario(ShiftedExp(1.0, 10.0), SERVER, self.N,
+                      worker_speeds=SPEEDS12)
+        kw = dict(loads=[0.01, 0.04], ks=[2, 4], num_jobs=600, reps=4,
+                  seed=3, assignment=RoundRobin())
+        sb = sweep(sc, **kw)
+        so = sweep_oracle(sc, **kw)
+        np.testing.assert_allclose(sb.mean, so.mean, rtol=0.12)
+        np.testing.assert_allclose(sb.utilization, so.utilization,
+                                   rtol=0.12, atol=5e-3)
+
+    def test_co_surface_oracle_backend_matches_per_assignment_oracle(self):
+        """``co_sweep(backend="oracle")`` is the validation twin: one
+        discrete-event sweep per assignment, byte-identical to calling
+        the oracle directly."""
+        sc = Scenario(ShiftedExp(1.0, 10.0), SERVER, self.N)
+        cands = [AllWorkers(), RoundRobin()]
+        kw = dict(loads=[0.03], ks=[2, 4], num_jobs=150, reps=1, seed=2)
+        surf = co_sweep(sc, assignments=cands, backend="oracle", **kw)
+        for a in cands:
+            solo = sweep_oracle(sc, assignment=a, **kw)
+            np.testing.assert_array_equal(surf.sweep_for(a).mean,
+                                          solo.mean)

@@ -1,0 +1,80 @@
+"""Property tests for the placement axis: every assignment strategy's
+masks must be a BALANCED EXACT PARTITION of the fleet (each worker in
+exactly one group, each group exactly n/g workers), deterministic under
+its own seed, and reduce to the single-group legacy path at g=1 —
+the invariants the grouped kernels assume rather than re-check."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error, when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.assign import (AllWorkers, RandomGroups, ReplicationGroups,  # noqa: E402
+                          RoundRobin, SpeedAware, group_ids_matrix)
+
+# legal (n, k, g) cells: k | n, g | k, g | n — drawn from the composite
+# so every example is a valid grouped-dispatch configuration
+_cells = st.integers(1, 24).flatmap(
+    lambda n: st.sampled_from(
+        [k for k in range(1, n + 1) if n % k == 0]).flatmap(
+        lambda k: st.tuples(
+            st.just(n), st.just(k),
+            st.sampled_from([g for g in range(1, k + 1)
+                             if k % g == 0 and n % g == 0]))))
+
+_strategies = st.sampled_from([
+    lambda g, seed: ReplicationGroups(g=g),
+    lambda g, seed: RoundRobin(g=g),
+    lambda g, seed: RandomGroups(g=g, seed=seed),
+    lambda g, seed: SpeedAware(g=g),
+])
+
+
+class TestPartitionInvariants:
+    @given(_cells, _strategies, st.integers(0, 5), st.integers(1, 8))
+    @settings(max_examples=120, deadline=None)
+    def test_masks_are_balanced_exact_partitions(self, cell, make, seed,
+                                                 num_jobs):
+        n, k, g = cell
+        a = make(g, seed)
+        got_g, r, gid = group_ids_matrix(a, n, k, num_jobs)
+        assert got_g == g and r == k // g
+        assert gid.shape == (num_jobs, n) and gid.dtype == np.int32
+        # each worker belongs to exactly one group in [0, g)
+        assert gid.min() >= 0 and gid.max() < g
+        # balanced: every group holds exactly n/g workers, every job
+        counts = np.stack([(gid == i).sum(axis=1) for i in range(g)])
+        assert (counts == n // g).all()
+
+    @given(_cells, _strategies, st.integers(0, 5))
+    @settings(max_examples=60, deadline=None)
+    def test_deterministic_under_same_seed(self, cell, make, seed):
+        n, k, g = cell
+        a, b = make(g, seed), make(g, seed)
+        np.testing.assert_array_equal(
+            group_ids_matrix(a, n, k, 4)[2], group_ids_matrix(b, n, k, 4)[2])
+
+    @given(_cells, _strategies, st.integers(0, 5))
+    @settings(max_examples=60, deadline=None)
+    def test_g1_reduces_to_the_single_group(self, cell, make, seed):
+        n, k, _ = cell
+        g, r, gid = group_ids_matrix(make(1, seed), n, k, 3)
+        # one group, rank k: exactly what group_ids_matrix(AllWorkers())
+        # resolves to — the grouped recurrence then IS the legacy one
+        ga, ra, gida = group_ids_matrix(AllWorkers(), n, k, 3)
+        assert (g, r) == (ga, ra) == (1, k)
+        np.testing.assert_array_equal(gid, gida)
+
+    @given(_cells, st.integers(0, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_speed_aware_is_a_relabelled_block_partition(self, cell, seed):
+        """Whatever the speeds, SpeedAware is ReplicationGroups applied
+        to the speed-sorted worker order: group sizes and the number of
+        distinct groups match the contiguous layout exactly."""
+        n, k, g = cell
+        rng = np.random.default_rng(seed)
+        speeds = tuple(float(s) for s in rng.uniform(0.5, 4.0, n))
+        gid = group_ids_matrix(SpeedAware(g=g), n, k, 1, speeds)[2][0]
+        order = np.argsort(-np.asarray(speeds), kind="stable")
+        np.testing.assert_array_equal(
+            gid[order], np.arange(n, dtype=np.int32) // (n // g))
