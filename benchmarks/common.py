@@ -1,8 +1,10 @@
-"""Shared benchmark plumbing: timing, CSV/markdown emit, figure checks."""
+"""Shared benchmark plumbing: timing, memory, CSV/markdown emit, checks."""
 from __future__ import annotations
 
 import json
 import os
+import resource
+import sys
 import time
 from typing import Callable, Dict, List
 
@@ -12,6 +14,17 @@ OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "/root/repo/bench_results")
 def ensure_out() -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
     return OUT_DIR
+
+
+def peak_rss_mb() -> float:
+    """Lifetime peak resident set of THIS process, in MiB.
+
+    ``ru_maxrss`` is a high-water mark, not a gauge: it only ever grows,
+    so a memory gate must bracket the measured section — record it
+    before, run the workload, and attribute the DELTA plus the baseline.
+    Linux reports KiB; macOS reports bytes."""
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return rss / 1024.0 if sys.platform != "darwin" else rss / (1024.0 ** 2)
 
 
 def time_call(fn: Callable, *args, repeat: int = 3, **kw) -> float:

@@ -1,0 +1,161 @@
+"""Fleet-scale gate: the chunked streaming engine at n=10^4 workers.
+
+The monolithic batched engine materializes the full (num_jobs, n)
+service table per lane and the exact per-job latency cube — at
+n = 10^4 x 10^5 jobs that is ~4 GB for ONE float32 table, several of
+which are live at once, and the absolute float32 clock has long since
+outgrown the latency resolution.  The chunked engine
+(``runtime.fleet``) scans fixed-size job chunks (peak sampling state
+chunk x n ~ 20 MB), rebases its clock every chunk, and folds latencies
+into streaming Welford + reservoir state, so the whole k x load surface
+runs in bounded memory at any horizon.
+
+Three gates, pinned in ``bench_results/BENCH_fleet.json``:
+
+  * FEASIBILITY — the full k x load surface at n = 10^4 with >= 10^5
+    jobs per cell completes under a wall-clock budget with bounded
+    peak-RSS growth (the monolithic engine cannot run this point).
+  * FIDELITY — streaming p99 within 2% of the exact-cube p99 at n = 120
+    with the reservoir genuinely subsampling (samples >> capacity).
+  * THROUGHPUT — chunking costs <= 10% at the monolithic engine's own
+    scale (n = 120 x 600 jobs, where the exact cube is cheap), so the
+    fleet path is not a niche slow mode.
+
+    PYTHONPATH=src python -m benchmarks.fleet_sweep            # full gate
+    PYTHONPATH=src python -m benchmarks.fleet_sweep --smoke    # CI: tiny
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.distributions import Scaling, ShiftedExp
+from repro.core.scenario import Scenario
+from repro.runtime.cluster_batched import sweep
+from repro.runtime.fleet import default_chunk, fleet_sweep
+
+from .common import Check, emit_json, peak_rss_mb
+
+DIST = ShiftedExp(1.0, 5.0)
+SCALING = Scaling.SERVER_DEPENDENT
+
+#: Full-gate budgets for the fleet surface (single-core CI box): the
+#: measured point is ~210 s and ~1.5 GB RSS growth; the budgets leave
+#: ~2x headroom for machine jitter without letting a regression to
+#: monolithic-style materialization (which would blow both) slip by.
+WALL_BUDGET_S = 450.0
+RSS_BUDGET_MB = 4096.0
+
+
+def _timed(fn, seeds=(2, 3, 4), **kw):
+    fn(seed=1, **kw)                       # compile
+    ts = []
+    for s in seeds:
+        t0 = time.perf_counter()
+        fn(seed=s, **kw)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(smoke: bool = False, **_) -> bool:
+    check = Check("fleet_sweep")
+    report = dict(smoke=smoke)
+
+    # -- gate 1: feasibility at fleet scale --------------------------------
+    n = 1_000 if smoke else 10_000
+    num_jobs = 4_000 if smoke else 100_000
+    ks = [k for k in (1, 10, 100, 1_000, 10_000) if k <= n]
+    lam_max = 1.0 / (DIST.mean() * n)
+    loads = [lam_max * 0.3, lam_max * 0.8]
+    sc = Scenario(DIST, SCALING, n)
+    chunk = default_chunk(num_jobs)
+    rss0 = peak_rss_mb()
+    t0 = time.perf_counter()
+    sw = fleet_sweep(sc, loads=loads, ks=ks, num_jobs=num_jobs, reps=1,
+                     seed=1, chunk_size=chunk, stream=True, reservoir=4096)
+    fleet_s = time.perf_counter() - t0
+    rss_growth = peak_rss_mb() - rss0
+    cells = len(loads) * len(ks)
+    wall_budget = 120.0 if smoke else WALL_BUDGET_S
+    check.expect(
+        f"n={n} x {num_jobs} jobs x {cells} cells under {wall_budget:.0f}s",
+        fleet_s < wall_budget, f"{fleet_s:.1f}s incl. compile")
+    check.expect(
+        f"peak-RSS growth under {RSS_BUDGET_MB:.0f} MB "
+        f"(monolithic tables alone would be "
+        f"{num_jobs * n * 4 / 2**20:,.0f} MB each)",
+        rss_growth < RSS_BUDGET_MB, f"+{rss_growth:.0f} MB")
+    finite = sw.mean[sw.mean != float("inf")]
+    check.expect("surface is populated (finite means, positive p99)",
+                 finite.size == cells and (sw.p99 > 0).all(),
+                 f"{finite.size}/{cells} cells")
+    kstars = sw.kstar()
+    check.expect("k* map well-formed (legal k at every load)",
+                 all(n % v == 0 for v in kstars.values()),
+                 f"{sorted(set(kstars.values()))}")
+    report.update(
+        n=n, num_jobs=num_jobs, ks=ks, loads=loads, cells=cells,
+        chunk=chunk, fleet_seconds=round(fleet_s, 1),
+        jobs_per_sec=round(num_jobs / fleet_s, 1),
+        wall_budget_s=wall_budget, rss_growth_mb=round(rss_growth, 1),
+        rss_budget_mb=RSS_BUDGET_MB, peak_rss_mb=round(peak_rss_mb(), 1),
+        kstar={str(k): v for k, v in kstars.items()})
+
+    # -- gate 2: streaming fidelity where the exact cube still fits --------
+    n2, jobs2 = 120, 1_200 if smoke else 6_000
+    res2 = 512 if smoke else 4_096
+    sc2 = Scenario(DIST, SCALING, n2)
+    lam2 = 1.0 / (DIST.mean() * n2)
+    kw2 = dict(loads=[lam2 * 0.3, lam2 * 0.8], ks=[1, 12, 120],
+               num_jobs=jobs2, reps=1, seed=7, chunk_size=default_chunk(jobs2))
+    exact = fleet_sweep(sc2, **kw2)
+    stream = fleet_sweep(sc2, **kw2, stream=True, reservoir=res2)
+    err = abs(stream.p99 - exact.p99) / exact.p99
+    # full gate: 2% (measured 0.66% at 4096-of-5400).  The smoke sketch
+    # keeps only 512 of 1080 samples, so its p99 order-statistic noise
+    # is genuinely larger — it gates the machinery, not the 2% fidelity.
+    tol = 0.10 if smoke else 0.02
+    check.expect(
+        f"streaming p99 within {tol:.0%} of exact (reservoir {res2} of "
+        f"{jobs2 - jobs2 // 10} samples)",
+        float(err.max()) < tol, f"max rel err {err.max():.4f}")
+    report.update(fidelity=dict(
+        n=n2, num_jobs=jobs2, reservoir=res2,
+        p99_max_rel_err=round(float(err.max()), 5)))
+
+    # -- gate 3: chunking is not a slow mode at monolithic scale -----------
+    n3, jobs3 = 120, 600
+    sc3 = Scenario(DIST, SCALING, n3)
+    lam3 = 1.0 / (DIST.mean() * n3)
+    kw3 = dict(loads=[lam3 * f for f in (0.2, 0.5, 0.8)],
+               num_jobs=jobs3, warmup=jobs3 // 10)
+    seeds = (2,) if smoke else (2, 3, 4)
+    mono_s = _timed(lambda **k: sweep(sc3, **kw3, **k), seeds=seeds)
+    chnk_s = _timed(lambda **k: fleet_sweep(
+        sc3, **kw3, chunk_size=default_chunk(jobs3), **k), seeds=seeds)
+    ratio = mono_s / chnk_s
+    floor = 0.5 if smoke else 0.9
+    check.expect(
+        f"chunked throughput >= {floor:.1f}x monolithic at n={n3}",
+        ratio >= floor, f"{ratio:.2f}x ({chnk_s:.3f}s vs {mono_s:.3f}s)")
+    report.update(throughput=dict(
+        n=n3, num_jobs=jobs3, chunk=default_chunk(jobs3),
+        monolithic_seconds=round(mono_s, 4),
+        chunked_seconds=round(chnk_s, 4), ratio=round(ratio, 3)))
+
+    # smoke runs must not clobber the committed full-gate artifact
+    emit_json("BENCH_fleet_smoke" if smoke else "BENCH_fleet", report)
+    return check.summary()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleet: n=10^3, 4k jobs (CI)")
+    args = ap.parse_args(argv)
+    return 0 if run(smoke=args.smoke) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

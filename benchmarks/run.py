@@ -18,7 +18,7 @@ def main(argv=None):
 
     from . import (assignment_sweep, cluster_sweep, coded_step, control_loop,
                    fault_injection, fig_bimodal, fig_pareto, fig_sexp,
-                   kernels, planner_sweep, queueing, table1)
+                   fleet_sweep, kernels, planner_sweep, queueing, table1)
     mc = 4_000 if args.fast else 20_000
     jobs = 400 if args.fast else 1200
 
@@ -30,6 +30,8 @@ def main(argv=None):
         ("assignment_sweep (grouped placement vs random; (k, assignment) "
          "co-optimization)",
          lambda: assignment_sweep.run(smoke=args.fast)),
+        ("fleet_sweep (chunked streaming engine at n=10^4)",
+         lambda: fleet_sweep.run(smoke=args.fast)),
         ("control_loop (adaptive controller regret vs static plans)",
          lambda: control_loop.run(smoke=args.fast)),
         ("fault_injection (crash-restart surface + storm degradation)",

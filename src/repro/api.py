@@ -202,6 +202,12 @@ class LoadAwareLatency:
     warmup: Optional[int] = None
     reps: int = 1
     assignment: Optional["Assignment"] = None
+    #: fleet-scale knobs (``runtime.fleet``): a chunk size bounds the
+    #: engine's memory at any num_jobs; ``stream=True`` swaps the exact
+    #: latency cube for streaming Welford + reservoir statistics.  Both
+    #: ride the batched/cached backends only.
+    chunk_size: Optional[int] = None
+    stream: bool = False
     name: str = "load_aware_latency"
 
     def __post_init__(self):
@@ -209,6 +215,11 @@ class LoadAwareLatency:
             raise ValueError(f"unknown metric {self.metric!r}")
         if self.backend not in ("batched", "oracle", "cached"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend == "oracle" and (self.chunk_size is not None
+                                         or self.stream):
+            raise ValueError("chunk_size/stream need the batched or "
+                             "cached backend (the chunked engine), not "
+                             "the discrete-event oracle")
 
     def curve(self, scenario: Scenario, ks: Sequence[int]) -> Dict[int, float]:
         return self.surface(scenario, [self.arrival_rate],
@@ -222,13 +233,16 @@ class LoadAwareLatency:
         so the escape hatch really cross-checks the fast engine)."""
         from .runtime.cluster import resolve_sweep_backend
         run = resolve_sweep_backend(self.backend)
+        kwargs = {}
+        if self.chunk_size is not None or self.stream:
+            kwargs = dict(chunk_size=self.chunk_size, stream=self.stream)
         return run(scenario, loads=list(loads),
                    ks=list(ks) if ks is not None else None,
                    num_jobs=self.num_jobs, reps=self.reps,
                    preempt=self.preempt,
                    cancel_overhead=self.cancel_overhead,
                    seed=self.seed, warmup=self.warmup,
-                   assignment=self.assignment)
+                   assignment=self.assignment, **kwargs)
 
     def co_surface(self, scenario: Scenario, loads: Sequence[float],
                    assignments: Sequence, ks: Optional[Sequence[int]] = None):
@@ -237,13 +251,16 @@ class LoadAwareLatency:
         backends (``assign.surface.co_sweep`` with this objective's
         queueing knobs)."""
         from .assign.surface import co_sweep
+        kwargs = {}
+        if self.chunk_size is not None or self.stream:
+            kwargs = dict(chunk_size=self.chunk_size, stream=self.stream)
         return co_sweep(scenario, list(loads), assignments,
                         ks=list(ks) if ks is not None else None,
                         num_jobs=self.num_jobs, reps=self.reps,
                         preempt=self.preempt,
                         cancel_overhead=self.cancel_overhead,
                         seed=self.seed, warmup=self.warmup,
-                        backend=self.backend)
+                        backend=self.backend, **kwargs)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -111,7 +111,9 @@ def co_sweep(scenario: Scenario, loads: Sequence[float],
              cancel_overhead: float = 0.0, seed: int = 0,
              warmup: Optional[int] = None,
              retry: Optional[RetryPolicy] = None,
-             backend: str = "batched") -> AssignmentSurface:
+             backend: str = "batched", chunk_size: Optional[int] = None,
+             stream: bool = False, reservoir: int = 4096,
+             shard: Optional[int] = None) -> AssignmentSurface:
     """Every (load, k, assignment) cell — batched/cached in ONE call.
 
     The A x K grid flattens into the kernel's k-lane axis: ``ks`` tiled
@@ -126,8 +128,19 @@ def co_sweep(scenario: Scenario, loads: Sequence[float],
     (structural: group counts, not mask contents), so a control-loop
     re-plan with fresh speed estimates reuses the warm executable.
     ``backend="oracle"`` runs one discrete-event sweep per assignment.
+
+    Any of ``chunk_size`` / ``stream`` / ``shard`` runs the flattened
+    A x K grid on the chunked fleet engine instead (``runtime.fleet``;
+    batched and cached backends — the fleet kernel traces parameters
+    either way, the cached route additionally bucket-pads the load axis
+    and records the structural cache key).  Every assignment must then
+    be per-job constant (``RandomGroups`` is rejected).
     """
     assignments = _resolved(assignments)
+    chunked = chunk_size is not None or stream or shard is not None
+    if chunked and backend == "oracle":
+        raise ValueError("chunk_size/stream/shard are batched-engine "
+                         "knobs; backend='oracle' does not take them")
     if backend == "oracle":
         from ..runtime.cluster_oracle import sweep_oracle
         sweeps = tuple(
@@ -154,6 +167,40 @@ def co_sweep(scenario: Scenario, loads: Sequence[float],
         scenario, loads, ks, num_jobs, reps, warmup)
     failures, retry = resolve_failure_args(scenario, retry)
     K, A, L = len(ks), len(assignments), len(loads)
+
+    if chunked:
+        from ..runtime.fleet import (co_fleet_lanes, default_chunk,
+                                     run_fleet, summarize_fleet,
+                                     trim_raw_loads)
+        lanes = co_fleet_lanes(assignments, n, ks, scenario.worker_speeds)
+        chunk = default_chunk(num_jobs) if chunk_size is None \
+            else int(chunk_size)
+        run_loads = loads
+        if backend == "cached":
+            from ..runtime.surface_cache import (load_bucket,
+                                                 record_cache_key)
+            bucket = load_bucket(L)
+            run_loads = tuple(loads) + (loads[-1],) * (bucket - L)
+            record_cache_key(
+                ("co-fleet", type(scenario.dist).__name__,
+                 scenario.scaling.value, n, tuple(ks) * A, bucket,
+                 int(num_jobs), int(reps), bool(preempt),
+                 type(arrivals).__name__, scenario.delta is None,
+                 None if failures is None else int(failures.max_events),
+                 retry, lanes.signature, chunk, bool(stream),
+                 int(reservoir), 0 if shard is None else int(shard)))
+        raw = run_fleet(scenario, run_loads, lanes, num_jobs=int(num_jobs),
+                        reps=int(reps), preempt=bool(preempt),
+                        cancel_overhead=float(cancel_overhead),
+                        seed=int(seed), warmup=warmup, arrivals=arrivals,
+                        speeds=speeds, failures=failures, retry=retry,
+                        chunk=chunk, stream=bool(stream),
+                        reservoir=int(reservoir), shard=shard)
+        raw = trim_raw_loads(raw, L)
+        sweeps = tuple(
+            summarize_fleet(raw, ks, kslice=slice(ai * K, (ai + 1) * K))
+            for ai in range(A))
+        return AssignmentSurface(assignments=assignments, sweeps=sweeps)
 
     # -- flatten the (assignment, k) grid into one lane axis ---------------
     rs, gids, gmax = [], [], 1

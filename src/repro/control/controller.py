@@ -855,6 +855,12 @@ class RedundancyController:
                       reps=obj.reps, preempt=obj.preempt,
                       cancel_overhead=obj.cancel_overhead, seed=obj.seed,
                       warmup=obj.warmup)
+        if obj.chunk_size is not None or obj.stream:
+            # fleet-scale objective: the chunked engine's knobs ride the
+            # batched/cached surface call, but NOT the oracle fallback
+            # (the discrete-event loop has no chunking), so they are
+            # stripped before any degradation re-run
+            kwargs.update(chunk_size=obj.chunk_size, stream=obj.stream)
         candidates = self._placement_candidates(sc)
         if candidates is not None:
             # (k, assignment) co-optimization: the whole grid in one
@@ -878,8 +884,10 @@ class RedundancyController:
                     raise
                 _warn_surface_fallback(exc)
                 self._fell_back = True
+                fb = {k: v for k, v in kwargs.items()
+                      if k not in ("chunk_size", "stream")}
                 surf = co_sweep(sc, [am.rate * unit], candidates,
-                                backend="oracle", **kwargs)
+                                backend="oracle", **fb)
             cube = surf.metric(obj.metric)[:, 0, :]          # (A, K)
             self._co_curve = (surf.assignments, list(surf.ks), cube)
             return {int(k): float(v)
@@ -897,7 +905,9 @@ class RedundancyController:
             # no compile step and always answers, just slower
             _warn_surface_fallback(exc)
             self._fell_back = True
-            sw = resolve_sweep_backend("oracle")(sc, **kwargs)
+            fb = {k: v for k, v in kwargs.items()
+                  if k not in ("chunk_size", "stream")}
+            sw = resolve_sweep_backend("oracle")(sc, **fb)
         return sw.curve(0, obj.metric)
 
     def _placement_candidates(self, sc: Scenario):

@@ -47,9 +47,31 @@ from .policy import Policy, RetryPolicy  # noqa: F401  (re-export)
 __all__ = [
     "ArrivalProcess", "FailureModel", "PoissonArrivals",
     "DeterministicArrivals", "MMPPArrivals", "Regime", "RegimeTrace",
-    "RetryPolicy", "Scenario", "arrival_gap", "sample_regime_trace",
-    "sample_task_matrix", "task_survival", "validate_worker_speeds",
+    "RetryPolicy", "Scenario", "arrival_gap", "job_row_keys",
+    "sample_regime_trace", "sample_task_matrix", "task_survival",
+    "validate_worker_speeds",
 ]
+
+
+# --------------------------------------------------------------------------
+# Chunk-offset sampling discipline
+# --------------------------------------------------------------------------
+# Threefry counter layout makes slicing a bulk draw NON-reproducible at an
+# offset: ``sample(key, (N,))[a:b]`` depends on N, not just on [a, b).  The
+# fleet-scale chunked engine therefore derives one key PER JOB INDEX —
+# ``fold_in(key, j)`` — and draws each job's row from its own key.  Any
+# chunk [start, start + m) of such a draw is bit-identical to the same
+# rows of the full draw BY CONSTRUCTION, which is the contract the chunked
+# == monolithic parity tests pin.
+
+def job_row_keys(key: jax.Array, start_job, num_jobs: int) -> jax.Array:
+    """Per-job keys ``fold_in(key, start_job + i)`` for i in [0, num_jobs).
+
+    ``start_job`` may be a traced scalar (the chunked engine passes
+    ``chunk_index * chunk_size`` from inside a scan)."""
+    idx = jnp.asarray(start_job, jnp.uint32) + jnp.arange(num_jobs,
+                                                          dtype=jnp.uint32)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
 
 
 # --------------------------------------------------------------------------
@@ -76,6 +98,26 @@ class ArrivalProcess:
         """Arrival instants of the first ``num_jobs`` jobs (ascending)."""
         raise NotImplementedError
 
+    # -- chunk-offset sampling (fleet-scale streaming engine) ---------------
+    def arrival_state0(self) -> jax.Array:
+        """Initial cross-chunk state for ``gaps_chunk`` (int32 scalar; an
+        opaque carry — only MMPP uses it, for its modulating chain)."""
+        return jnp.zeros((), jnp.int32)
+
+    def gaps_chunk(self, key: jax.Array, start_job, num_jobs: int,
+                   rate=None, state=None):
+        """Interarrival gaps of jobs [start_job, start_job + num_jobs).
+
+        Returns ``(gaps, state')`` where ``gaps[i]`` is the gap ending at
+        the arrival of job ``start_job + i``.  Uses the per-job row-key
+        discipline (``job_row_keys``), so sampling any chunking of
+        [0, N) yields bit-identical gaps to one call over [0, N) — the
+        contract the chunked engine's parity tests pin.  Note this is a
+        DIFFERENT (equal-in-law) sample path from the bulk ``times``
+        draw, whose threefry counters depend on the total length.
+        """
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class PoissonArrivals(ArrivalProcess):
@@ -84,6 +126,14 @@ class PoissonArrivals(ArrivalProcess):
     def times(self, key, num_jobs, rate=None):
         r = self.rate if rate is None else rate
         return jnp.cumsum(jax.random.exponential(key, (num_jobs,)) / r)
+
+    def gaps_chunk(self, key, start_job, num_jobs, rate=None, state=None):
+        r = self.rate if rate is None else rate
+        rks = job_row_keys(key, start_job, num_jobs)
+        e = jax.vmap(jax.random.exponential)(rks)
+        if state is None:
+            state = self.arrival_state0()
+        return e / r, state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +146,12 @@ class DeterministicArrivals(ArrivalProcess):
 
     # CRN note: deterministic arrivals ignore the key by construction, so
     # replication lanes share the identical arrival path.
+
+    def gaps_chunk(self, key, start_job, num_jobs, rate=None, state=None):
+        r = self.rate if rate is None else rate
+        if state is None:
+            state = self.arrival_state0()
+        return jnp.full((num_jobs,), 1.0, jnp.float32) / r, state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +189,27 @@ class MMPPArrivals(ArrivalProcess):
         c = 0.5 * (1.0 / self.slow + 1.0 / self.burst)
         rates = r * c * jnp.where(state == 0, self.slow, self.burst)
         return jnp.cumsum(e / rates)
+
+    def gaps_chunk(self, key, start_job, num_jobs, rate=None, state=None):
+        # Same per-arrival modulation as ``times``, with the chain's
+        # parity carried ACROSS chunks: ``state`` counts flips so far
+        # (mod 2), so any chunking of [0, N) walks the identical chain.
+        r = self.rate if rate is None else rate
+        if state is None:
+            state = self.arrival_state0()
+        rks = job_row_keys(key, start_job, num_jobs)
+
+        def draw(k):
+            ke, ks = jax.random.split(k)
+            return (jax.random.exponential(ke),
+                    jax.random.bernoulli(ks, self.switch))
+
+        e, flips = jax.vmap(draw)(rks)
+        fi = flips.astype(jnp.int32)
+        st = (state + jnp.cumsum(fi)) % 2                # start slow
+        c = 0.5 * (1.0 / self.slow + 1.0 / self.burst)
+        rates = r * c * jnp.where(st == 0, self.slow, self.burst)
+        return e / rates, (state + fi.sum()) % 2
 
 
 # Arrival processes travel into the compiled-surface cache as TRACED
@@ -244,6 +321,38 @@ class FailureModel:
         recover = crash + down
         return crash, recover
 
+    def schedule_chunk(self, key: jax.Array, n: int, start_event: int,
+                       num_events: int, state: Optional[jax.Array] = None):
+        """Chunk-offset twin of ``schedule``: columns [start_event,
+        start_event + num_events) of the crash/recovery schedule, with
+        the per-worker clock carried across chunks.
+
+        Returns ``(crash, recover, state')`` where ``state`` is the (n,)
+        recovery instant preceding the chunk (zeros initially).  Event
+        column m draws from ``fold_in(key, m)``, so the underlying
+        up/down interval draws of any chunking of [0, M) are
+        bit-identical to one call over [0, M) — the same row-key
+        contract as ``sample_task_matrix(start_job=...)`` (and likewise
+        a different, equal-in-law path from the bulk ``schedule`` draw).
+        The cumulative instants agree to float rounding only (a chunk
+        boundary restarts the cumsum from ``state``).
+        """
+        if state is None:
+            state = jnp.zeros((n,), jnp.float32)
+        rks = job_row_keys(key, start_event, num_events)
+
+        def draw(k):
+            ku, kd = jax.random.split(k)
+            return (jax.random.exponential(ku, (n,)) * self.mttf,
+                    jax.random.exponential(kd, (n,)) * self.mttr)
+
+        up, down = jax.vmap(draw)(rks)                   # (m, n) each
+        up, down = up.T, down.T                          # (n, m)
+        crash = state[:, None] + jnp.cumsum(
+            up + jnp.pad(down[:, :-1], ((0, 0), (1, 0))), axis=1)
+        recover = crash + down
+        return crash, recover, recover[:, -1]
+
 
 # Pytree registration: mttf/mttr are traced leaves (the cache reuses one
 # executable across freshly estimated floats) but max_events is a SHAPE
@@ -278,6 +387,7 @@ def sample_task_matrix(
     key: jax.Array,
     delta: Optional[float] = None,
     worker_speeds: Optional[Sequence[float]] = None,
+    start_job: Optional[int] = None,
 ) -> jax.Array:
     """(num_jobs, n) task service times for tasks of ``s`` CUs.
 
@@ -285,8 +395,22 @@ def sample_task_matrix(
     factors — worker w serves every task ``speeds[w]`` times its sampled
     duration (heterogeneous machines).  JAX-traceable; both cluster
     backends draw from here so a shared key yields the same sample path.
+
+    ``start_job=None`` is the historical bulk draw (one threefry call
+    over the whole (num_jobs, n) block — bit-stable for the oracle-parity
+    substrate).  ``start_job=j0`` switches to the chunk-offset row-key
+    discipline: job ``j0 + i``'s row is drawn from ``fold_in(key, j0+i)``
+    so any chunking of [0, N) is bit-identical to slicing one call over
+    [0, N) — the streaming engine's contract (a different, equal-in-law
+    sample path from the bulk draw).
     """
-    t = dist.sample_task(key, (num_jobs, n), s, scaling, delta=delta)
+    if start_job is None:
+        t = dist.sample_task(key, (num_jobs, n), s, scaling, delta=delta)
+    else:
+        rks = job_row_keys(key, start_job, num_jobs)
+        t = jax.vmap(
+            lambda k: dist.sample_task(k, (n,), s, scaling, delta=delta)
+        )(rks)
     if worker_speeds is not None:
         t = t * jnp.asarray(worker_speeds, dtype=t.dtype)[None, :]
     return t

@@ -170,7 +170,9 @@ def resolve_sweep_backend(backend: str):
     ``api.LoadAwareLatency.surface``.  ``"cached"`` is the batched engine
     through the compiled-surface cache (``runtime.surface_cache``):
     identical semantics, parameters traced instead of compiled in, so
-    repeated surfaces with fresh fitted floats reuse a warm executable."""
+    repeated surfaces with fresh fitted floats reuse a warm executable.
+    ``"fleet"`` is the chunked streaming engine (``runtime.fleet``) at
+    its defaults — the memory-bounded path for fleet-scale surfaces."""
     if backend == "oracle":
         from .cluster_oracle import sweep_oracle
         return sweep_oracle
@@ -180,8 +182,12 @@ def resolve_sweep_backend(backend: str):
     if backend == "cached":
         from .surface_cache import cached_sweep
         return cached_sweep
+    if backend == "fleet":
+        from .fleet import fleet_sweep
+        return fleet_sweep
     raise ValueError(
-        f"backend must be 'oracle', 'batched', or 'cached', got {backend!r}")
+        f"backend must be 'oracle', 'batched', 'cached', or 'fleet', "
+        f"got {backend!r}")
 
 
 def simulate(cfg: ClusterConfig, dist: ServiceTime, scaling: Scaling,

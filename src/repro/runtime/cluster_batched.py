@@ -79,21 +79,27 @@ def sweep_compile_count() -> int:
 # The lane: one (load, k) queueing simulation as a scan over jobs
 # --------------------------------------------------------------------------
 
-def _scan_lane(A, S, k, cancel_overhead, preempt: bool):
-    """Exact FCFS/any-k/cancel dynamics for one lane.
+def _kth_sort(nat, k):
+    """k-th smallest via full sort — the historical selection, fastest at
+    the monolithic engine's widths (n ~ 10^2)."""
+    return jnp.sort(nat)[k - 1]
 
-    A: (num_jobs,) arrivals; S: (num_jobs, n) task times; k: traced int32
-    (no recompile across k lanes); preempt is a Python bool (two traced
-    branches).  Returns (latencies (num_jobs,), busy, wasted).
+
+def make_plain_step(k, cancel_overhead, preempt: bool, kth=_kth_sort):
+    """The per-job step of the fault-free ungrouped lane, as a factory.
+
+    Extracted so the monolithic scan (here) and the chunked fleet engine
+    (``runtime.fleet``) run the IDENTICAL recurrence; ``kth`` is the
+    order-statistic selection (sort here; the fleet engine swaps in an
+    exact bit-bisection at n ~ 10^4 where XLA's CPU sort is ~10x
+    slower — same value either way, so parity is unaffected).
     """
-    n = S.shape[1]
-
     def step(carry, inp):
         F, busy, wasted = carry
         a, srow = inp
         start = jnp.maximum(a, F)
         nat = start + srow
-        D = jnp.sort(nat)[k - 1]
+        D = kth(nat, k)
         # first k finishers, ties at D broken by worker index (matching
         # the oracle's event order for simultaneous finishes): all
         # strictly-earlier finishers complete, plus the first
@@ -116,6 +122,18 @@ def _scan_lane(A, S, k, cancel_overhead, preempt: bool):
             F_next = jnp.where(completed | inservice, nat, F)
         return (F_next, busy + run.sum(), wasted + waste.sum()), D - a
 
+    return step
+
+
+def _scan_lane(A, S, k, cancel_overhead, preempt: bool):
+    """Exact FCFS/any-k/cancel dynamics for one lane.
+
+    A: (num_jobs,) arrivals; S: (num_jobs, n) task times; k: traced int32
+    (no recompile across k lanes); preempt is a Python bool (two traced
+    branches).  Returns (latencies (num_jobs,), busy, wasted).
+    """
+    n = S.shape[1]
+    step = make_plain_step(k, cancel_overhead, preempt)
     zero = jnp.zeros((), S.dtype)
     (_, busy, wasted), lat = jax.lax.scan(
         step, (jnp.zeros((n,), S.dtype), zero, zero), (A, S))
@@ -148,7 +166,21 @@ def _scan_lane_failures(A, S, k, cancel_overhead, preempt: bool, crash,
     crash = jnp.asarray(crash, S.dtype)
     recover = jnp.asarray(recover, S.dtype)
     have_jitter = jitter_u is not None
+    step = make_failure_step(k, cancel_overhead, preempt, crash, recover,
+                             retry, have_jitter, n)
+    zero = jnp.zeros((), S.dtype)
+    xs = (A, S, jitter_u) if have_jitter else (A, S)
+    (_, busy, wasted), (lat, okj) = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), xs)
+    return lat, okj, busy, wasted
 
+
+def make_failure_step(k, cancel_overhead, preempt: bool, crash, recover,
+                      retry: RetryPolicy, have_jitter: bool, n: int):
+    """Per-job step of the failure-mode ungrouped lane (factory; see
+    ``make_plain_step`` for why).  ``crash``/``recover`` are bound at
+    construction: the monolithic scan binds the absolute (n, M) schedule
+    once, the chunked engine re-binds a REBASED schedule per chunk."""
     def step(carry, inp):
         F, busy, wasted = carry
         if have_jitter:
@@ -186,11 +218,7 @@ def _scan_lane_failures(A, S, k, cancel_overhead, preempt: bool, crash,
         return (F_next, busy + run.sum(), wasted + waste.sum()), \
             (D - a, success)
 
-    zero = jnp.zeros((), S.dtype)
-    xs = (A, S, jitter_u) if have_jitter else (A, S)
-    (_, busy, wasted), (lat, okj) = jax.lax.scan(
-        step, (jnp.zeros((n,), S.dtype), zero, zero), xs)
-    return lat, okj, busy, wasted
+    return step
 
 
 def _scan_lane_grouped(A, S, k, cancel_overhead, preempt: bool, r, gid,
@@ -207,6 +235,18 @@ def _scan_lane_grouped(A, S, k, cancel_overhead, preempt: bool, r, gid,
     with g < groups) sort to +inf and drop out of the max.
     """
     n = S.shape[1]
+    step = make_grouped_step(cancel_overhead, preempt, r, groups)
+    zero = jnp.zeros((), S.dtype)
+    (_, busy, wasted), lat = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), (A, S, gid))
+    return lat, busy, wasted
+
+
+def make_grouped_step(cancel_overhead, preempt: bool, r, groups: int):
+    """Per-job step of the fault-free grouped lane (factory; see
+    ``make_plain_step``).  The worker->group row rides the step inputs,
+    so the chunked engine can feed its per-lane CONSTANT row without
+    materializing a (num_jobs, n) mask."""
     garange = jnp.arange(groups, dtype=jnp.int32)
 
     def step(carry, inp):
@@ -250,10 +290,7 @@ def _scan_lane_grouped(A, S, k, cancel_overhead, preempt: bool, r, gid,
             F_next = jnp.where(completed | inservice, nat, F)
         return (F_next, busy + run.sum(), wasted + waste.sum()), D - a
 
-    zero = jnp.zeros((), S.dtype)
-    (_, busy, wasted), lat = jax.lax.scan(
-        step, (jnp.zeros((n,), S.dtype), zero, zero), (A, S, gid))
-    return lat, busy, wasted
+    return step
 
 
 def _scan_lane_grouped_failures(A, S, k, cancel_overhead, preempt: bool,
@@ -278,6 +315,20 @@ def _scan_lane_grouped_failures(A, S, k, cancel_overhead, preempt: bool,
     crash = jnp.asarray(crash, S.dtype)
     recover = jnp.asarray(recover, S.dtype)
     have_jitter = jitter_u is not None
+    step = make_grouped_failure_step(cancel_overhead, preempt, crash,
+                                     recover, retry, have_jitter, r, groups)
+    zero = jnp.zeros((), S.dtype)
+    xs = (A, S, gid, jitter_u) if have_jitter else (A, S, gid)
+    (_, busy, wasted), (lat, okj) = jax.lax.scan(
+        step, (jnp.zeros((n,), S.dtype), zero, zero), xs)
+    return lat, okj, busy, wasted
+
+
+def make_grouped_failure_step(cancel_overhead, preempt: bool, crash, recover,
+                              retry: RetryPolicy, have_jitter: bool, r,
+                              groups: int):
+    """Per-job step of the failure-mode grouped lane (factory; see
+    ``make_plain_step`` / ``make_failure_step`` for the contract)."""
     garange = jnp.arange(groups, dtype=jnp.int32)
 
     def step(carry, inp):
@@ -321,11 +372,7 @@ def _scan_lane_grouped_failures(A, S, k, cancel_overhead, preempt: bool,
         return (F_next, busy + run.sum(), wasted + waste.sum()), \
             (D - a, success)
 
-    zero = jnp.zeros((), S.dtype)
-    xs = (A, S, gid, jitter_u) if have_jitter else (A, S, gid)
-    (_, busy, wasted), (lat, okj) = jax.lax.scan(
-        step, (jnp.zeros((n,), S.dtype), zero, zero), xs)
-    return lat, okj, busy, wasted
+    return step
 
 
 @functools.partial(jax.jit, static_argnames=("preempt",))
@@ -716,7 +763,10 @@ def sweep(scenario: Scenario, loads: Sequence[float],
           reps: int = 1, preempt: bool = True, cancel_overhead: float = 0.0,
           seed: int = 0, warmup: Optional[int] = None,
           retry: Optional[RetryPolicy] = None,
-          assignment: Optional[Assignment] = None) -> ClusterSweep:
+          assignment: Optional[Assignment] = None,
+          chunk_size: Optional[int] = None, stream: bool = False,
+          reservoir: int = 4096,
+          shard: Optional[int] = None) -> ClusterSweep:
     """Every (load, k) queueing cell of a scenario in one compiled call.
 
     ``loads`` are mean arrival rates; the scenario's ``arrivals`` process
@@ -735,7 +785,24 @@ def sweep(scenario: Scenario, loads: Sequence[float],
     ``assignment`` switches every lane to the grouped per-group-any-r
     recurrence (see ``assign.strategies``); ``None``/``AllWorkers`` run
     the historical ungrouped path bit-for-bit.
+
+    Any of ``chunk_size`` / ``stream`` / ``shard`` dispatches to the
+    fleet-scale chunked engine (``runtime.fleet``): same semantics and
+    result type, memory bounded by O(lanes * (n + chunk_size)) instead
+    of the full latency cube — the path for n ~ 10^4 workers and 10^5+
+    jobs.  Left at their defaults, the historical monolithic kernel
+    runs unchanged (bit-for-bit, including its bulk RNG draws; the
+    chunked engine's per-job row keys are a different, equal-in-law
+    sample path).
     """
+    if chunk_size is not None or stream or shard is not None:
+        from .fleet import fleet_sweep
+        return fleet_sweep(scenario, loads, ks=ks, num_jobs=num_jobs,
+                           reps=reps, preempt=preempt,
+                           cancel_overhead=cancel_overhead, seed=seed,
+                           warmup=warmup, retry=retry,
+                           assignment=assignment, chunk_size=chunk_size,
+                           stream=stream, reservoir=reservoir, shard=shard)
     n = scenario.n
     ks, loads, warmup, arrivals, speeds = validate_sweep_args(
         scenario, loads, ks, num_jobs, reps, warmup)

@@ -1,0 +1,145 @@
+"""Streaming statistics state machines for the fleet-scale engine.
+
+The chunked cluster engine (``runtime.fleet``) never materializes the
+(reps, loads, K, num_jobs) latency cube; instead each lane carries a
+fixed-size statistics state across job chunks:
+
+  * **Welford count/mean/M2** — merged per chunk with the parallel
+    (Chan et al.) update, so the running mean/variance are independent
+    of the chunk partition up to float rounding.
+  * **Algorithm-R reservoir** — a fixed-size uniform sample of the
+    included latencies, from which p50/p95/p99 are computed on the
+    host.  The per-item acceptance uniforms are pre-sampled per chunk
+    from a dedicated key stream shared across lanes (CRN-paired
+    sketches), and depend only on the GLOBAL job index — so the
+    reservoir contents are bit-identical across chunk sizes, and when
+    the number of included samples is at most the reservoir capacity
+    the sketch holds every sample and the quantiles are EXACT (the
+    ``streaming p99 == exact`` bench gate at n=120 relies on this).
+
+Inclusion (warmup discard, job validity padding, completion under a
+failure model) is expressed as a per-item weight mask, never as a
+reshape — the streaming path has no (num_jobs,)-shaped arrays at all.
+
+All update functions are jnp-traceable (they run inside the fleet
+kernel's outer ``lax.scan``); the ``*_host`` finalizers are numpy.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "reservoir_init", "reservoir_update_chunk", "reservoir_values_host",
+    "welford_finalize_host", "welford_init", "welford_merge_chunk",
+]
+
+
+# --------------------------------------------------------------------------
+# Welford count / mean / M2 (parallel merge per chunk)
+# --------------------------------------------------------------------------
+
+def welford_init(lanes: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-lane (count, mean, M2) zeros."""
+    return (jnp.zeros((lanes,), jnp.int32),
+            jnp.zeros((lanes,), jnp.float32),
+            jnp.zeros((lanes,), jnp.float32))
+
+
+def welford_merge_chunk(state, vals, w):
+    """Merge one chunk of per-lane samples into the running state.
+
+    ``vals`` (lanes, m) latencies; ``w`` (lanes, m) boolean inclusion.
+    The chunk is first reduced to (count, mean, M2) in one vectorized
+    pass, then merged with the carried state by the parallel-Welford
+    rule — associative up to float rounding, so the final state agrees
+    across chunk partitions to ulp-level.
+    """
+    cnt, mean, m2 = state
+    wf = w.astype(vals.dtype)
+    c_cnt = w.sum(axis=1).astype(jnp.int32)
+    c_tot = jnp.maximum(c_cnt, 1).astype(vals.dtype)
+    c_mean = (vals * wf).sum(axis=1) / c_tot
+    c_m2 = (wf * (vals - c_mean[:, None]) ** 2).sum(axis=1)
+    tot = cnt + c_cnt
+    totf = jnp.maximum(tot, 1).astype(vals.dtype)
+    delta = c_mean - mean
+    mean_n = mean + delta * c_cnt.astype(vals.dtype) / totf
+    m2_n = m2 + c_m2 + delta ** 2 * (cnt * c_cnt).astype(vals.dtype) / totf
+    return tot, mean_n, m2_n
+
+
+def welford_finalize_host(cnt, mean, m2):
+    """Merge per-replication states (axis 0) into pooled float64
+    (count, mean, variance) per lane — the host-side final reduction."""
+    cnt = np.asarray(cnt, np.int64)
+    mean = np.asarray(mean, np.float64)
+    m2 = np.asarray(m2, np.float64)
+    tot = cnt.sum(axis=0)
+    totf = np.maximum(tot, 1).astype(np.float64)
+    pooled_mean = (cnt * mean).sum(axis=0) / totf
+    pooled_m2 = (m2 + cnt * (mean - pooled_mean) ** 2).sum(axis=0)
+    var = pooled_m2 / totf
+    return tot, pooled_mean, var
+
+
+# --------------------------------------------------------------------------
+# Algorithm-R reservoir (fixed-size uniform sample)
+# --------------------------------------------------------------------------
+
+def reservoir_init(lanes: int, capacity: int) -> jax.Array:
+    """(lanes, capacity) empty reservoir."""
+    return jnp.zeros((lanes, int(capacity)), jnp.float32)
+
+
+def reservoir_update_chunk(res, cnt, vals, w, u):
+    """Fold one chunk of per-lane samples into the reservoirs.
+
+    ``res`` (lanes, R); ``cnt`` (lanes,) included-so-far counts (the
+    Welford count BEFORE this chunk — the two states share one
+    counter); ``vals``/``w`` (lanes, m); ``u`` (m,) acceptance uniforms
+    shared across lanes (drawn from the global job index, which is what
+    makes the sketch chunk-partition invariant AND CRN-paired across
+    lanes).  Item i with running count t either fills slot t-1 (t <= R)
+    or replaces slot floor(u_i * t) with probability R/t — Vitter's
+    Algorithm R, vectorized over lanes with one scatter row per item.
+    """
+    R = res.shape[1]
+    lanes = res.shape[0]
+    rows = jnp.arange(lanes)
+
+    def body(i, state):
+        res, cnt = state
+        wi = w[:, i]
+        t = cnt + wi.astype(cnt.dtype)                   # count incl. item
+        pos = jnp.where(t <= R, t - 1,
+                        jnp.floor(u[i] * t.astype(jnp.float32))
+                        .astype(cnt.dtype))
+        write = wi & (pos >= 0) & (pos < R)
+        pos_c = jnp.clip(pos, 0, R - 1)
+        cur = res[rows, pos_c]
+        res = res.at[rows, pos_c].set(
+            jnp.where(write, vals[:, i], cur))
+        return res, t
+
+    return jax.lax.fori_loop(0, vals.shape[1], body, (res, cnt))
+
+
+def reservoir_values_host(res, cnt):
+    """Pool reservoir contents across replications (axis 0) per lane.
+
+    Returns a list-of-arrays indexed by lane: replication r contributes
+    its first min(cnt, R) slots.  When every replication's count is at
+    most R this is exactly the multiset of all included samples.
+    """
+    res = np.asarray(res, np.float64)                    # (reps, lanes, R)
+    cnt = np.asarray(cnt, np.int64)                      # (reps, lanes)
+    reps, lanes, R = res.shape
+    out = []
+    for b in range(lanes):
+        parts = [res[r, b, :min(int(cnt[r, b]), R)] for r in range(reps)]
+        out.append(np.concatenate(parts) if parts else np.empty((0,)))
+    return out

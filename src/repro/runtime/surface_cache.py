@@ -103,6 +103,37 @@ def record_cache_key(cache_key: tuple) -> bool:
     return False
 
 
+def _cached_fleet(scenario, loads, ks, num_jobs, reps, preempt,
+                  cancel_overhead, seed, warmup, arrivals, speeds, failures,
+                  retry, assignment, chunk_size, stream, reservoir, shard):
+    """The chunked engine behind the cache facade: bucket-pad the load
+    axis (same executable across re-plans that differ only in the number
+    of rates), record the structural key, trim after the kernel."""
+    from .fleet import (build_fleet_lanes, default_chunk, run_fleet,
+                        summarize_fleet, trim_raw_loads)
+    n = scenario.n
+    lanes = build_fleet_lanes(assignment, n, ks, scenario.worker_speeds)
+    chunk = default_chunk(num_jobs) if chunk_size is None else int(chunk_size)
+    L = len(loads)
+    bucket = load_bucket(L)
+    padded = tuple(loads) + (loads[-1],) * (bucket - L)
+    record_cache_key(
+        ("fleet", type(scenario.dist).__name__, scenario.scaling.value, n,
+         ks, bucket, int(num_jobs), int(reps), bool(preempt),
+         type(arrivals).__name__, scenario.delta is None,
+         None if failures is None else int(failures.max_events), retry,
+         lanes.signature, chunk, bool(stream), int(reservoir),
+         0 if shard is None else int(shard)))
+    raw = run_fleet(scenario, padded, lanes, num_jobs=int(num_jobs),
+                    reps=int(reps), preempt=bool(preempt),
+                    cancel_overhead=float(cancel_overhead), seed=int(seed),
+                    warmup=warmup, arrivals=arrivals, speeds=speeds,
+                    failures=failures, retry=retry, chunk=chunk,
+                    stream=bool(stream), reservoir=int(reservoir),
+                    shard=shard)
+    return summarize_fleet(trim_raw_loads(raw, L), ks)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "scaling", "n", "ks", "num_jobs", "reps", "preempt", "retry", "groups"))
 def _cached_kernel(key, loads, speeds, cancel_overhead, dist, scaling, n,
@@ -128,7 +159,10 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
                  cancel_overhead: float = 0.0, seed: int = 0,
                  warmup: Optional[int] = None,
                  retry: Optional[RetryPolicy] = None,
-                 assignment: Optional[Assignment] = None) -> ClusterSweep:
+                 assignment: Optional[Assignment] = None,
+                 chunk_size: Optional[int] = None, stream: bool = False,
+                 reservoir: int = 4096,
+                 shard: Optional[int] = None) -> ClusterSweep:
     """``cluster_batched.sweep`` through the compiled-surface cache.
 
     Same semantics and CRN discipline; parameters are traced and the
@@ -142,11 +176,22 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
     strategy keys the cache by its STRUCTURAL signature
     (``Assignment.cache_signature`` — group counts, not mask contents),
     so a placement re-plan from fresh telemetry is a warm call.
+
+    Any of ``chunk_size`` / ``stream`` / ``shard`` routes through the
+    chunked fleet engine (``runtime.fleet``), whose kernel already
+    traces every parameter — the same warm-re-plan property — with the
+    chunk size, streaming mode, reservoir capacity, and shard count
+    joining the structural cache key (they are jit statics there).
     """
     n = scenario.n
     ks, loads, warmup, arrivals, speeds = validate_sweep_args(
         scenario, loads, ks, num_jobs, reps, warmup)
     failures, retry = resolve_failure_args(scenario, retry)
+    if chunk_size is not None or stream or shard is not None:
+        return _cached_fleet(scenario, loads, ks, num_jobs, reps, preempt,
+                             cancel_overhead, seed, warmup, arrivals,
+                             speeds, failures, retry, assignment,
+                             chunk_size, stream, reservoir, shard)
     lanes = build_lanes(assignment, n, ks, int(num_jobs),
                         scenario.worker_speeds)
     groups, group_r, group_ids = lanes_as_jnp(lanes)

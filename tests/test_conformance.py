@@ -185,7 +185,10 @@ class TestLoadZeroClosedFormLimit:
         # rate small enough that a job drains long before the next
         # arrives (gap ~ 1000 vs E[Y] <= ~40), but NOT so small that the
         # float32 absolute timeline (A_max ~ num_jobs / rate) outgrows
-        # the latency resolution — the engine carries absolute times
+        # the latency resolution — the MONOLITHIC engine carries absolute
+        # times; past that window use chunk_size= (the fleet engine
+        # rebases the clock per chunk — see
+        # test_chunked_engine_survives_the_float32_horizon below)
         sw = sweep(sc, loads=[1e-3], ks=ks, num_jobs=150, reps=16, seed=11)
         exact = completion_curve(dist, scaling, self.N, ks=ks)
         mc = sw.curve(0, "mean")
@@ -194,6 +197,28 @@ class TestLoadZeroClosedFormLimit:
         for k in ks:
             assert mc[k] == pytest.approx(exact[k], rel=rtol), (
                 fam, scal, k, mc, exact)
+
+    def test_chunked_engine_survives_the_float32_horizon(self):
+        """The pitfall above, promoted to a regression test.  At rate
+        1e-5 x 4000 jobs the absolute timeline reaches ~4e8, where a
+        float32 ulp is 32 — larger than E[Y_{1:12}] = 11 itself — and
+        the monolithic engine's latencies quantize into garbage.  The
+        chunked engine rebases its clock every chunk (max intra-chunk
+        time ~4e5, ulp 0.03), so the SAME scenario recovers the
+        closed-form single-job curve; the monolithic error at k=1 must
+        stay strictly larger than the chunked one, or this test is no
+        longer guarding anything."""
+        sc = Scenario(ShiftedExp(1.0, 10.0), SERVER, self.N)
+        ks = [1, 3, 12]
+        kw = dict(loads=[1e-5], ks=ks, num_jobs=4000, reps=4, seed=11)
+        exact = completion_curve(sc.dist, sc.scaling, self.N, ks=ks)
+        chunked = sweep(sc, **kw, chunk_size=4).curve(0, "mean")
+        mono = sweep(sc, **kw).curve(0, "mean")
+        for k in ks:
+            assert chunked[k] == pytest.approx(exact[k], rel=0.05), (
+                k, chunked, exact)
+        assert abs(mono[1] - exact[1]) > 2 * abs(chunked[1] - exact[1]), (
+            mono, chunked, exact)
 
     def test_queueing_delay_vanishes_with_load(self):
         """Monotone sanity on the same surfaces: mean latency at the
