@@ -26,7 +26,7 @@ from repro.core.scenario import Scenario
 from repro.runtime.cluster import ClusterConfig, simulate
 from repro.runtime.cluster_batched import sweep
 
-from .common import Check, emit_json, peak_rss_mb
+from .common import Check, emit_json
 
 DIST = ShiftedExp(1.0, 5.0)
 SCALING = Scaling.SERVER_DEPENDENT
@@ -114,7 +114,6 @@ def run(n: int = 120, num_jobs: int = 600, smoke: bool = False,
         oracle_cells_per_sec=round(oracle_cps, 4),
         oracle_note="subset of cells spread over (k, load), extrapolated",
         speedup=round(speedup, 1),
-        peak_rss_mb=round(peak_rss_mb(), 1),
         kstar={str(k): v for k, v in kstars.items()},
     ))
     return check.summary()

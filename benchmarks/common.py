@@ -1,9 +1,12 @@
 """Shared benchmark plumbing: timing, memory, CSV/markdown emit, checks."""
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import platform
 import resource
+import subprocess
 import sys
 import time
 from typing import Callable, Dict, List
@@ -39,6 +42,42 @@ def time_call(fn: Callable, *args, repeat: int = 3, **kw) -> float:
     return ts[len(ts) // 2]
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_header() -> Dict:
+    """Uniform provenance header stamped into every BENCH_*.json
+    (``emit_json`` adds it as the ``"run"`` key): git sha, UTC
+    timestamp, interpreter/jax versions, backend devices, platform, and
+    the peak-RSS bracket START (``peak_rss_mb`` is a high-water mark —
+    artifacts record the header value so a reader can attribute the
+    final peak to the measured section, not interpreter boot)."""
+    hdr = {
+        "git_sha": _git_sha(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "peak_rss_mb_at_header": round(peak_rss_mb(), 1),
+        "argv": list(sys.argv),
+    }
+    try:
+        import jax
+        hdr["jax"] = jax.__version__
+        hdr["devices"] = [str(d) for d in jax.devices()]
+    except Exception as exc:                      # jax absent or broken
+        hdr["jax"] = f"unavailable ({type(exc).__name__})"
+    return hdr
+
+
 def emit_rows(name: str, rows: List[Dict], keys: List[str]) -> str:
     """Write CSV + echo; returns path."""
     out = ensure_out()
@@ -54,6 +93,8 @@ def emit_rows(name: str, rows: List[Dict], keys: List[str]) -> str:
 def emit_json(name: str, obj) -> str:
     out = ensure_out()
     path = os.path.join(out, f"{name}.json")
+    if isinstance(obj, dict) and "run" not in obj:
+        obj = {"run": run_header(), **obj}
     with open(path, "w") as f:
         json.dump(obj, f, indent=1, default=str)
     print(f"[{name}] -> {path}")

@@ -47,7 +47,9 @@ the committed full-gate artifact is never clobbered).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import time
 
 import numpy as np
 
@@ -56,12 +58,17 @@ from repro.control import RedundancyController, replay
 from repro.core import (BiModal, Pareto, Regime, Scaling, ShiftedExp,
                         sample_regime_trace)
 from repro.core.scenario import MMPPArrivals, PoissonArrivals
+from repro.obs import SLOMonitor, recording
+from repro.obs.report import (decision_log, decision_log_from_control_events,
+                              render_report)
 
-from .common import Check, emit_json
+from .common import Check, emit_json, ensure_out
 
 PRIOR = BiModal(10.0, 0.3)
 SCALING = Scaling.SERVER_DEPENDENT
 WARM_REPLAN_MS = 50.0
+TRACE_OVERHEAD_GATE = 1.02      # traced wall / untraced wall, best-of-N
+SLO_P99_TOL = 0.02              # streaming p99 vs exact-cube p99
 
 
 def _scripts(steps: int):
@@ -198,6 +205,9 @@ def run(n: int = 24, steps_per_regime: int = 600, seed: int = 0,
             "script", any(regret_ratio_ok),
             f"per-script: {regret_ratio_ok}")
 
+    obs_report = _traced_rate_flip(check, n, steps_per_regime, seed,
+                                   smoke, la_objective)
+
     emit_json("BENCH_control_smoke" if smoke else "BENCH_control", dict(
         n=n, steps_per_regime=steps_per_regime, seed=seed, smoke=smoke,
         scaling=SCALING.value, prior=str(PRIOR),
@@ -211,8 +221,111 @@ def run(n: int = 24, steps_per_regime: int = 600, seed: int = 0,
         observe_ms_per_step={
             k: round(v["observe_seconds_per_step"] * 1e3, 3)
             for k, v in results.items()},
+        observability=obs_report,
     ))
     return check.summary()
+
+
+def _traced_rate_flip(check: Check, n: int, steps: int, seed: int,
+                      smoke: bool, la_objective) -> dict:
+    """The flight-recorder leg on the rate_flip script.
+
+    Gates (DESIGN.md §12):
+      * the decision log reconstructed from the exported trace is
+        bit-for-bit the live controller's ``ControlEvent`` log (BOTH
+        modes — ``--smoke`` fails CI if a trace ever disagrees);
+      * tracing does not perturb decisions (traced policy trajectory ==
+        untraced trajectory under CRN replay);
+      * streaming SLO p99 within ``SLO_P99_TOL`` of the exact-cube p99
+        of the same latency stream;
+      * (full mode) enabled-tracing wall within ``TRACE_OVERHEAD_GATE``
+        of untraced wall, best-of-N replays each.
+    """
+    regimes = _arrival_scripts(steps)["rate_flip"]
+    trace = sample_regime_trace(regimes, SCALING, n, seed=seed)
+
+    def mk(slo=None):
+        # slo_drift=False: the monitor OBSERVES this bench (alarms land
+        # on the recorder) without adding a drift channel, so the regret
+        # and determinism gates above stay comparable run-to-run
+        return RedundancyController(Scenario(PRIOR, SCALING, n),
+                                    objective=la_objective,
+                                    slo=slo, slo_drift=False)
+
+    # compiled surfaces are warm (the arrival loop above replayed this
+    # very script), so both timed sides run warm executables
+    reps = 1 if smoke else 3
+    untraced_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        base = replay(trace, mk(), preempt=False)
+        untraced_s = min(untraced_s, time.perf_counter() - t0)
+
+    slo = None
+    traced_s = float("inf")
+    for _ in range(reps):
+        slo = SLOMonitor(target=float(np.quantile(
+            base.controller_cost, 0.95)))
+        with recording() as rec:
+            for r, reg in enumerate(regimes):
+                rec.event("mark", name="regime", regime=r,
+                          start_job=r * steps, arrivals=str(reg.arrivals),
+                          dist=str(reg.dist))
+            t0 = time.perf_counter()
+            traced = replay(trace, mk(slo), preempt=False)
+            traced_s = min(traced_s, time.perf_counter() - t0)
+            rec.event("mark", name="slo", **slo.state())
+
+    check.expect(
+        "[rate_flip] tracing does not perturb decisions (traced == "
+        "untraced policy trajectory)",
+        np.array_equal(base.policy_k, traced.policy_k))
+
+    log_trace = decision_log(rec.events())
+    log_live = decision_log_from_control_events(traced.events)
+    check.expect(
+        "[rate_flip] trace decision log is BIT-FOR-BIT the controller's "
+        "event log (every commit's (at, k, assignment, trigger))",
+        log_trace == log_live,
+        f"{len(log_trace)} trace commits vs {len(log_live)} live events")
+
+    exact_p99 = float(np.quantile(traced.controller_cost, 0.99))
+    stream_p99 = slo.quantile_estimate()
+    p99_err = abs(stream_p99 - exact_p99) / exact_p99
+    check.expect(
+        f"[rate_flip] streaming SLO p99 within {SLO_P99_TOL:.0%} of the "
+        f"exact-cube p99",
+        p99_err <= SLO_P99_TOL,
+        f"stream {stream_p99:.1f} vs exact {exact_p99:.1f} "
+        f"({p99_err:.2%})")
+
+    overhead = traced_s / max(untraced_s, 1e-9)
+    if smoke:
+        print(f"    [rate_flip] tracing overhead {overhead:.3f}x "
+              f"(informational in smoke mode)")
+    else:
+        check.expect(
+            f"[rate_flip] enabled-tracing wall <= "
+            f"{TRACE_OVERHEAD_GATE:.2f}x untraced (best of {reps})",
+            overhead <= TRACE_OVERHEAD_GATE,
+            f"{overhead:.3f}x ({traced_s:.2f}s vs {untraced_s:.2f}s)")
+
+    suffix = "_smoke" if smoke else ""
+    trace_path = os.path.join(ensure_out(),
+                              f"trace_control_rate_flip{suffix}.jsonl")
+    written = rec.export_jsonl(trace_path)
+    print(f"    [rate_flip] {written} trace events -> {trace_path}")
+    # the report renderer must digest the trace it claims to explain
+    report_lines = render_report(rec.events()).count("\n") + 1
+    return dict(
+        trace_events=written, trace_path=trace_path,
+        trace_dropped=rec.dropped, report_lines=report_lines,
+        decision_log=[list(row) for row in log_trace],
+        slo=slo.state(), slo_p99_exact=exact_p99,
+        slo_p99_stream=stream_p99, slo_p99_err=round(p99_err, 5),
+        untraced_wall_s=round(untraced_s, 3),
+        traced_wall_s=round(traced_s, 3),
+        tracing_overhead=round(overhead, 4))
 
 
 def main(argv=None) -> int:

@@ -99,7 +99,7 @@ def run(smoke: bool = False, **_) -> bool:
         chunk=chunk, fleet_seconds=round(fleet_s, 1),
         jobs_per_sec=round(num_jobs / fleet_s, 1),
         wall_budget_s=wall_budget, rss_growth_mb=round(rss_growth, 1),
-        rss_budget_mb=RSS_BUDGET_MB, peak_rss_mb=round(peak_rss_mb(), 1),
+        rss_budget_mb=RSS_BUDGET_MB,
         kstar={str(k): v for k, v in kstars.items()})
 
     # -- gate 2: streaming fidelity where the exact cube still fits --------

@@ -9,6 +9,11 @@ rate and burstiness from job timestamps, detects the flips with a block
 CUSUM, and re-plans through the batched cluster engine at the estimated
 load — each steady-state re-plan a warm compiled-surface-cache call.
 
+The run is flight-recorded: every drift alarm, commit, and cache event
+lands on ``repro.obs``'s recorder and is exported as a JSONL trace whose
+``python -m repro.obs.report`` rendering reconstructs exactly the commit
+log printed below (the example verifies the equality before exiting).
+
     PYTHONPATH=src python examples/adaptive_load.py
     PYTHONPATH=src python examples/adaptive_load.py --steps 150   # smoke
 """
@@ -22,6 +27,9 @@ from repro.control.controller import RedundancyController
 from repro.core import BiModal, Regime, Scaling, ShiftedExp, \
     sample_regime_trace
 from repro.core.scenario import PoissonArrivals
+from repro.obs import recording
+from repro.obs.report import (decision_log, decision_log_from_control_events,
+                              render_report)
 
 
 def main() -> int:
@@ -30,6 +38,9 @@ def main() -> int:
     ap.add_argument("--steps", type=int, default=400,
                     help="steps per regime")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="trace_adaptive_load.jsonl",
+                    help="flight-recorder JSONL export path "
+                         "('' disables tracing)")
     args = ap.parse_args()
 
     n, steps = args.n, args.steps
@@ -49,7 +60,11 @@ def main() -> int:
     planner = AdaptivePlanner(
         prior, objective=LoadAwareLatency(num_jobs=600, reps=2,
                                           backend="cached", preempt=False))
-    res = replay(trace, planner.controller, preempt=False)
+    with recording() as rec:
+        for r, reg in enumerate(trace.regimes):
+            rec.event("mark", name="regime", regime=r, start_step=r * steps,
+                      rate=reg.arrivals.rate)
+        res = replay(trace, planner.controller, preempt=False)
 
     print(f"\nregimes (steps per regime: {steps}):")
     for r, (lo, hi) in enumerate(trace.boundaries()):
@@ -72,6 +87,19 @@ def main() -> int:
     if res.regret < 0.5 * res_sj.regret:
         print("-> closing the loop on LOAD, not just the service law, "
               "is what pays under arrivals.")
+
+    if args.trace:
+        written = rec.export_jsonl(args.trace)
+        if decision_log(rec.events()) != \
+                decision_log_from_control_events(res.events):
+            print("ERROR: exported trace disagrees with the live commit "
+                  "log above")
+            return 1
+        print(f"\nflight recorder: {written} events -> {args.trace} "
+              f"(decision log verified against the commits above)")
+        print(f"render the run report with:  PYTHONPATH=src python -m "
+              f"repro.obs.report {args.trace}")
+        print("\n" + render_report(rec.events()))
     return 0
 
 

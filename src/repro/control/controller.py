@@ -44,6 +44,8 @@ import numpy as np
 from ..core.distributions import BiModal, ShiftedExp
 from ..core.policy import Policy
 from ..core.scenario import Scenario
+from ..obs import metrics as _obs_metrics
+from ..obs import recorder as _obs_trace
 from .detector import (DriftDetector, DriftEvent, FailureDriftDetector,
                        LoadDriftDetector)
 from .estimators import (ArrivalEstimator, ArrivalModel, FittedModel,
@@ -55,21 +57,35 @@ __all__ = ["ControlEvent", "ControllerConfig", "RedundancyController",
 
 _logger = logging.getLogger(__name__)
 
-#: Surface-fallback warnings are rate-limited by COUNT (the controller is
-#: wall-clock-free by contract): the first failure logs, then every Nth.
-_FALLBACK_LOG_EVERY = 16
-_fallback_count = 0
+#: Surface-fallback warnings are rate-limited on the MONOTONIC clock:
+#: the first failure logs, then identical warnings are suppressed for
+#: this many seconds.  (Only the LOGGING is clocked — the controller's
+#: decisions stay wall-clock-free by contract; every fallback still
+#: increments the ``controller.surface_fallbacks`` counter and lands on
+#: the flight recorder, so suppressed warnings are never lost evidence.)
+_FALLBACK_LOG_SECONDS = 30.0
+_fallback_last_log: Optional[float] = None
+
+#: Every oracle fallback, suppressed-log or not (obs metrics plane).
+_C_FALLBACKS = _obs_metrics.REGISTRY.counter("controller.surface_fallbacks")
 
 
 def _warn_surface_fallback(exc: BaseException) -> None:
-    global _fallback_count
-    if _fallback_count % _FALLBACK_LOG_EVERY == 0:
+    global _fallback_last_log
+    _C_FALLBACKS.inc()
+    rec = _obs_trace.active()
+    if rec is not None:
+        rec.event("oracle_fallback", name=type(exc).__name__,
+                  error=str(exc))
+    now = time.monotonic()
+    if _fallback_last_log is None or \
+            now - _fallback_last_log >= _FALLBACK_LOG_SECONDS:
         _logger.warning(
             "compiled-surface re-plan failed (%s: %s); falling back to "
-            "the oracle engine for this commit (suppressing the next %d "
-            "identical warnings)",
-            type(exc).__name__, exc, _FALLBACK_LOG_EVERY - 1)
-    _fallback_count += 1
+            "the oracle engine for this commit (suppressing identical "
+            "warnings for the next %.0f s)",
+            type(exc).__name__, exc, _FALLBACK_LOG_SECONDS)
+        _fallback_last_log = now
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,10 +315,18 @@ class RedundancyController:
                  config: Optional[ControllerConfig] = None,
                  detector: Optional[DriftDetector] = None,
                  selector: Optional[OnlineSelector] = None,
-                 actuators: Sequence[Actuator] = ()):
+                 actuators: Sequence[Actuator] = (),
+                 slo=None, slo_drift: bool = True):
         from ..api import LoadAwareLatency, Planner
         self.scenario = scenario
         self.config = config or ControllerConfig()
+        #: optional streaming SLO monitor (``obs.slo.SLOMonitor``):
+        #: ``observe(latency=...)`` feeds it, and with ``slo_drift``
+        #: a multi-window burn alarm becomes a pending service drift —
+        #: the SLO channel joins the CUSUM/EWMA channels as an alarm
+        #: source, resolved by the normal refit-commit path.
+        self.slo = slo
+        self.slo_drift = bool(slo_drift)
         if isinstance(objective, str):
             if objective != "load_aware":
                 raise ValueError(
@@ -393,7 +417,8 @@ class RedundancyController:
     # -- the loop -----------------------------------------------------------
     def observe(self, worker_times: np.ndarray,
                 timestamp: Optional[float] = None,
-                losses: Optional[np.ndarray] = None
+                losses: Optional[np.ndarray] = None,
+                latency: Optional[float] = None
                 ) -> Optional[ControlEvent]:
         """Feed one step's per-CU completion times; maybe commit.
 
@@ -412,6 +437,15 @@ class RedundancyController:
         rule-of-three redundancy floor.  Omitting it leaves that side
         dormant, exactly like the load side without timestamps.
 
+        ``latency`` is the step/job's observed END-TO-END completion
+        latency (queueing included).  With an ``slo`` monitor attached
+        it feeds the streaming p-quantile-vs-target state; a
+        multi-window burn alarm is recorded on the flight recorder and
+        (under ``slo_drift``) parked as a pending service drift, so a
+        blown SLO re-fits and re-plans through exactly the machinery a
+        CUSUM alarm uses.  Omitting it (or the monitor) leaves the SLO
+        side dormant, like the other optional channels.
+
         When the scenario carries an exogenous per-CU ``delta`` (known
         deterministic work), the controller estimates the NOISE
         distribution: delta is subtracted here once and re-injected at
@@ -419,6 +453,27 @@ class RedundancyController:
         fitted parameters and the re-plan scenario would then add it
         again — a double count that distorts the whole k-curve.
         """
+        if latency is not None and self.slo is not None:
+            slo_alarm = self.slo.observe(latency)
+            if slo_alarm is not None:
+                rec = _obs_trace.active()
+                if rec is not None:
+                    rec.event(
+                        "slo_alarm", name="slo_burn", at=slo_alarm.at,
+                        sample=self._seen, burn_fast=slo_alarm.burn_fast,
+                        burn_slow=slo_alarm.burn_slow,
+                        threshold=slo_alarm.threshold,
+                        target=slo_alarm.target,
+                        quantile_est=slo_alarm.quantile_est)
+                if self.slo_drift and self._pending is None:
+                    # the burn alarm is anchored at the CURRENT sample
+                    # index: everything after it is post-breach by
+                    # construction, the same anchoring rule as
+                    # _maybe_drift_commit's alarm-index window
+                    self._pending = DriftEvent(
+                        kind="slo_burn", at=self._seen, start=self._seen,
+                        stat=slo_alarm.burn_fast,
+                        threshold=slo_alarm.threshold)
         raw = np.asarray(worker_times, dtype=np.float64).ravel()
         if raw.size == self.scenario.n:
             # positional per-worker speed attribution (same alignment
@@ -475,6 +530,7 @@ class RedundancyController:
             alarm = self.detector.update(x, at=start)
             if alarm is not None and self._pending is None:
                 self._pending = alarm
+                self._trace_alarm("service", alarm)
             return load_event if load_event is not None else loss_event
 
         if self._pending is not None:                    # drift: wait + refit
@@ -483,6 +539,7 @@ class RedundancyController:
         alarm = self.detector.update(x, at=start)
         if alarm is not None:
             self._pending = alarm
+            self._trace_alarm("service", alarm)
             return self._maybe_drift_commit()
 
         if self.config.refresh_every and \
@@ -520,6 +577,7 @@ class RedundancyController:
                 np.asarray([est.last_gap]), at=gap_idx)
             if alarm is not None:
                 self._pending_load = alarm
+                self._trace_alarm("load", alarm)
                 est.reset()          # clean post-change gap accumulation
                 return None
             if self.config.arrival_refresh_gaps and \
@@ -606,6 +664,7 @@ class RedundancyController:
             alarm = self.failure_detector.update(outcomes, at=start)
             if alarm is not None:
                 self._pending_loss = alarm
+                self._trace_alarm("failure", alarm)
                 self.loss_estimator.reset()     # clean post-change stream
                 return None
             if allow_commit and self.config.loss_refresh_outcomes and \
@@ -653,7 +712,14 @@ class RedundancyController:
         if len(bad) > max_drop:
             bad = sorted(bad, key=lambda w: frac[w],
                          reverse=True)[:max_drop]
+        previous = self.quarantined
         self.quarantined = tuple(sorted(bad))
+        if self.quarantined != previous:
+            rec = _obs_trace.active()
+            if rec is not None:
+                rec.event("quarantine", name="refresh",
+                          at=self._seen, workers=self.quarantined,
+                          previous=previous)
 
     def _degraded(self, scenario: Scenario) -> Scenario:
         """The plan scenario after graceful degradation: quarantined
@@ -696,6 +762,17 @@ class RedundancyController:
         return scenario
 
     # -- internals ----------------------------------------------------------
+    @staticmethod
+    def _trace_alarm(channel: str, alarm: DriftEvent) -> None:
+        """One detector crossing onto the flight recorder (no-op when
+        tracing is disabled — the guard precedes any payload build)."""
+        rec = _obs_trace.active()
+        if rec is not None:
+            rec.event("drift_alarm", name=channel, channel=channel,
+                      alarm_kind=alarm.kind, at=alarm.at,
+                      start=alarm.start, stat=alarm.stat,
+                      threshold=alarm.threshold)
+
     def _maybe_drift_commit(self) -> Optional[ControlEvent]:
         """Commit the pending drift once enough GUARANTEED post-change
         samples exist.  The window is anchored at the ALARM index, not the
@@ -755,19 +832,21 @@ class RedundancyController:
         t0 = time.perf_counter()
         self._fell_back = False
         cached = warm = False
-        if self.load_objective is not None and self.arrival_model is not None:
-            from ..api import Planner
-            cached = self.load_objective.backend == "cached"
-            if cached:
-                from ..runtime.surface_cache import surface_cache_stats
-                misses0 = surface_cache_stats()["misses"]
-            plan = Planner._finalize(
-                scenario, self._load_aware_curve(scenario, unit))
-            if cached:
-                warm = not self._fell_back and \
-                    surface_cache_stats()["misses"] == misses0
-        else:
-            plan = self.planner.plan(scenario)
+        with _obs_trace.span("replan", kind=kind, family=fitted.family):
+            if self.load_objective is not None and \
+                    self.arrival_model is not None:
+                from ..api import Planner
+                cached = self.load_objective.backend == "cached"
+                if cached:
+                    from ..runtime.surface_cache import surface_cache_stats
+                    misses0 = surface_cache_stats()["misses"]
+                plan = Planner._finalize(
+                    scenario, self._load_aware_curve(scenario, unit))
+                if cached:
+                    warm = not self._fell_back and \
+                        surface_cache_stats()["misses"] == misses0
+            else:
+                plan = self.planner.plan(scenario)
         replan_ms = (time.perf_counter() - t0) * 1e3
         new = plan.policy
         old = self._policy
@@ -800,8 +879,16 @@ class RedundancyController:
         # actuators see EVERY committed model, not just k switches —
         # model-dependent actuation (e.g. hedged-serving replicas) must
         # track a family change even when k* happens to stay put
+        rec = _obs_trace.active()
         for a in self.actuators:
-            a.apply(self._policy, fitted)
+            if rec is None:
+                a.apply(self._policy, fitted)
+            else:
+                ta = rec.now()
+                a.apply(self._policy, fitted)
+                rec.event("actuate", name=type(a).__name__,
+                          dur=rec.now() - ta, at=self._seen,
+                          k=self._policy.k, switched=switched)
         self.model = fitted
         if kind not in ("load", "failure"):
             # a load/failure commit re-plans under an UNCHANGED service
@@ -831,6 +918,23 @@ class RedundancyController:
             # refreshes (and quiet load resyncs) that change nothing are
             # silent bookkeeping
             self.events.append(event)
+            if rec is not None:
+                # emitted in the SAME branch that records the
+                # ControlEvent, so a trace's commit log is bit-for-bit
+                # the controller's decision log by construction
+                # (benchmarks/control_loop.py gates the equality)
+                a_new = self._policy.assignment
+                rec.event(
+                    "commit", name=kind, at=self._seen,
+                    trigger=drift.kind if drift is not None else kind,
+                    old_k=old.k, new_k=self._policy.k,
+                    old_n=old.n, new_n=self._policy.n,
+                    switched=switched, replan_ms=replan_ms,
+                    family=fitted.family, hedged=hedged,
+                    cached=cached, warm=warm,
+                    fallback=self._fell_back,
+                    quarantined=self.quarantined,
+                    assignment=None if a_new is None else repr(a_new))
             return event
         return None
 

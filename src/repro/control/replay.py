@@ -254,8 +254,11 @@ def replay(trace: RegimeTrace, controller: RedundancyController,
         else:
             cost[t] = static_cost[k][t]
         t0 = time.perf_counter()
+        # the realized per-job completion cost doubles as the SLO
+        # latency feed (a no-op unless the controller carries a monitor)
         controller.observe(cu[t],
-                           timestamp=float(A[t]) if queued else None)
+                           timestamp=float(A[t]) if queued else None,
+                           latency=float(cost[t]))
         observe_s += time.perf_counter() - t0
 
     controller_regime_means = np.asarray(

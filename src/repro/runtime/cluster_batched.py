@@ -55,6 +55,7 @@ from ..assign.strategies import (Assignment, GroupLanes, build_lanes,
 from ..core.distributions import Scaling
 from ..core.policy import RetryPolicy
 from ..core.scenario import FailureModel, PoissonArrivals, Scenario
+from ..obs import recorder as _trace
 from .cluster import ClusterConfig, ClusterResult, default_warmup
 from .failures import (effective_finish, group_resolution, job_resolution,
                        resolve_retry)
@@ -810,12 +811,20 @@ def sweep(scenario: Scenario, loads: Sequence[float],
     groups, group_r, group_ids = lanes_as_jnp(build_lanes(
         assignment, n, ks, int(num_jobs), scenario.worker_speeds))
 
+    rec = _trace.active()
+    traces0 = _SWEEP_TRACES
+    t0 = rec.now() if rec is not None else 0.0
     out = _sweep_kernel(
         jax.random.PRNGKey(seed), jnp.asarray(loads, jnp.float32), speeds,
         jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
         ks, int(num_jobs), int(reps), bool(preempt), arrivals,
         None if scenario.delta is None else float(scenario.delta),
         failures, retry, groups, group_r, group_ids)
+    if rec is not None:
+        rec.event("sweep", name="batched", dur=rec.now() - t0,
+                  n=n, num_jobs=int(num_jobs), reps=int(reps),
+                  lanes=len(loads) * len(ks),
+                  compiled=_SWEEP_TRACES > traces0)
 
     if retry is None:
         lat, busy, wasted, a_last = out

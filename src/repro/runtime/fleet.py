@@ -67,6 +67,7 @@ from ..assign.strategies import (Assignment, group_ids_matrix,
 from ..core.distributions import Scaling
 from ..core.policy import RetryPolicy
 from ..core.scenario import Scenario, job_row_keys
+from ..obs import recorder as _trace
 from .cluster_batched import (ClusterSweep, make_failure_step,
                               make_grouped_failure_step, make_grouped_step,
                               make_plain_step, resolve_failure_args,
@@ -92,6 +93,19 @@ def fleet_compile_count() -> int:
     """How many times a fleet kernel has been TRACED (== compiled) —
     the chunked twin of ``cluster_batched.sweep_compile_count``."""
     return _FLEET_TRACES
+
+
+def _peak_rss_mb() -> float:
+    """Peak resident set of this process in MB (ru_maxrss is KB on
+    Linux, bytes on macOS); -1.0 where ``resource`` is unavailable."""
+    try:
+        import resource
+        import sys
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        return peak / (1024.0 * 1024.0) if sys.platform == "darwin" \
+            else peak / 1024.0
+    except Exception:
+        return -1.0
 
 
 def default_chunk(num_jobs: int) -> int:
@@ -498,7 +512,11 @@ def run_fleet(scenario: Scenario, loads: Sequence[float], lanes: FleetLanes,
 
     acc = {k: [] for k in ("busy", "wasted", "horizon", "a_last", "lat",
                            "ok", "cnt", "mean", "m2", "res", "nok")}
-    for rk in jax.random.split(jax.random.PRNGKey(seed), int(reps)):
+    rec = _trace.active()
+    for rep, rk in enumerate(
+            jax.random.split(jax.random.PRNGKey(seed), int(reps))):
+        traces0 = _FLEET_TRACES
+        t0 = rec.now() if rec is not None else 0.0
         statsf, ys = _fleet_kernel(
             rk, jnp.asarray(rates), speeds, jnp.float32(cancel_overhead),
             scenario.dist, arrivals, delta,
@@ -539,6 +557,19 @@ def run_fleet(scenario: Scenario, loads: Sequence[float], lanes: FleetLanes,
                 lat.astype(np.float64).reshape(L, KL, num_jobs))
             if have_fail:
                 acc["ok"].append(okc.astype(bool).reshape(L, KL, num_jobs))
+        if rec is not None:
+            # per-REPLICATION granularity: the chunk loop is a lax.scan
+            # inside the jit boundary, so the host (and the recorder)
+            # cannot see individual chunks — DESIGN.md §12 documents
+            # the boundary.  Progress + peak RSS per warm-executable
+            # call is the bounded-memory story this engine exists for.
+            rec.event("sweep", name="fleet", dur=rec.now() - t0,
+                      rep=rep, reps=int(reps), n=n, lanes=B,
+                      num_chunks=-(-int(num_jobs) // int(chunk)),
+                      chunk=int(chunk), jobs=int(num_jobs),
+                      stream=bool(stream),
+                      compiled=_FLEET_TRACES > traces0,
+                      rss_mb=_peak_rss_mb())
 
     def stk(name):
         return np.stack(acc[name]) if acc[name] else None

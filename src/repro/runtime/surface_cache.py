@@ -35,6 +35,7 @@ suite and the benchmark's warm-latency gate.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -44,6 +45,8 @@ import numpy as np
 from ..assign.strategies import Assignment, build_lanes
 from ..core.policy import RetryPolicy
 from ..core.scenario import Scenario
+from ..obs import metrics as _metrics
+from ..obs import recorder as _trace
 from .cluster_batched import (ClusterSweep, _sweep_core, lanes_as_jnp,
                               resolve_failure_args, summarize_sweep,
                               validate_sweep_args)
@@ -54,8 +57,13 @@ __all__ = ["cached_sweep", "load_bucket", "record_cache_key",
 #: Load-grid lengths are padded up to one of these (ascending).
 _LOAD_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
 
-_HITS = 0
-_MISSES = 0
+#: Hit/miss accounting lives on the metrics plane (``obs.metrics``) —
+#: the registry is the one queryable namespace for every module's
+#: counters; the compiled-KEY registry below stays module-local because
+#: it mirrors jit executable state, not a statistic.
+_C_HITS = _metrics.REGISTRY.counter("surface_cache.hits")
+_C_MISSES = _metrics.REGISTRY.counter("surface_cache.misses")
+_H_COMPILE_MS = _metrics.REGISTRY.hist("surface_cache.compile_ms")
 _KEYS: Dict[tuple, int] = {}
 
 
@@ -75,8 +83,11 @@ def surface_cache_stats() -> dict:
     A MISS is a call whose (family, scaling, n, ks, load-bucket, ...)
     key has not been compiled yet this process — it pays the XLA trace;
     a HIT reuses a warm executable and costs one kernel launch.
+    (Backed by the ``surface_cache.hits``/``.misses`` counters of
+    ``obs.metrics.REGISTRY``.)
     """
-    return {"hits": _HITS, "misses": _MISSES, "entries": len(_KEYS)}
+    return {"hits": _C_HITS.value, "misses": _C_MISSES.value,
+            "entries": len(_KEYS)}
 
 
 def reset_surface_cache_stats() -> None:
@@ -84,23 +95,29 @@ def reset_surface_cache_stats() -> None:
     matching the jit executables that stay warm: a post-reset call on an
     already-compiled key still counts as a hit (clearing the registry
     would misreport warm calls as compiles)."""
-    global _HITS, _MISSES
-    _HITS = 0
-    _MISSES = 0
+    _C_HITS.reset()
+    _C_MISSES.reset()
 
 
 def record_cache_key(cache_key: tuple) -> bool:
     """Count one cache lookup; True when the key was already compiled.
     Shared by ``cached_sweep`` and the co-optimizing assignment surface
-    (``assign.surface.co_sweep``), which builds its own flattened key."""
-    global _HITS, _MISSES
-    if cache_key in _KEYS:
-        _HITS += 1
+    (``assign.surface.co_sweep``), which builds its own flattened key.
+    Each lookup also lands on the flight recorder (``cache_hit`` /
+    ``cache_miss``) when one is installed."""
+    warm = cache_key in _KEYS
+    if warm:
+        _C_HITS.inc()
         _KEYS[cache_key] += 1
-        return True
-    _MISSES += 1
-    _KEYS[cache_key] = 1
-    return False
+    else:
+        _C_MISSES.inc()
+        _KEYS[cache_key] = 1
+    rec = _trace.active()
+    if rec is not None:
+        rec.event("cache_hit" if warm else "cache_miss",
+                  name="surface_cache", family=str(cache_key[0]),
+                  key=str(cache_key))
+    return warm
 
 
 def _cached_fleet(scenario, loads, ks, num_jobs, reps, preempt,
@@ -117,13 +134,14 @@ def _cached_fleet(scenario, loads, ks, num_jobs, reps, preempt,
     L = len(loads)
     bucket = load_bucket(L)
     padded = tuple(loads) + (loads[-1],) * (bucket - L)
-    record_cache_key(
+    warm = record_cache_key(
         ("fleet", type(scenario.dist).__name__, scenario.scaling.value, n,
          ks, bucket, int(num_jobs), int(reps), bool(preempt),
          type(arrivals).__name__, scenario.delta is None,
          None if failures is None else int(failures.max_events), retry,
          lanes.signature, chunk, bool(stream), int(reservoir),
          0 if shard is None else int(shard)))
+    t0 = time.perf_counter()
     raw = run_fleet(scenario, padded, lanes, num_jobs=int(num_jobs),
                     reps=int(reps), preempt=bool(preempt),
                     cancel_overhead=float(cancel_overhead), seed=int(seed),
@@ -131,7 +149,20 @@ def _cached_fleet(scenario, loads, ks, num_jobs, reps, preempt,
                     failures=failures, retry=retry, chunk=chunk,
                     stream=bool(stream), reservoir=int(reservoir),
                     shard=shard)
+    _record_surface_call(warm, (time.perf_counter() - t0) * 1e3,
+                         "cached_fleet")
     return summarize_fleet(trim_raw_loads(raw, L), ks)
+
+
+def _record_surface_call(warm: bool, wall_ms: float, which: str) -> None:
+    """Metrics + trace for one surface call: a MISS's wall time includes
+    the XLA trace and lands on the compile histogram and a ``compile``
+    event; a HIT is a kernel launch and stays metrics-only."""
+    if not warm:
+        _H_COMPILE_MS.update(wall_ms)
+        rec = _trace.active()
+        if rec is not None:
+            rec.event("compile", name=which, wall_ms=wall_ms)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -199,19 +230,22 @@ def cached_sweep(scenario: Scenario, loads: Sequence[float],
     bucket = load_bucket(L)
     padded = tuple(loads) + (loads[-1],) * (bucket - L)
 
-    record_cache_key(
+    warm = record_cache_key(
         (type(scenario.dist).__name__, scenario.scaling.value, n,
          ks, bucket, int(num_jobs), int(reps), bool(preempt),
          type(arrivals).__name__, scenario.delta is None,
          None if failures is None else int(failures.max_events),
          retry, None if lanes is None else lanes.signature))
 
+    t0 = time.perf_counter()
     out = _cached_kernel(
         jax.random.PRNGKey(seed), jnp.asarray(padded, jnp.float32), speeds,
         jnp.float32(cancel_overhead), scenario.dist, scenario.scaling, n,
         ks, int(num_jobs), int(reps), bool(preempt), arrivals,
         None if scenario.delta is None else jnp.float32(scenario.delta),
         failures, retry, groups, group_r, group_ids)
+    _record_surface_call(warm, (time.perf_counter() - t0) * 1e3,
+                         "cached_sweep")
 
     # trim the padded lanes before aggregation: the surviving cells are
     # lane-independent under vmap, so they match the unpadded kernel

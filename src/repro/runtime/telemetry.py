@@ -127,9 +127,14 @@ class Telemetry:
     #: minimum decayed sample mass before a worker's own estimate is
     #: trusted (below it the worker reads as a neutral 1.0)
     min_worker_mass: float = 4.0
+    #: optional streaming SLO monitor (``repro.obs.SLOMonitor``): job
+    #: latencies recorded via :meth:`record_latency` feed it, and its
+    #: burn alarms land on the flight recorder
+    slo: object = None
 
     def __post_init__(self):
         self._times: Deque[float] = collections.deque(maxlen=self.window)
+        self._latencies: Deque[float] = collections.deque(maxlen=self.window)
         self._arrivals: Deque[float] = collections.deque(maxlen=self.window)
         self._task_size: int = 1
         # task outcomes: (worker index, completed?) pairs, ring-bounded so
@@ -202,6 +207,38 @@ class Telemetry:
             counts=tuple(float(c) for c in mass),
             num_samples=int(self._w_raw),
         )
+
+    def record_latency(self, latency: float):
+        """Record one end-to-end JOB completion latency (as opposed to
+        the per-worker step times of :meth:`record_step`) and feed the
+        attached SLO monitor, if any.  Returns the monitor's alarm when
+        this observation crossed the multi-window burn rule (also
+        recorded on the flight recorder), else None.
+        """
+        x = float(latency)
+        if not math.isfinite(x):
+            raise ValueError(f"latency must be finite, got {latency}")
+        self._latencies.append(x)
+        if self.slo is None:
+            return None
+        alarm = self.slo.observe(x)
+        if alarm is not None:
+            from ..obs import recorder as _trace
+            rec = _trace.active()
+            if rec is not None:
+                rec.event("slo_alarm", name="slo_burn", at=alarm.at,
+                          burn_fast=alarm.burn_fast,
+                          burn_slow=alarm.burn_slow,
+                          threshold=alarm.threshold, target=alarm.target,
+                          quantile_est=alarm.quantile_est)
+        return alarm
+
+    @property
+    def num_latencies(self) -> int:
+        return len(self._latencies)
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray(self._latencies, dtype=np.float64)
 
     def record_arrival(self, timestamp: float):
         """Record one job arrival instant (monotone non-decreasing)."""
