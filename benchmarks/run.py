@@ -18,7 +18,8 @@ def main(argv=None):
 
     from . import (assignment_sweep, cluster_sweep, coded_step, control_loop,
                    fault_injection, fig_bimodal, fig_pareto, fig_sexp,
-                   fleet_sweep, kernels, planner_sweep, queueing, table1)
+                   fleet_sweep, kernels, planner_sweep, queueing,
+                   serving_sweep, table1)
     mc = 4_000 if args.fast else 20_000
     jobs = 400 if args.fast else 1200
 
@@ -36,6 +37,8 @@ def main(argv=None):
          lambda: control_loop.run(smoke=args.fast)),
         ("fault_injection (crash-restart surface + storm degradation)",
          lambda: fault_injection.run(smoke=args.fast)),
+        ("serving_sweep (p99-objective control through a flash crowd)",
+         lambda: serving_sweep.run(smoke=args.fast)),
         ("fig_sexp (paper Figs. 3-5)", lambda: fig_sexp.run(mc_trials=mc)),
         ("fig_pareto (paper Figs. 6-10)", lambda: fig_pareto.run(mc_trials=mc)),
         ("fig_bimodal (paper Figs. 11-18)", fig_bimodal.run),

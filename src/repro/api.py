@@ -56,11 +56,13 @@ from .core.policy import Policy
 from .core.scenario import (ArrivalProcess, DeterministicArrivals,
                             MMPPArrivals, PoissonArrivals, Scenario,
                             task_survival)
+from .runtime.cluster_batched import Infeasible, InfeasibleSurfaceError
 
 __all__ = [
     "Scenario", "Policy", "Plan", "Objective",
     "MeanCompletionTime", "QuantileCompletionTime", "LoadAwareLatency",
     "FRCompletionTime", "Planner", "AdaptivePlanner",
+    "Infeasible", "InfeasibleSurfaceError",
     "ArrivalProcess", "PoissonArrivals", "DeterministicArrivals",
     "MMPPArrivals",
     "Assignment", "AllWorkers", "ReplicationGroups", "RoundRobin",
@@ -352,6 +354,10 @@ class Planner:
         surf = obj.co_surface(scenario, [obj.arrival_rate], assignments,
                               ks=scenario.legal_ks())
         cube = surf.metric(obj.metric)[:, 0, :]          # (A, K)
+        if not np.any(np.isfinite(cube)):
+            raise InfeasibleSurfaceError(
+                f"no feasible (k, assignment): every cell of the "
+                f"{cube.shape} co-surface is non-finite")
         flat = int(np.argmin(cube))                      # first min wins
         ai, kj = divmod(flat, len(surf.ks))
         k_best = int(surf.ks[kj])
@@ -424,7 +430,17 @@ class Planner:
     @staticmethod
     def _finalize(scenario: Scenario, curve: Dict[int, float]) -> Plan:
         """Arg-min + theorem annotation over a computed k-curve (the single
-        implementation behind both the new API and the legacy shims)."""
+        implementation behind both the new API and the legacy shims).
+
+        Raises ``InfeasibleSurfaceError`` when no candidate is finite —
+        a failure-storm surface where every cell carries the all-failed
+        ``np.inf`` sentinel has no optimum, and silently committing the
+        first k would report a catastrophic configuration as a plan.
+        """
+        if curve and not any(np.isfinite(v) for v in curve.values()):
+            raise InfeasibleSurfaceError(
+                f"no feasible k: every candidate in {sorted(curve)} is "
+                f"non-finite (all jobs failed in every cell)")
         k_best = min(curve, key=lambda k: (curve[k], k))
         tk, tname = theorem_kstar(scenario.dist, scenario.scaling, scenario.n,
                                   scenario.delta)
@@ -487,11 +503,18 @@ class AdaptivePlanner:
             actuators=actuators)
 
     def observe(self, worker_times,
-                timestamp: Optional[float] = None) -> Optional["ControlEvent"]:
+                timestamp: Optional[float] = None,
+                latency: Optional[float] = None,
+                completion: Optional[float] = None
+                ) -> Optional["ControlEvent"]:
         """Feed one step's per-CU completion times (plus, in load-aware
-        mode, the job's arrival instant); returns the commit event when
-        the controller re-planned (else None)."""
-        return self.controller.observe(worker_times, timestamp=timestamp)
+        mode, the job's arrival instant; ``latency`` feeds an attached
+        SLO monitor and ``completion`` the completion-ordered sojourn
+        channel); returns the commit event when the controller
+        re-planned (else None)."""
+        return self.controller.observe(worker_times, timestamp=timestamp,
+                                       latency=latency,
+                                       completion=completion)
 
     def attach(self, actuator) -> "AdaptivePlanner":
         self.controller.actuators.append(actuator)

@@ -73,18 +73,26 @@ class AssignmentSurface:
         return {int(k): float(v) for k, v in zip(self.ks, cube.min(axis=0))}
 
     def kstar(self, metric: str = "mean"
-              ) -> Dict[float, Tuple[int, Assignment]]:
+              ) -> Dict[float, object]:
         """load -> jointly optimal (k, assignment).
 
         Ties resolve to the earliest assignment in ``assignments`` and,
         within it, the smallest k (ks are ascending) — so AllWorkers
         first in the list means "prefer the paper's dispatch unless a
-        placement strictly wins".
+        placement strictly wins".  A load whose whole (A, K) slab is
+        non-finite (every cell the all-failed ``np.inf`` sentinel) maps
+        to ``runtime.cluster_batched.Infeasible`` instead of a bogus
+        first-cell argmin.
         """
+        from ..runtime.cluster_batched import Infeasible
         cube = self.metric(metric)                        # (A, L, K)
-        out = {}
+        out: Dict[float, object] = {}
         for i, lam in enumerate(self.loads):
-            flat = int(np.argmin(cube[:, i, :]))          # first min wins
+            slab = cube[:, i, :]
+            if not np.any(np.isfinite(slab)):
+                out[float(lam)] = Infeasible(load=float(lam), metric=metric)
+                continue
+            flat = int(np.argmin(slab))                   # first min wins
             a, j = divmod(flat, len(self.ks))
             out[float(lam)] = (int(self.ks[j]), self.assignments[a])
         return out

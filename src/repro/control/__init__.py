@@ -27,11 +27,13 @@ from .controller import (ControlEvent, ControllerConfig,  # noqa: F401
                          HedgedServeActuator, RedundancyController,
                          TrainerActuator)
 from .detector import (DriftDetector, DriftEvent,  # noqa: F401
-                       FailureDriftDetector, LoadDriftDetector)
+                       FailureDriftDetector, LoadDriftDetector,
+                       SojournDriftDetector)
 from .estimators import (ArrivalEstimator, ArrivalModel,  # noqa: F401
                          BiModalEstimator, FittedModel, LossModel,
                          LossRateEstimator, OnlineSelector,
-                         ParetoEstimator, ShiftedExpEstimator, fit_window)
+                         ParetoEstimator, ShiftedExpEstimator, SojournModel,
+                         SojournEstimator, fit_window)
 from .replay import ReplayResult, replay  # noqa: F401
 
 __all__ = [
@@ -40,5 +42,6 @@ __all__ = [
     "FailureDriftDetector", "FittedModel", "HedgedServeActuator",
     "LoadDriftDetector", "LossModel", "LossRateEstimator", "OnlineSelector",
     "ParetoEstimator", "RedundancyController", "ReplayResult",
-    "ShiftedExpEstimator", "fit_window", "replay",
+    "ShiftedExpEstimator", "SojournDriftDetector", "SojournEstimator",
+    "SojournModel", "fit_window", "replay",
 ]

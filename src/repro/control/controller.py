@@ -47,15 +47,23 @@ from ..core.scenario import Scenario
 from ..obs import metrics as _obs_metrics
 from ..obs import recorder as _obs_trace
 from .detector import (DriftDetector, DriftEvent, FailureDriftDetector,
-                       LoadDriftDetector)
+                       LoadDriftDetector, SojournDriftDetector)
 from .estimators import (ArrivalEstimator, ArrivalModel, FittedModel,
                          LossModel, LossRateEstimator, OnlineSelector,
-                         fit_window, model_median)
+                         SojournEstimator, fit_window, model_median)
 
 __all__ = ["ControlEvent", "ControllerConfig", "RedundancyController",
            "TrainerActuator", "HedgedServeActuator"]
 
 _logger = logging.getLogger(__name__)
+
+#: Fraction of jobs a unit of plan-curve gain accrues to, per objective
+#: metric: a p99 curve dropping by one unit moves ~1% of the jobs by
+#: that much, so the AMORTIZED switch-cost gate weights a quantile gain
+#: by its tail mass before comparing against ``switch_cost`` (the
+#: relative hysteresis bar stays in quantile plan-curve units — see
+#: DESIGN.md §13).
+_TAIL_MASS = {"mean": 1.0, "p50": 0.5, "p95": 0.05, "p99": 0.01}
 
 #: Surface-fallback warnings are rate-limited on the MONOTONIC clock:
 #: the first failure logs, then identical warnings are suppressed for
@@ -151,6 +159,31 @@ class ControllerConfig:
     speed_min_mass: float = 4.0     # decayed per-worker sample mass
                                     # before its own estimate is trusted
                                     # (below: neutral 1.0)
+    sojourn_forget: float = 0.995   # completion-ordered sojourn-moment
+                                    # forgetting (control.estimators.
+                                    # SojournEstimator)
+    sojourn_min_jobs: int = 48      # (arrival, completion) pairs before
+                                    # the sojourn channel is trusted, and
+                                    # fresh jobs after a commit before it
+                                    # may page again
+    sojourn_band: float = 0.75      # sojourn-inflation alarm band
+                                    # (SojournDriftDetector)
+    sojourn_refit_gaps: int = 16    # clean post-alarm gaps before a
+                                    # SOJOURN-armed load commit: the
+                                    # inflation band only trips on large
+                                    # shifts, so a short refit buys speed
+                                    # without the marginal channels'
+                                    # false-commit risk
+    arrival_emergency_ratio: float = 5.0    # pending-load commits fire at
+                                    # arrival_min_gaps (skipping the refit
+                                    # floor) when the clean post-alarm rate
+                                    # sits beyond this factor of the
+                                    # committed rate, either way: a shift
+                                    # that large is beyond any MMPP dwell's
+                                    # aliasing, and waiting out the refit
+                                    # floor deepens a backlog (up) or
+                                    # strands an over-provisioned plan
+                                    # (down).  0 = off
 
     def __post_init__(self):
         if self.boot_samples < 2 or self.refit_samples < 2:
@@ -201,6 +234,24 @@ class ControllerConfig:
         if self.speed_min_mass <= 0.0:
             raise ValueError(
                 f"speed_min_mass must be > 0, got {self.speed_min_mass}")
+        if not (0.0 < self.sojourn_forget <= 1.0):
+            raise ValueError(
+                f"sojourn_forget must be in (0, 1], got {self.sojourn_forget}")
+        if self.sojourn_min_jobs < 2:
+            raise ValueError(
+                f"sojourn_min_jobs must be >= 2, got {self.sojourn_min_jobs}")
+        if self.sojourn_band <= 0.0:
+            raise ValueError(
+                f"sojourn_band must be > 0, got {self.sojourn_band}")
+        if self.sojourn_refit_gaps < 2:
+            raise ValueError(
+                f"sojourn_refit_gaps must be >= 2, got "
+                f"{self.sojourn_refit_gaps}")
+        if self.arrival_emergency_ratio < 0.0 or \
+                0.0 < self.arrival_emergency_ratio <= 1.0:
+            raise ValueError(
+                f"arrival_emergency_ratio must be 0 (off) or > 1, got "
+                f"{self.arrival_emergency_ratio}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,6 +277,9 @@ class ControlEvent:
     quarantined: Tuple[int, ...] = ()   # workers excluded from the plan
     fallback: bool = False      # the sweep backend failed and the commit
                                 # re-planned on the oracle engine instead
+    metric: str = "mean"        # the objective metric the plan rode: a
+                                # quantile ("p95"/"p99") means the curve
+                                # was the tail row of the surface
 
     @property
     def family(self) -> str:
@@ -271,17 +325,44 @@ class TrainerActuator(Actuator):
 class HedgedServeActuator(Actuator):
     """Re-plans the hedged-serving replica count from the committed model
     (``launch.serve.plan_replicas``; the hedge gain is a tail RATIO, so
-    the unit-convention BiModal scale cancels)."""
+    the unit-convention BiModal scale cancels), and derives the hedge
+    FIRE DELAY from the committed plan.
+
+    ``hedge_delay`` is the raw-time instant (after a request's own
+    arrival) at which the backup fires.  On every commit ``apply`` sets
+    the single-job fallback — the fitted model's straggler cut — and
+    when the controller planned on a load-aware surface it additionally
+    hands every actuator the raw-time TAIL row of the committed curve
+    (``apply_plan``): the delay then becomes the plan's own tail latency
+    at the committed k, so hedging fires where the COMMITTED objective
+    says the tail begins (queueing included) instead of at a single-job
+    model heuristic.  ``delay_source`` records which path set it."""
 
     def __init__(self, max_r: int = 4, cost_weight: float = 0.25):
         self.max_r = max_r
         self.cost_weight = cost_weight
         self.replicas = 1
+        self.hedge_delay: Optional[float] = None
+        self.delay_source = "model"
 
     def apply(self, policy: Policy, model: FittedModel) -> None:
         from ..launch.serve import plan_replicas
         self.replicas = plan_replicas(model.dist, max_r=self.max_r,
                                       cost_weight=self.cost_weight)
+        self.hedge_delay = model.straggle_threshold()
+        self.delay_source = "model"
+
+    def apply_plan(self, policy: Policy, model: FittedModel,
+                   tail_curve, unit: float) -> None:
+        """Adopt the committed plan's tail latency at the committed k
+        (``tail_curve`` is already in raw time units); a missing or
+        non-finite entry keeps the ``apply`` fallback."""
+        if not tail_curve:
+            return
+        v = tail_curve.get(policy.k)
+        if v is not None and math.isfinite(v):
+            self.hedge_delay = float(v)
+            self.delay_source = "plan"
 
 
 class RedundancyController:
@@ -375,12 +456,22 @@ class RedundancyController:
         self._w_out = np.zeros(scenario.n)    # decayed per-worker outcomes
         self._w_loss = np.zeros(scenario.n)   # decayed per-worker losses
         self._fell_back = False
+        # -- the completion-ordered (sojourn) side ---------------------------
+        self.sojourn_estimator = SojournEstimator(
+            forget=self.config.sojourn_forget,
+            min_jobs=self.config.sojourn_min_jobs)
+        self.sojourn_detector = SojournDriftDetector(
+            band=self.config.sojourn_band,
+            min_jobs=self.config.sojourn_min_jobs)
+        self._jobs_seen = 0
         # -- the placement (assignment) side --------------------------------
         self._w_time = np.zeros(scenario.n)   # decayed per-worker service
         self._w_tcnt = np.zeros(scenario.n)   # sums and sample masses
         self._co_curve = None     # (assignments, ks, (A, K) cube) of the
         #                           last co-optimized re-plan, for the
         #                           placement hysteresis gate
+        self._tail_curve = None   # k -> raw-time tail latency of the last
+        #                           load-aware surface, for hedge actuation
 
     # -- read side ----------------------------------------------------------
     @property
@@ -418,7 +509,8 @@ class RedundancyController:
     def observe(self, worker_times: np.ndarray,
                 timestamp: Optional[float] = None,
                 losses: Optional[np.ndarray] = None,
-                latency: Optional[float] = None
+                latency: Optional[float] = None,
+                completion: Optional[float] = None
                 ) -> Optional[ControlEvent]:
         """Feed one step's per-CU completion times; maybe commit.
 
@@ -445,6 +537,16 @@ class RedundancyController:
         blown SLO re-fits and re-plans through exactly the machinery a
         CUSUM alarm uses.  Omitting it (or the monitor) leaves the SLO
         side dormant, like the other optional channels.
+
+        ``completion`` is the job's absolute completion instant; paired
+        with ``timestamp`` it feeds the completion-ordered sojourn
+        channel (``SojournEstimator`` + ``SojournDriftDetector``) — the
+        end-to-end latency a serving master actually sees.  A sojourn
+        inflation alarm re-plans at the CURRENT arrival estimate through
+        the load-commit path, catching queueing-regime shifts that move
+        neither the service marginal nor the committed arrival model far
+        enough to alarm on their own.  Requires the load-aware objective;
+        dormant otherwise, like the other optional channels.
 
         When the scenario carries an exogenous per-CU ``delta`` (known
         deterministic work), the controller estimates the NOISE
@@ -495,7 +597,11 @@ class RedundancyController:
             load_event = self._observe_arrival(timestamp)
             loss_event = self._observe_losses(
                 raw, losses, allow_commit=load_event is None)
-            return load_event if load_event is not None else loss_event
+            self._observe_sojourn(timestamp, completion)
+            for ev in (load_event, loss_event):
+                if ev is not None:
+                    return ev
+            return None
         if self.scenario.delta is not None:
             x = np.maximum(x - self.scenario.delta, 1e-12)
         start = self._seen
@@ -505,6 +611,7 @@ class RedundancyController:
         load_event = self._observe_arrival(timestamp)
         loss_event = self._observe_losses(raw, losses,
                                           allow_commit=load_event is None)
+        self._observe_sojourn(timestamp, completion)
 
         if self.model is None:                           # bootstrapping
             if self._seen < self.config.boot_samples:
@@ -525,13 +632,16 @@ class RedundancyController:
         if load_event is not None or loss_event is not None:
             # the service channel still sees this batch: a load/failure
             # commit does not rebase the service detector (see _commit),
-            # so its statistics keep accumulating; a service alarm raised
-            # here is parked and committed by the normal drift path
+            # so its statistics keep accumulating; a service alarm
+            # raised here is parked and committed by the normal drift
+            # path
             alarm = self.detector.update(x, at=start)
             if alarm is not None and self._pending is None:
                 self._pending = alarm
                 self._trace_alarm("service", alarm)
-            return load_event if load_event is not None else loss_event
+            for ev in (load_event, loss_event):
+                if ev is not None:
+                    return ev
 
         if self._pending is not None:                    # drift: wait + refit
             return self._maybe_drift_commit()
@@ -593,11 +703,69 @@ class RedundancyController:
                 return self._commit("load", window=None, model=self.model,
                                     quiet=True)
             return None
-        if est.num_gaps >= self.config.arrival_refit_gaps:
+        need = self.config.sojourn_refit_gaps \
+            if self._pending_load.kind.startswith("sojourn") \
+            else self.config.arrival_refit_gaps
+        enough = est.num_gaps >= max(need, self.config.arrival_min_gaps)
+        if not enough and self.config.arrival_emergency_ratio and \
+                est.num_gaps >= self.config.arrival_min_gaps:
+            # emergency refit: the clean post-alarm gaps already prove a
+            # rate shift no MMPP dwell can fake, and every job spent
+            # waiting for the refit floor either deepens a backlog the
+            # eventual plan must drain (up) or leaves the fleet planned
+            # for a world that ended (down)
+            ratio = est.rate() / self.arrival_model.rate
+            if ratio >= self.config.arrival_emergency_ratio or \
+                    ratio <= 1.0 / self.config.arrival_emergency_ratio:
+                enough = True
+        if enough:
             ev = self._commit("load", window=None, model=self.model,
                               drift=self._pending_load)
             self._pending_load = None
             return ev
+        return None
+
+    def _observe_sojourn(self, arrival: Optional[float],
+                         completion: Optional[float]) -> None:
+        """The completion-ordered side of one observation: sojourn-moment
+        update, inflation-band check, and (maybe) ARMING a "load" commit.
+        A no-op without an (arrival, completion) pair or a load-aware
+        objective.
+
+        An inflation alarm does not commit by itself: the decayed
+        arrival-rate estimate is exactly what a sudden regime shift
+        leaves STALE (a 10x flash crowd takes hundreds of gaps to move
+        a decayed mean), so committing at it would re-plan for the old
+        world — and, worse, rebase the load CUSUM away from the very
+        evidence the shift is banking.  Instead the alarm pre-empts the
+        marginal detector: it becomes the pending load alarm and resets
+        the arrival estimator, so the normal refit path commits a few
+        gaps later at the CLEAN post-change rate.  The channel's speed
+        is in the ALARM — queue inflation shows up in completions many
+        jobs before gap statistics can prove a rate change.
+        """
+        if arrival is None or completion is None:
+            return None
+        est = self.sojourn_estimator
+        est.observe(arrival, completion)
+        self._jobs_seen += 1
+        if self.load_objective is None or self.model is None or \
+                not est.ready:
+            return None
+        if self.sojourn_detector.reference is None:
+            # first eligible observation anchors the reference; the
+            # detector's own min_jobs cooldown runs from here
+            self.sojourn_detector.rebase(est.mean(), at=self._jobs_seen)
+            return None
+        if self._pending_load is not None or \
+                not self.arrival_estimator.primed:
+            return None          # the refit path already owns the commit
+        alarm = self.sojourn_detector.update(est.mean(), at=self._jobs_seen)
+        if alarm is None:
+            return None
+        self._trace_alarm("sojourn", alarm)
+        self._pending_load = alarm
+        self.arrival_estimator.reset()   # clean post-change gaps only
         return None
 
     def _observe_losses(self, raw: np.ndarray,
@@ -831,22 +999,41 @@ class RedundancyController:
         scenario = self._degraded(scenario)
         t0 = time.perf_counter()
         self._fell_back = False
+        self._tail_curve = None
         cached = warm = False
-        with _obs_trace.span("replan", kind=kind, family=fitted.family):
-            if self.load_objective is not None and \
-                    self.arrival_model is not None:
-                from ..api import Planner
-                cached = self.load_objective.backend == "cached"
-                if cached:
-                    from ..runtime.surface_cache import surface_cache_stats
-                    misses0 = surface_cache_stats()["misses"]
-                plan = Planner._finalize(
-                    scenario, self._load_aware_curve(scenario, unit))
-                if cached:
-                    warm = not self._fell_back and \
-                        surface_cache_stats()["misses"] == misses0
-            else:
-                plan = self.planner.plan(scenario)
+        metric = "mean"
+        from ..runtime.cluster_batched import InfeasibleSurfaceError
+        try:
+            with _obs_trace.span("replan", kind=kind, family=fitted.family):
+                if self.load_objective is not None and \
+                        self.arrival_model is not None:
+                    from ..api import Planner
+                    metric = self.load_objective.metric
+                    cached = self.load_objective.backend == "cached"
+                    if cached:
+                        from ..runtime.surface_cache import \
+                            surface_cache_stats
+                        misses0 = surface_cache_stats()["misses"]
+                    plan = Planner._finalize(
+                        scenario, self._load_aware_curve(scenario, unit))
+                    if cached:
+                        warm = not self._fell_back and \
+                            surface_cache_stats()["misses"] == misses0
+                else:
+                    plan = self.planner.plan(scenario)
+        except InfeasibleSurfaceError as exc:
+            # every candidate came back non-finite (failure-storm
+            # surface): committing any k would be fiction.  Keep the
+            # standing policy, keep the re-committed estimator models
+            # (they are valid regardless of plan feasibility), surface
+            # the evidence, and let the next alarm retry once the storm
+            # moves
+            _logger.warning("%s commit aborted: %s", kind, exc)
+            rec = _obs_trace.active()
+            if rec is not None:
+                rec.event("infeasible", name=kind, at=self._seen,
+                          error=str(exc))
+            return None
         replan_ms = (time.perf_counter() - t0) * 1e3
         new = plan.policy
         old = self._policy
@@ -861,11 +1048,17 @@ class RedundancyController:
             else:
                 # the curve is in the plan model's time units (normalized
                 # low-mode or hedge-typical units); switch_cost is in raw
-                # time units, so the absolute gain must be re-scaled
+                # time units, so the absolute gain must be re-scaled.
+                # Under a quantile objective the gain is additionally in
+                # QUANTILE plan-curve units — tail displacement, not
+                # per-job saving — so the amortized leg weights it by the
+                # tail mass it moves (_TAIL_MASS); the relative bar rides
+                # the quantile curve untouched
                 gain = cost_old - cost_new
                 rel = gain / max(cost_new, 1e-12)
+                tail_w = _TAIL_MASS.get(metric, 1.0)
                 switched = (rel >= self.config.hysteresis and
-                            gain * unit * self.config.amortize_steps
+                            gain * tail_w * unit * self.config.amortize_steps
                             >= self.config.switch_cost)
         if switched:
             self._policy = new
@@ -881,11 +1074,20 @@ class RedundancyController:
         # track a family change even when k* happens to stay put
         rec = _obs_trace.active()
         for a in self.actuators:
+            # actuators with an ``apply_plan`` hook additionally receive
+            # the committed plan's raw-time tail curve (None when the
+            # commit rode the closed form) — the hedged-serving delay
+            # derives from the plan, not just the model
+            plan_hook = getattr(a, "apply_plan", None)
             if rec is None:
                 a.apply(self._policy, fitted)
+                if plan_hook is not None:
+                    plan_hook(self._policy, fitted, self._tail_curve, unit)
             else:
                 ta = rec.now()
                 a.apply(self._policy, fitted)
+                if plan_hook is not None:
+                    plan_hook(self._policy, fitted, self._tail_curve, unit)
                 rec.event("actuate", name=type(a).__name__,
                           dur=rec.now() - ta, at=self._seen,
                           k=self._policy.k, switched=switched)
@@ -908,12 +1110,20 @@ class RedundancyController:
             # often than refresh_every samples (the third asymmetry,
             # mirroring the two detector-rebase rules above)
             self._last_commit = self._seen
+        if self.sojourn_estimator.ready:
+            # EVERY commit re-anchors the sojourn reference: the plan
+            # (or its models) changed, so the expected end-to-end
+            # latency changed with it — inflation is measured against
+            # the regime the committed plan was derived in
+            self.sojourn_detector.rebase(self.sojourn_estimator.mean(),
+                                         at=self._jobs_seen)
         event = ControlEvent(
             kind=kind, at=self._seen, model=fitted, hedged=hedged,
             old_policy=old, new_policy=self._policy, switched=switched,
             replan_ms=replan_ms, drift=drift, arrival=self.arrival_model,
             cached=cached, warm=warm, loss=self.loss_model,
-            quarantined=self.quarantined, fallback=self._fell_back)
+            quarantined=self.quarantined, fallback=self._fell_back,
+            metric=metric)
         if (kind != "refresh" and not quiet) or switched:
             # refreshes (and quiet load resyncs) that change nothing are
             # silent bookkeeping
@@ -931,7 +1141,7 @@ class RedundancyController:
                     old_n=old.n, new_n=self._policy.n,
                     switched=switched, replan_ms=replan_ms,
                     family=fitted.family, hedged=hedged,
-                    cached=cached, warm=warm,
+                    cached=cached, warm=warm, metric=metric,
                     fallback=self._fell_back,
                     quarantined=self.quarantined,
                     assignment=None if a_new is None else repr(a_new))
@@ -949,12 +1159,21 @@ class RedundancyController:
         measured in raw time, so it converts as rate_curve = rate_raw *
         unit — one job per 20 s is one job per 2 curve units when the
         unit is 10 s.
+
+        Side effect: stashes ``self._tail_curve`` — k -> the surface's
+        TAIL latency (the objective's own quantile, or p99 under a mean
+        objective) in RAW time units — for plan-derived hedge actuation
+        (``HedgedServeActuator.apply_plan``).  Under a quantile
+        objective the returned planning curve IS the quantile row of the
+        same surface; no extra kernel work either way, the cube holds
+        every row.
         """
         from ..runtime.cluster import resolve_sweep_backend
         obj = self.load_objective
         am = self.arrival_model
         sc = dataclasses.replace(scenario, arrivals=am.process())
         self._co_curve = None
+        tail_metric = obj.metric if obj.metric in ("p95", "p99") else "p99"
         kwargs = dict(ks=sc.legal_ks(), num_jobs=obj.num_jobs,
                       reps=obj.reps, preempt=obj.preempt,
                       cancel_overhead=obj.cancel_overhead, seed=obj.seed,
@@ -994,6 +1213,14 @@ class RedundancyController:
                                 backend="oracle", **fb)
             cube = surf.metric(obj.metric)[:, 0, :]          # (A, K)
             self._co_curve = (surf.assignments, list(surf.ks), cube)
+            # tail row at each k's OBJECTIVE-optimal assignment: the
+            # hedge delay describes the placement the plan will commit
+            tcube = surf.metric(tail_metric)[:, 0, :]
+            ai = np.argmin(np.where(np.isfinite(cube), cube, np.inf),
+                           axis=0)                            # (K,)
+            self._tail_curve = {
+                int(k): float(tcube[ai[j], j]) * unit
+                for j, k in enumerate(surf.ks)}
             return {int(k): float(v)
                     for k, v in zip(surf.ks, cube.min(axis=0))}
         run = resolve_sweep_backend(obj.backend)
@@ -1012,6 +1239,8 @@ class RedundancyController:
             fb = {k: v for k, v in kwargs.items()
                   if k not in ("chunk_size", "stream")}
             sw = resolve_sweep_backend("oracle")(sc, **fb)
+        self._tail_curve = {k: v * unit
+                            for k, v in sw.curve(0, tail_metric).items()}
         return sw.curve(0, obj.metric)
 
     def _placement_candidates(self, sc: Scenario):

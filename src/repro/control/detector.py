@@ -36,7 +36,7 @@ import numpy as np
 from .estimators import ArrivalModel, FittedModel
 
 __all__ = ["DriftDetector", "DriftEvent", "FailureDriftDetector",
-           "LoadDriftDetector"]
+           "LoadDriftDetector", "SojournDriftDetector"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +255,66 @@ class FailureDriftDetector:
                 return DriftEvent("loss_down", at=idx, start=self.dn_start,
                                   stat=self.g_dn, threshold=self.threshold)
         self.g_up_min = mn
+        return None
+
+
+@dataclasses.dataclass
+class SojournDriftDetector:
+    """Band detector on completion-ordered sojourn inflation.
+
+    The service channel watches task TIMES and the load channel watches
+    arrival TIMESTAMPS, but neither sees the queue itself: a plan whose
+    modeled inputs all still fit can nonetheless be delivering inflated
+    END-TO-END latency (queueing regime shifts faster than either
+    marginal drifts, e.g. a flash crowd arriving exactly at the
+    stability knee).  This detector watches the decayed sojourn mean
+    (``control.estimators.SojournEstimator``) THROUGH the reference
+    committed at the last re-plan: inflation = mean / reference, and
+    crossing ``1 + band`` ("sojourn_up") or its reciprocal
+    ("sojourn_down") pages the controller for a re-plan at the CURRENT
+    arrival model.
+
+    Same contract as the siblings: ``rebase`` on every commit (the plan
+    changed, so the expected sojourn changed with it), ``at``/``start``
+    are absolute JOB indices, plain deterministic arithmetic.
+    ``min_jobs`` fresh jobs must flow after a rebase before an alarm —
+    the decayed mean still carries pre-commit jobs right after a switch.
+    """
+
+    band: float = 0.75        # alarm at +-75% inflation: wide enough that
+                              # per-phase MMPP burst noise on a decayed
+                              # mean does not page, narrow enough that a
+                              # queue heading for instability (unbounded
+                              # inflation) pages within ~min_jobs
+    min_jobs: int = 48
+
+    def __post_init__(self):
+        if self.band <= 0.0:
+            raise ValueError(f"band must be > 0, got {self.band}")
+        if self.min_jobs < 1:
+            raise ValueError(f"min_jobs must be >= 1, got {self.min_jobs}")
+        self.reference: Optional[float] = None
+        self.rebased_at = 0
+
+    def rebase(self, mean_sojourn: float, at: int) -> None:
+        """Adopt the sojourn level at a commit as the new reference."""
+        self.reference = max(float(mean_sojourn), 1e-12)
+        self.rebased_at = at
+
+    def update(self, mean_sojourn: float, at: int) -> Optional[DriftEvent]:
+        """Compare the current decayed mean against the reference;
+        returns the alarm (the controller rebases at its next commit)."""
+        if self.reference is None or \
+                at - self.rebased_at < self.min_jobs:
+            return None
+        infl = float(mean_sojourn) / self.reference
+        hi = 1.0 + self.band
+        if infl >= hi:
+            return DriftEvent("sojourn_up", at=at, start=self.rebased_at,
+                              stat=infl, threshold=hi)
+        if infl <= 1.0 / hi:
+            return DriftEvent("sojourn_down", at=at, start=self.rebased_at,
+                              stat=infl, threshold=1.0 / hi)
         return None
 
 

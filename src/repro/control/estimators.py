@@ -44,7 +44,8 @@ from ..core.scenario import (ArrivalProcess, DeterministicArrivals,
 __all__ = ["ArrivalEstimator", "ArrivalModel", "FittedModel",
            "LossModel", "LossRateEstimator",
            "ShiftedExpEstimator", "ParetoEstimator", "BiModalEstimator",
-           "OnlineSelector", "fit_window"]
+           "OnlineSelector", "SojournEstimator", "SojournModel",
+           "fit_window"]
 
 #: Per-sample log-likelihood floor (matches the logpmf miss floor).
 LL_FLOOR = -700.0
@@ -410,22 +411,44 @@ class ArrivalModel:
     POISSON_BELOW = 1.5
     #: the symmetric two-state MMPP's marginal gap mixture caps CV^2 at 3
     MMPP_CAP = 2.9
+    #: evidence mass at which an over-dispersion estimate keeps half its
+    #: excess over Poisson in the committed process.  CV^2 from a short
+    #: post-alarm refit window is heavy-tailed upward (one straggling lull
+    #: inflates the square), and the MMPP mapping AMPLIFIES it — CV^2 of
+    #: 2.3 already plans burst dwells at ~5x the mean rate, braced against
+    #: which every quantile surface prefers maximal diversity.  Shrinking
+    #: the excess by num_gaps / (num_gaps + mass) makes a committed burst
+    #: model something the stream must EARN; a sustained bursty regime
+    #: (hundreds of decayed gaps) keeps its dispersion essentially intact.
+    DISPERSION_SHRINK_MASS = 128.0
+
+    def effective_dispersion(self) -> float:
+        """The dispersion the PLAN should brace for: the raw estimate
+        with its excess over Poisson shrunk by evidence mass.  Sub-
+        Poisson estimates pass through — mapping them to a milder
+        process (clockwork) is the conservative direction already."""
+        if self.dispersion <= 1.0 or self.num_gaps <= 0.0:
+            return self.dispersion
+        w = self.num_gaps / (self.num_gaps + self.DISPERSION_SHRINK_MASS)
+        return 1.0 + (self.dispersion - 1.0) * w
 
     def process(self) -> ArrivalProcess:
         """The planning-substrate ``ArrivalProcess`` matching this model.
 
-        Dispersion maps onto the closest shape the cluster engines
-        sample: clockwork (``DeterministicArrivals``) below
-        ``DETERMINISTIC_BELOW``, Poisson up to ``POISSON_BELOW``, else a
-        symmetric two-state ``MMPPArrivals`` whose burst multiplier b
-        solves the marginal-mixture identity CV^2 = 3 - 8/(b + 1/b)^2
-        (slow = 1/b, burst = b, so the long-run rate is exact).
+        Effective (evidence-shrunk) dispersion maps onto the closest
+        shape the cluster engines sample: clockwork
+        (``DeterministicArrivals``) below ``DETERMINISTIC_BELOW``,
+        Poisson up to ``POISSON_BELOW``, else a symmetric two-state
+        ``MMPPArrivals`` whose burst multiplier b solves the
+        marginal-mixture identity CV^2 = 3 - 8/(b + 1/b)^2 (slow = 1/b,
+        burst = b, so the long-run rate is exact).
         """
-        if self.dispersion < self.DETERMINISTIC_BELOW:
+        d = self.effective_dispersion()
+        if d < self.DETERMINISTIC_BELOW:
             return DeterministicArrivals(rate=self.rate)
-        if self.dispersion <= self.POISSON_BELOW:
+        if d <= self.POISSON_BELOW:
             return PoissonArrivals(rate=self.rate)
-        cv2 = min(self.dispersion, self.MMPP_CAP)
+        cv2 = min(d, self.MMPP_CAP)
         t = math.sqrt(8.0 / (3.0 - cv2))            # t = b + 1/b
         b = 0.5 * (t + math.sqrt(t * t - 4.0))
         return MMPPArrivals(rate=self.rate, slow=1.0 / b, burst=b)
@@ -632,6 +655,101 @@ class LossRateEstimator:
                 f"need {self.min_outcomes} outcomes, have {self._count}")
         return LossModel(rate=self.rate(), upper=self.upper(),
                          num_outcomes=self.w)
+
+
+# --------------------------------------------------------------------------
+# Completion-ordered sojourn estimation (the QUEUE side of the loop)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SojournModel:
+    """A committed end-to-end sojourn summary: what a serving master sees.
+
+    ``mean``        decayed mean of completion - arrival (service PLUS
+                    queueing — the quantity an SLO is written against,
+                    which the service-fit x arrival-model route only
+                    predicts indirectly).
+    ``dispersion``  decayed CV^2 of the sojourns.
+    ``num_jobs``    effective evidence mass (decayed weight), the same
+                    currency as ``FittedModel.num_samples``.
+    """
+
+    mean: float
+    dispersion: float
+    num_jobs: float = 0.0
+
+
+class SojournEstimator:
+    """Streaming sojourn moments from (arrival, completion) pairs.
+
+    Feed each job's realized arrival and completion instants; the decayed
+    (weight, sum, sum-of-squares) moments track the end-to-end latency
+    the fleet is actually delivering.  Only the DIFFERENCE enters the
+    moments, so the statistics are timestamp-translation invariant like
+    ``ArrivalEstimator``'s gaps.  The controller pairs this with
+    ``control.detector.SojournDriftDetector``: estimator owns the
+    moments, detector owns the alarm rule — the same split as the
+    arrival/load pair.
+    """
+
+    def __init__(self, forget: float = 0.995, min_jobs: int = 48):
+        if not (0.0 < forget <= 1.0):
+            raise ValueError(f"forget must be in (0, 1], got {forget}")
+        if min_jobs < 2:
+            raise ValueError(f"min_jobs must be >= 2, got {min_jobs}")
+        self.forget = forget
+        self.min_jobs = min_jobs
+        self.w = self.ss = self.ss2 = 0.0
+        self._count = 0
+        self.last_sojourn: float = 0.0
+
+    def observe(self, arrival: float, completion: float) -> None:
+        """One job's (arrival, completion) pair, in completion order."""
+        a, c = float(arrival), float(completion)
+        # shared clock-tolerance rule: ulp-backward completions clamp to
+        # a zero-length sojourn, larger inversions raise
+        s = max(arrival_gap(a, c), _TINY)
+        self.last_sojourn = s
+        f = self.forget
+        self.w = self.w * f + 1.0
+        self.ss = self.ss * f + s
+        self.ss2 = self.ss2 * f + s * s
+        self._count += 1
+
+    def reset(self) -> None:
+        """Forget the moments (post-commit restart)."""
+        self.w = self.ss = self.ss2 = 0.0
+        self._count = 0
+
+    @property
+    def weight(self) -> float:
+        return self.w
+
+    @property
+    def num_jobs(self) -> int:
+        """Jobs observed since the last reset (undecayed count)."""
+        return self._count
+
+    @property
+    def ready(self) -> bool:
+        return self._count >= self.min_jobs
+
+    def mean(self) -> float:
+        """Decayed mean sojourn."""
+        return self.ss / max(self.w, _TINY)
+
+    def dispersion(self) -> float:
+        """Decayed CV^2 of the sojourns."""
+        mean = self.mean()
+        var = max(self.ss2 / max(self.w, _TINY) - mean * mean, 0.0)
+        return var / max(mean * mean, _TINY)
+
+    def model(self) -> SojournModel:
+        if not self.ready:
+            raise ValueError(
+                f"need {self.min_jobs} jobs, have {self._count}")
+        return SojournModel(mean=self.mean(), dispersion=self.dispersion(),
+                            num_jobs=self.w)
 
 
 def fit_window(samples: np.ndarray, task_size=None,

@@ -120,6 +120,12 @@ class ReplayResult:
     replan_ms: List[float]
     backend: str = "paper"     # "paper" = single-job Y_{k:n} scoring;
                                # queued traces score via "batched"/"oracle"
+    static_cost: Optional[Dict[int, np.ndarray]] = None
+    #                          # k -> (steps,) per-job latencies of every
+    #                          # static plan — retained so TAIL accounting
+    #                          # (per-regime quantiles, the serving bench's
+    #                          # p99 regret) can pool jobs, which per-regime
+    #                          # MEANS cannot reconstruct
 
     # -- derived ------------------------------------------------------------
     @property
@@ -171,6 +177,51 @@ class ReplayResult:
 
     def controller_regime_regret(self) -> np.ndarray:
         return self.controller_regime_means / self.oracle_regime_means - 1.0
+
+    # -- tail accounting (pooled per-regime quantiles) -----------------------
+    def _regime_quantile(self, costs: np.ndarray, q: float,
+                         skip: int) -> np.ndarray:
+        """Per-regime q-quantile of a per-job cost array, dropping the
+        first ``skip`` jobs of each regime (the adaptation/transition
+        head a steady-phase tail comparison excludes; a regime shorter
+        than ``skip`` keeps all its jobs rather than vanishing)."""
+        reg_idx = self.trace.regime_index()
+        out = np.empty(self.num_regimes)
+        for r in range(self.num_regimes):
+            x = costs[reg_idx == r]
+            if skip and x.size > skip:
+                x = x[skip:]
+            out[r] = np.quantile(x, q)
+        return out
+
+    def controller_regime_quantile(self, q: float,
+                                   skip: int = 0) -> np.ndarray:
+        """Per-regime q-quantile of the controller's realized costs."""
+        return self._regime_quantile(self.controller_cost, q, skip)
+
+    def static_regime_quantile(self, k: int, q: float,
+                               skip: int = 0) -> np.ndarray:
+        """Per-regime q-quantile of the static-k per-job costs (needs
+        the retained ``static_cost`` arrays — queued replays keep them)."""
+        if self.static_cost is None:
+            raise ValueError(
+                "per-job static costs were not retained on this replay "
+                "(paper-mode traces score single-job Y_{k:n} only)")
+        return self._regime_quantile(self.static_cost[k], q, skip)
+
+    def oracle_regime_quantile(self, q: float, skip: int = 0) -> np.ndarray:
+        """The clairvoyant per-regime tail: for each regime, the best
+        static k's q-quantile (the oracle may pick a different k per
+        regime AND per objective — the mean oracle and the tail oracle
+        legitimately diverge under load)."""
+        return np.min(np.stack(
+            [self.static_regime_quantile(k, q, skip) for k in self.ks]),
+            axis=0)
+
+    def quantile_regret(self, q: float, skip: int = 0) -> np.ndarray:
+        """Per-regime relative q-quantile excess over the tail oracle."""
+        return self.controller_regime_quantile(q, skip) / \
+            self.oracle_regime_quantile(q, skip) - 1.0
 
     def summary(self) -> dict:
         return {
@@ -258,7 +309,9 @@ def replay(trace: RegimeTrace, controller: RedundancyController,
         # latency feed (a no-op unless the controller carries a monitor)
         controller.observe(cu[t],
                            timestamp=float(A[t]) if queued else None,
-                           latency=float(cost[t]))
+                           latency=float(cost[t]),
+                           completion=float(A[t] + cost[t])
+                           if queued else None)
         observe_s += time.perf_counter() - t0
 
     controller_regime_means = np.asarray(
@@ -272,4 +325,5 @@ def replay(trace: RegimeTrace, controller: RedundancyController,
         observe_seconds_per_step=observe_s / max(steps, 1),
         replan_ms=[e.replan_ms for e in controller.events],
         backend=backend,
+        static_cost=static_cost,
     )

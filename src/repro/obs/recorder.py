@@ -49,6 +49,7 @@ EVENT_KINDS = frozenset({
     "quarantine",       # the controller's quarantine set changed
     "actuate",          # an actuator applied a committed (policy, model)
     "slo_alarm",        # the SLO monitor's multi-window burn crossed
+    "infeasible",       # a commit aborted: no finite cell on the surface
     "sweep",            # one cluster-engine surface call (batched/fleet rep)
     "span",             # a closed span (name, start ts, duration)
     "mark",             # free-form annotation (regime boundaries, footers)

@@ -112,6 +112,22 @@ class SLOMonitor:
     def violation_rate(self) -> float:
         return self.violations / self.count if self.count else 0.0
 
+    def margin(self) -> float:
+        """Signed SLO headroom: (target - streaming quantile estimate) /
+        target.  Positive means the observed tail sits inside the
+        objective (0.25 = a quarter of the target to spare); negative
+        means the SLO is being delivered blown even if the burn windows
+        have not crossed yet.  0.0 before any observation."""
+        if not self.count:
+            return 0.0
+        return (self.target - self.quantile_estimate()) / self.target
+
+    @property
+    def healthy(self) -> bool:
+        """Whether the monitor is currently clear: not latched on a burn
+        alarm AND the streaming tail estimate within target."""
+        return not self._latched and self.margin() >= 0.0
+
     def state(self) -> dict:
         """JSON-able snapshot for run reports and bench artifacts."""
         out = {"target": self.target, "quantile": self.quantile,
@@ -119,7 +135,8 @@ class SLOMonitor:
                "violation_rate": self.violation_rate(),
                "burn_fast": self.burn_fast, "burn_slow": self.burn_slow,
                "burn_threshold": self.burn_threshold,
-               "alarms": self.alarms, "latched": self._latched}
+               "alarms": self.alarms, "latched": self._latched,
+               "margin": self.margin(), "healthy": self.healthy}
         if self.count:
             out["quantile_estimate"] = self.quantile_estimate()
         return out

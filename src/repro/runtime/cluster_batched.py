@@ -60,9 +60,9 @@ from .cluster import ClusterConfig, ClusterResult, default_warmup
 from .failures import (effective_finish, group_resolution, job_resolution,
                        resolve_retry)
 
-__all__ = ["ClusterSweep", "resolve_failure_args", "simulate_one",
-           "summarize_sweep", "sweep", "sweep_compile_count",
-           "validate_sweep_args"]
+__all__ = ["ClusterSweep", "Infeasible", "InfeasibleSurfaceError",
+           "resolve_failure_args", "simulate_one", "summarize_sweep",
+           "sweep", "sweep_compile_count", "validate_sweep_args"]
 
 _SWEEP_TRACES = 0
 
@@ -603,6 +603,30 @@ def lanes_as_jnp(lanes: Optional[GroupLanes]):
             jnp.asarray(lanes.gid, jnp.int32))
 
 
+@dataclasses.dataclass(frozen=True)
+class Infeasible:
+    """Typed marker for a surface row with NO feasible candidate.
+
+    Failure lanes report an all-failed cell as ``np.inf``; a row where
+    EVERY candidate carries the sentinel has no optimum, and a silent
+    ``argmin`` would return the first candidate as if it had won.
+    ``kstar``-style selections return this marker instead so callers can
+    branch on it (``isinstance(v, Infeasible)``); planner entry points
+    that must produce a single policy raise ``InfeasibleSurfaceError``.
+    """
+
+    load: float
+    metric: str
+
+    def __bool__(self) -> bool:
+        return False
+
+
+class InfeasibleSurfaceError(RuntimeError):
+    """Raised when a planning curve has no finite cell to select from
+    (every candidate hit the all-failed ``np.inf`` sentinel)."""
+
+
 @dataclasses.dataclass
 class ClusterSweep:
     """The (loads x ks) result surface, replication-averaged.
@@ -654,11 +678,21 @@ class ClusterSweep:
         vals = self.metric(metric)[load_idx]
         return {int(k): float(v) for k, v in zip(self.ks, vals)}
 
-    def kstar(self, metric: str = "mean") -> Dict[float, int]:
-        """load -> arg-min k (ties to the smaller k; ks are ascending)."""
+    def kstar(self, metric: str = "mean") -> Dict[float, object]:
+        """load -> arg-min k (ties to the smaller k; ks are ascending).
+
+        A row where no candidate is finite (every cell carries the
+        all-failed ``np.inf`` sentinel) maps to an ``Infeasible`` marker
+        instead of a meaningless first-k argmin.
+        """
         vals = self.metric(metric)
-        return {float(lam): int(self.ks[int(np.argmin(vals[i]))])
-                for i, lam in enumerate(self.loads)}
+        out: Dict[float, object] = {}
+        for i, lam in enumerate(self.loads):
+            if not np.any(np.isfinite(vals[i])):
+                out[float(lam)] = Infeasible(load=float(lam), metric=metric)
+            else:
+                out[float(lam)] = int(self.ks[int(np.argmin(vals[i]))])
+        return out
 
 
 def resolve_failure_args(scenario: Scenario,

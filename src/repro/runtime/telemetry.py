@@ -76,6 +76,23 @@ class ArrivalStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class SojournStats:
+    """Typed end-to-end sojourn summary of the recorded (arrival,
+    completion) pairs — completion-ordered observation: the latency a
+    serving master actually sees, service PLUS queueing, which is the
+    axis SLOs are written on.  Same short-window contract as the other
+    typed summaries.
+    """
+
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+    dispersion: float           # Var[sojourn] / E[sojourn]^2 (CV^2)
+    num_jobs: int
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkerSpeedStats:
     """Typed per-worker relative-speed estimate from step telemetry.
 
@@ -136,6 +153,7 @@ class Telemetry:
         self._times: Deque[float] = collections.deque(maxlen=self.window)
         self._latencies: Deque[float] = collections.deque(maxlen=self.window)
         self._arrivals: Deque[float] = collections.deque(maxlen=self.window)
+        self._sojourns: Deque[float] = collections.deque(maxlen=self.window)
         self._task_size: int = 1
         # task outcomes: (worker index, completed?) pairs, ring-bounded so
         # liveness tracks the RECENT fleet, not its whole history
@@ -253,6 +271,52 @@ class Telemetry:
         elif not math.isfinite(t):
             raise ValueError(f"arrival timestamp must be finite, got {t}")
         self._arrivals.append(t)
+
+    def record_job(self, arrival: float, completion: float):
+        """Record one job's realized (arrival, completion) pair — the
+        completion-ordered observation a serving master sees.
+
+        One call does the whole serving-side bookkeeping: the arrival
+        instant feeds the interarrival window (:meth:`record_arrival`'s
+        clock-tolerance rule), and the sojourn ``completion - arrival``
+        is recorded both as the job's end-to-end latency (so an attached
+        SLO monitor sees it, exactly like :meth:`record_latency`) and in
+        the sojourn window behind :meth:`sojourn_stats`.  Returns the
+        SLO monitor's burn alarm when this job crossed it, else None.
+        """
+        a, c = float(arrival), float(completion)
+        if not math.isfinite(a):
+            raise ValueError(f"arrival must be finite, got {arrival}")
+        # shared clock-tolerance rule: an ulp-backward completion clamps
+        # to a zero-length sojourn, a larger inversion raises
+        from ..core.scenario import arrival_gap
+        sojourn = max(arrival_gap(a, c), 0.0)
+        self.record_arrival(a)
+        self._sojourns.append(sojourn)
+        return self.record_latency(sojourn)
+
+    @property
+    def num_jobs(self) -> int:
+        return len(self._sojourns)
+
+    def sojourn_stats(self) -> Union["SojournStats", InsufficientTelemetry]:
+        """Typed sojourn summary of the recorded (arrival, completion)
+        pairs; fewer than ``min_samples`` jobs returns
+        ``InsufficientTelemetry`` like the sibling summaries."""
+        if self.num_jobs < self.min_samples:
+            return InsufficientTelemetry(have=self.num_jobs,
+                                         needed=self.min_samples)
+        x = np.asarray(self._sojourns, dtype=np.float64)
+        mean = float(x.mean())
+        var = float(x.var())
+        return SojournStats(
+            mean=mean,
+            p50=float(np.quantile(x, 0.50)),
+            p95=float(np.quantile(x, 0.95)),
+            p99=float(np.quantile(x, 0.99)),
+            dispersion=var / max(mean * mean, 1e-300),
+            num_jobs=int(x.size),
+        )
 
     def record_outcomes(self, completed, lost) -> None:
         """Record one step's task outcomes, per worker.

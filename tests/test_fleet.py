@@ -209,6 +209,36 @@ class TestStreamingStats:
             np.testing.assert_array_equal(st.metric(m), ex.metric(m),
                                           err_msg=m)
 
+    def test_stream_pools_reps_before_quantile(self):
+        """REGRESSION: multi-rep streaming quantiles must be the
+        quantile of the POOLED per-rep multiset (the exact path's rule),
+        not the average of per-rep quantiles — the two genuinely differ
+        on this surface, so this test discriminates the failure mode."""
+        from repro.runtime.streamstats import reservoir_values_host
+        sc = Scenario(ShiftedExp(1.0, 2.0), SERVER, self.N)
+        raw = _raw(sc, loads=[0.2], ks=[3, 12], num_jobs=200, chunk=64,
+                   reps=3, seed=11, stream=True, reservoir=4096,
+                   preempt=False)
+        st = summarize_fleet(raw, ks=[3, 12])
+        R = raw.res.shape[-1]
+        flat = raw.res.reshape(raw.reps, -1, R)
+        cnt = raw.cnt.reshape(raw.reps, -1)
+        pooled = reservoir_values_host(flat, cnt)
+        per_rep = [reservoir_values_host(flat[r:r + 1], cnt[r:r + 1])
+                   for r in range(raw.reps)]
+        for lane in range(len(pooled)):
+            want = np.quantile(pooled[lane], 0.99)
+            avg_of_reps = np.mean([np.quantile(per_rep[r][lane], 0.99)
+                                   for r in range(raw.reps)])
+            assert want != avg_of_reps          # the rules disagree here
+            assert st.p99.ravel()[lane] == want
+        # and the whole stream surface equals the exact path's
+        kw = dict(loads=[0.2], ks=[3, 12], num_jobs=200, reps=3, seed=11,
+                  chunk_size=64, preempt=False)
+        ex = fleet_sweep(sc, **kw)
+        np.testing.assert_array_equal(st.p99, ex.p99)
+        np.testing.assert_array_equal(st.p50, ex.p50)
+
     def test_stream_failure_lanes(self):
         sc = Scenario(ShiftedExp(1.0, 2.0), SERVER, self.N,
                       failures=FailureModel(mttf=60.0, mttr=5.0,

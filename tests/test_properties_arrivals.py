@@ -125,12 +125,33 @@ def test_deterministic_stream_reads_as_clockwork(rate):
 @settings(max_examples=40, deadline=None, derandomize=True)
 def test_mmpp_matching_solves_the_dispersion_identity(disp):
     """ArrivalModel.process() picks the symmetric MMPP whose marginal
-    gap mixture has exactly the committed CV^2 (CV^2 = 3 - 8/(b+1/b)^2),
-    with the long-run rate preserved by construction."""
-    m = ArrivalModel(rate=2.0, dispersion=disp, num_gaps=100.0)
+    gap mixture has exactly the committed EFFECTIVE CV^2
+    (CV^2 = 3 - 8/(b+1/b)^2), with the long-run rate preserved by
+    construction.  At large evidence mass the effective dispersion is
+    the raw estimate, so the identity holds against it directly."""
+    m = ArrivalModel(rate=2.0, dispersion=disp, num_gaps=1e7)
     p = m.process()
     assert isinstance(p, MMPPArrivals)
     assert p.rate == pytest.approx(2.0)
     assert p.slow == pytest.approx(1.0 / p.burst, rel=1e-9)
     t = p.burst + 1.0 / p.burst
-    assert 3.0 - 8.0 / t**2 == pytest.approx(disp, rel=1e-9)
+    assert 3.0 - 8.0 / t**2 == pytest.approx(m.effective_dispersion(),
+                                             rel=1e-9)
+    assert m.effective_dispersion() == pytest.approx(disp, rel=1e-4)
+
+
+@given(disp=st.floats(1.01, 2.89),
+       mass=st.floats(1.0, 1e4))
+@settings(max_examples=40, deadline=None, derandomize=True)
+def test_overdispersion_is_shrunk_by_evidence_mass(disp, mass):
+    """The excess over Poisson of a committed dispersion estimate is
+    scaled by num_gaps / (num_gaps + SHRINK_MASS): a short refit window
+    cannot commit a violent burst model, a long one keeps its estimate.
+    Sub-Poisson dispersion passes through untouched."""
+    m = ArrivalModel(rate=1.0, dispersion=disp, num_gaps=mass)
+    w = mass / (mass + ArrivalModel.DISPERSION_SHRINK_MASS)
+    assert m.effective_dispersion() == \
+        pytest.approx(1.0 + (disp - 1.0) * w, rel=1e-9)
+    assert 1.0 <= m.effective_dispersion() <= disp
+    under = ArrivalModel(rate=1.0, dispersion=0.7, num_gaps=mass)
+    assert under.effective_dispersion() == pytest.approx(0.7)

@@ -1,0 +1,433 @@
+"""SLO-grade tail serving: the p99-objective control loop, the
+completion-ordered observation channel, and the quantile-path bugfix
+sweep (typed infeasible surfaces, metric-flip cache warmth).
+
+Regression anchors for this PR's three bugfixes:
+
+  * ``ClusterSweep.kstar`` on an all-inf (failure-storm) row returns a
+    typed ``Infeasible`` marker instead of a silent first-k argmin, and
+    every planner entry point raises ``InfeasibleSurfaceError`` rather
+    than committing fiction; the controller aborts the commit and keeps
+    its standing policy.
+  * a metric flip (mean -> p99) on ``backend="cached"`` must hit the
+    warm executable — the quantile rows come from the same compiled
+    cube, so the metric must stay OUT of the cache key.
+  * (tests/test_fleet.py) streaming quantiles pool replications before
+    taking the quantile, not per-rep-quantile-then-average.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (Infeasible, InfeasibleSurfaceError, LoadAwareLatency,
+                       Planner, Scenario)
+from repro.control import (HedgedServeActuator, RedundancyController,
+                           SojournDriftDetector, SojournEstimator, replay)
+from repro.control.controller import ControllerConfig
+from repro.core import (BiModal, FailureModel, Regime, RetryPolicy, Scaling,
+                        ShiftedExp, sample_regime_trace)
+from repro.core.scenario import PoissonArrivals
+from repro.obs import SLOMonitor, recording
+from repro.runtime.cluster_batched import ClusterSweep, sweep
+from repro.runtime.telemetry import InsufficientTelemetry, Telemetry
+
+N = 12
+SERVER = Scaling.SERVER_DEPENDENT
+SVC = BiModal(10.0, 0.2)
+PRIOR = Scenario(SVC, SERVER, N, candidate_ks=(4, 6, 12))
+# one surface-executable family shared by every test in this module
+OBJ = LoadAwareLatency(num_jobs=300, reps=2, backend="cached",
+                       preempt=False, metric="p99", chunk_size=128)
+DAY, SPIKE = 0.07, 0.28
+
+
+def _stream(dist, num, seed=0):
+    return np.asarray(dist.sample(jax.random.PRNGKey(seed), (num,)),
+                      np.float64)
+
+
+def _day_spike_trace(seed=3, day_steps=200, spike_steps=150):
+    return sample_regime_trace(
+        [Regime(SVC, day_steps, arrivals=PoissonArrivals(DAY)),
+         Regime(SVC, spike_steps, arrivals=PoissonArrivals(SPIKE))],
+        SERVER, N, seed=seed, s_values=[1, 2, 3])
+
+
+def _boot_load_aware(ctl, num=600, gap=15.0, seed=0):
+    """Feed stationary telemetry with timestamps until the boot commit."""
+    x = _stream(SVC, num, seed=seed)
+    t = 0.0
+    for i in range(0, num, N):
+        t += gap
+        if ctl.observe(x[i:i + N], timestamp=t) is not None:
+            return t
+    raise AssertionError("controller never booted")
+
+
+# ==========================================================================
+# Bugfix 1: all-inf surface rows are typed, not silently argmin'd
+# ==========================================================================
+
+class TestInfeasibleSurface:
+    def _storm_sweep(self):
+        """A real failure storm: MTTF/MTTR ~ a third of a service time
+        and a single launch attempt — every job in every lane dies."""
+        sc = Scenario(ShiftedExp(1.0, 2.0), SERVER, 4,
+                      failures=FailureModel(mttf=0.3, mttr=0.3,
+                                            max_events=256))
+        return sweep(sc, loads=[2.0], ks=[1, 2, 4], num_jobs=30, reps=1,
+                     preempt=False, retry=RetryPolicy(max_attempts=1),
+                     seed=0)
+
+    def test_kstar_all_inf_row_returns_typed_marker(self):
+        """REGRESSION: argmin over an all-inf row used to return the
+        first k as if it had won; it must map to ``Infeasible``."""
+        inf = np.full((2, 3), np.inf)
+        fin = inf.copy()
+        fin[0] = [3.0, 2.0, 4.0]
+        z = np.zeros((2, 3))
+        sw = ClusterSweep(loads=(0.1, 2.0), ks=(1, 2, 4), warmup=0, reps=1,
+                          mean=fin, p50=fin, p95=fin, p99=inf,
+                          utilization=z, wasted_frac=z, throughput=z)
+        ks = sw.kstar()
+        assert ks[0.1] == 2                      # finite row: plain argmin
+        marker = ks[2.0]
+        assert isinstance(marker, Infeasible)
+        assert marker.load == 2.0 and marker.metric == "mean"
+        assert not marker                        # falsy: `if kstar[lam]:`
+        # every row of the p99 surface is the sentinel
+        assert all(isinstance(v, Infeasible) for v in sw.kstar("p99").values())
+
+    def test_failure_storm_surface_is_infeasible_end_to_end(self):
+        sw = self._storm_sweep()
+        assert not np.any(np.isfinite(sw.mean))
+        for metric in ("mean", "p99"):
+            marker = sw.kstar(metric)[2.0]
+            assert isinstance(marker, Infeasible)
+            assert marker.metric == metric
+
+    def test_planner_finalize_raises_instead_of_committing(self):
+        curve = {1: np.inf, 2: np.inf, 4: np.inf}
+        with pytest.raises(InfeasibleSurfaceError, match="no feasible k"):
+            Planner._finalize(Scenario(ShiftedExp(1.0, 2.0), SERVER, 4),
+                              curve)
+        plan = Planner._finalize(Scenario(ShiftedExp(1.0, 2.0), SERVER, 4),
+                                 {**curve, 4: 3.0})
+        assert plan.k == 4                       # one finite cell suffices
+
+    def test_controller_keeps_policy_on_infeasible_surface(self, monkeypatch):
+        """REGRESSION: a commit whose re-plan surface comes back all-inf
+        must abort gracefully — standing policy kept, the evidence
+        surfaced on the flight recorder — not crash or commit a fiction
+        k.  (A real storm cannot reach this through the controller: its
+        surface call rides the default relaunch policy, so the seam is
+        stubbed at ``resolve_sweep_backend``.)"""
+        ctl = RedundancyController(PRIOR, objective=OBJ)
+        _boot_load_aware(ctl)
+        assert ctl.arrival_model is not None
+        before = ctl.policy
+
+        def all_inf_backend(name):
+            def run(sc, loads=None, ks=None, **kw):
+                ks_t = tuple(int(k) for k in ks)
+                shape = (len(loads), len(ks_t))
+                inf = np.full(shape, np.inf)
+                z = np.zeros(shape)
+                return ClusterSweep(
+                    loads=tuple(float(v) for v in loads), ks=ks_t,
+                    warmup=0, reps=1, mean=inf, p50=inf, p95=inf, p99=inf,
+                    utilization=z, wasted_frac=z, throughput=z)
+            return run
+
+        monkeypatch.setattr("repro.runtime.cluster.resolve_sweep_backend",
+                            all_inf_backend)
+        with recording() as rec:
+            ev = ctl._commit("load", window=None, model=ctl.model)
+        assert ev is None                        # no event, no crash
+        assert ctl.policy == before              # standing policy kept
+        assert ctl.model is not None             # estimator models kept
+        aborts = [e for e in rec.events() if e.kind == "infeasible"]
+        assert len(aborts) == 1
+        assert aborts[0].name == "load"
+
+
+# ==========================================================================
+# Bugfix 3: metric flip on the cached backend stays warm
+# ==========================================================================
+
+class TestMetricFlipCacheWarm:
+    def test_mean_to_p99_flip_hits_the_warm_executable(self):
+        """REGRESSION: the quantile rows come from the same compiled
+        cube as the mean, so ``metric`` must stay OUT of the cache key —
+        flipping the objective metric re-reads the cube, it does not
+        recompile or re-run the kernel."""
+        from repro.runtime.surface_cache import surface_cache_stats
+        obj_mean = dataclasses.replace(OBJ, metric="mean")
+        c_mean = obj_mean.curve(PRIOR, [4, 6, 12])    # prime the entry
+        s1 = surface_cache_stats()
+        c_p99 = dataclasses.replace(OBJ, metric="p99").curve(PRIOR,
+                                                             [4, 6, 12])
+        s2 = surface_cache_stats()
+        assert s2["misses"] == s1["misses"]           # no recompile
+        assert s2["hits"] == s1["hits"] + 1           # warm hit
+        assert set(c_mean) == set(c_p99) == {4, 6, 12}
+        assert all(c_p99[k] > c_mean[k] for k in c_mean)   # distinct rows
+
+
+# ==========================================================================
+# Completion-ordered observation: estimator, detector, telemetry
+# ==========================================================================
+
+class TestSojournEstimator:
+    def test_moments_round_trip(self):
+        est = SojournEstimator(forget=1.0, min_jobs=2)
+        for a, s in [(0.0, 2.0), (1.0, 4.0), (2.0, 6.0)]:
+            est.observe(a, a + s)
+        assert est.mean() == pytest.approx(4.0)
+        # CV^2 of {2, 4, 6}: var 8/3, mean 4
+        assert est.dispersion() == pytest.approx((8 / 3) / 16)
+        m = est.model()
+        assert m.mean == pytest.approx(4.0)
+        assert m.num_jobs == pytest.approx(3.0)
+
+    def test_translation_invariance(self):
+        a = SojournEstimator(forget=0.9, min_jobs=2)
+        b = SojournEstimator(forget=0.9, min_jobs=2)
+        for t, s in [(0.0, 1.0), (3.0, 5.0), (7.0, 2.0)]:
+            a.observe(t, t + s)
+            b.observe(t + 1e6, t + 1e6 + s)
+        assert a.mean() == pytest.approx(b.mean())
+        assert a.dispersion() == pytest.approx(b.dispersion())
+
+    def test_ready_floor_and_reset(self):
+        est = SojournEstimator(min_jobs=3)
+        est.observe(0.0, 1.0)
+        est.observe(1.0, 2.0)
+        assert not est.ready
+        with pytest.raises(ValueError, match="need 3"):
+            est.model()
+        est.observe(2.0, 3.0)
+        assert est.ready and est.num_jobs == 3
+        est.reset()
+        assert est.num_jobs == 0 and not est.ready
+
+    def test_clock_tolerance_rule(self):
+        est = SojournEstimator(min_jobs=2)
+        t = 1e9
+        est.observe(t, np.nextafter(t, 0.0))   # ulp-backward: clamps
+        assert est.last_sojourn > 0.0
+        with pytest.raises(ValueError):
+            est.observe(10.0, 5.0)             # real inversion: raises
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="forget"):
+            SojournEstimator(forget=0.0)
+        with pytest.raises(ValueError, match="min_jobs"):
+            SojournEstimator(min_jobs=1)
+
+
+class TestSojournDriftDetector:
+    def test_silent_until_rebased_and_cooled(self):
+        det = SojournDriftDetector(band=0.5, min_jobs=10)
+        assert det.update(100.0, at=5) is None          # no reference yet
+        det.rebase(10.0, at=10)
+        assert det.update(100.0, at=15) is None         # cooldown
+        ev = det.update(100.0, at=20)
+        assert ev is not None and ev.kind == "sojourn_up"
+        assert ev.stat == pytest.approx(10.0)
+
+    def test_band_is_two_sided(self):
+        det = SojournDriftDetector(band=0.5, min_jobs=1)
+        det.rebase(10.0, at=0)
+        assert det.update(14.9, at=10) is None          # inside the band
+        assert det.update(6.7, at=10) is None
+        up = det.update(15.0, at=10)
+        dn = det.update(6.6, at=10)
+        assert up.kind == "sojourn_up" and dn.kind == "sojourn_down"
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="band"):
+            SojournDriftDetector(band=0.0)
+        with pytest.raises(ValueError, match="min_jobs"):
+            SojournDriftDetector(min_jobs=0)
+
+
+class TestTelemetryRecordJob:
+    def test_sojourn_stats_round_trip(self):
+        tel = Telemetry(min_samples=4)
+        for i in range(8):
+            tel.record_job(float(i), float(i) + 2.0 + (i % 2))
+        st = tel.sojourn_stats()
+        assert st
+        assert st.num_jobs == 8
+        assert st.mean == pytest.approx(2.5)
+        assert st.p99 <= 3.0
+
+    def test_insufficient_below_floor(self):
+        tel = Telemetry(min_samples=8)
+        tel.record_job(0.0, 1.0)
+        st = tel.sojourn_stats()
+        assert isinstance(st, InsufficientTelemetry)
+        assert not st and st.have == 1 and st.needed == 8
+
+    def test_record_job_feeds_attached_slo(self):
+        slo = SLOMonitor(target=10.0, quantile=0.99, fast_window=8,
+                         slow_window=16, burn_threshold=2.0, min_count=8)
+        tel = Telemetry(min_samples=4, slo=slo)
+        alarms = [tel.record_job(float(i), float(i) + 100.0)
+                  for i in range(32)]
+        assert slo.alarms >= 1
+        assert any(a is not None for a in alarms)   # alarm surfaced
+
+
+# ==========================================================================
+# The p99-objective control loop end to end
+# ==========================================================================
+
+@pytest.fixture(scope="module")
+def p99_serving():
+    """One day->flash-crowd replay under the committed p99 objective,
+    shared by the wiring asserts below."""
+    trace = _day_spike_trace()
+    hedge = HedgedServeActuator()
+    slo = SLOMonitor(target=60.0, quantile=0.99, fast_window=16,
+                     slow_window=64, burn_threshold=2.0, min_count=16)
+    ctl = RedundancyController(
+        PRIOR, objective=OBJ,
+        config=ControllerConfig(arrival_refit_gaps=48, arrival_min_gaps=12,
+                                sojourn_forget=0.98, sojourn_min_jobs=24,
+                                sojourn_refit_gaps=32,
+                                arrival_emergency_ratio=4.0),
+        actuators=[hedge], slo=slo)
+    res = replay(trace, ctl, preempt=False)
+    return ctl, hedge, slo, res
+
+
+class TestP99ObjectiveLoop:
+    def test_commits_carry_the_quantile_metric(self, p99_serving):
+        """Every load-aware commit plans the COMMITTED tail objective —
+        the event's metric records which surface row the plan rode."""
+        _, _, _, res = p99_serving
+        commits = [e for e in res.events if e.kind != "init"]
+        assert commits
+        assert all(e.metric == "p99" for e in commits)
+        assert any(e.cached for e in commits)
+
+    def test_flash_crowd_moves_k_to_splitting(self, p99_serving):
+        """Day tail is straggler-bound (redundancy wins); the spike is
+        capacity-bound (k=n wins) — the p99 plan walks the ladder."""
+        _, _, _, res = p99_serving
+        assert res.policy_k[190] < N          # settled day plan: redundancy
+        assert res.policy_k[-1] == N          # spike: full splitting
+
+    def test_hedge_delay_comes_from_the_committed_plan(self, p99_serving):
+        ctl, hedge, _, _ = p99_serving
+        assert hedge.delay_source == "plan"
+        assert hedge.hedge_delay is not None and hedge.hedge_delay > 0.0
+        assert ctl._tail_curve is not None
+        assert hedge.hedge_delay == pytest.approx(
+            ctl._tail_curve[ctl.policy.k])
+
+    def test_decisions_deterministic_under_crn_replay(self, p99_serving):
+        _, _, _, res = p99_serving
+        ctl2 = RedundancyController(
+            PRIOR, objective=OBJ,
+            config=ControllerConfig(arrival_refit_gaps=48,
+                                    arrival_min_gaps=12,
+                                    sojourn_forget=0.98, sojourn_min_jobs=24,
+                                    sojourn_refit_gaps=32,
+                                    arrival_emergency_ratio=4.0),
+            actuators=[HedgedServeActuator()],
+            slo=SLOMonitor(target=60.0, quantile=0.99, fast_window=16,
+                           slow_window=64, burn_threshold=2.0,
+                           min_count=16))
+        res2 = replay(_day_spike_trace(), ctl2, preempt=False)
+        np.testing.assert_array_equal(res.policy_k, res2.policy_k)
+
+
+# ==========================================================================
+# The SLO-burn -> slo_burn drift -> quantile commit -> hedged actuation
+# chain, driven end to end with controlled latencies
+# ==========================================================================
+
+class TestSLOBurnChain:
+    def test_burn_alarm_reaches_a_hedged_p99_commit(self):
+        """A blown p99 target must travel the whole chain: multi-window
+        burn alarm -> recorder ``slo_alarm`` event -> pending
+        ``slo_burn`` service drift -> windowed refit commit under the
+        committed p99 objective -> hedged actuator re-derives its fire
+        delay from the NEW plan's tail curve."""
+        slo = SLOMonitor(target=50.0, quantile=0.99, fast_window=8,
+                         slow_window=32, burn_threshold=2.0, min_count=16)
+        hedge = HedgedServeActuator()
+        ctl = RedundancyController(PRIOR, objective=OBJ,
+                                   actuators=[hedge], slo=slo)
+        x = _stream(SVC, 2400, seed=7)
+        t = 0.0
+        with recording() as rec:
+            booted = None
+            for step in range(60):          # healthy: latencies in target
+                t += 15.0
+                ev = ctl.observe(x[step * N:(step + 1) * N], timestamp=t,
+                                 latency=5.0, completion=t + 5.0)
+                booted = booted or ev
+            assert booted is not None and slo.alarms == 0
+            burn_commit = None
+            for step in range(60, 120):     # the SLO is delivered blown
+                t += 15.0
+                ev = ctl.observe(x[step * N:(step + 1) * N], timestamp=t,
+                                 latency=200.0, completion=t + 200.0)
+                if ev is not None and ev.drift is not None and \
+                        ev.drift.kind == "slo_burn":
+                    burn_commit = ev
+                    break
+        assert slo.alarms >= 1
+        assert not slo.healthy              # latched + blown estimate
+        assert any(e.kind == "slo_alarm" for e in rec.events())
+        assert burn_commit is not None
+        assert burn_commit.kind == "drift"
+        assert burn_commit.metric == "p99"  # refit rode the tail row
+        assert hedge.delay_source == "plan"
+        assert hedge.hedge_delay == pytest.approx(
+            ctl._tail_curve[ctl.policy.k])
+
+
+# ==========================================================================
+# Emergency arrival refit (flash-crowd commit latency)
+# ==========================================================================
+
+class TestEmergencyRefit:
+    def _run(self, ratio, flip=40):
+        ctl = RedundancyController(
+            PRIOR, objective=OBJ,
+            config=ControllerConfig(arrival_refit_gaps=200,
+                                    arrival_min_gaps=8,
+                                    arrival_emergency_ratio=ratio))
+        x = _stream(SVC, 2400, seed=5)
+        t, events = 0.0, []
+        for step in range(200):
+            t += 20.0 if step < flip else 1.0       # 20x rate jump
+            ev = ctl.observe(x[step * N:(step + 1) * N], timestamp=t)
+            if ev is not None:
+                events.append((step, ev))
+        return ctl, events
+
+    def test_emergency_ratio_commits_before_the_refit_floor(self):
+        """REGRESSION: a 20x flash crowd used to wait out the full
+        ``arrival_refit_gaps`` floor; with the emergency ratio armed the
+        clean post-alarm gaps commit as soon as the rate shift is
+        unmistakable (>= the ratio), hundreds of jobs sooner."""
+        _, ev_on = self._run(ratio=4.0)
+        _, ev_off = self._run(ratio=0.0)
+        on_loads = [s for s, e in ev_on if e.kind == "load" and e.drift]
+        off_loads = [s for s, e in ev_off if e.kind == "load" and e.drift]
+        assert on_loads and on_loads[0] < 100    # committed mid-stream
+        assert not off_loads                     # waits out 200 gaps
+
+    def test_validation_rejects_degenerate_ratio(self):
+        with pytest.raises(ValueError, match="arrival_emergency_ratio"):
+            ControllerConfig(arrival_emergency_ratio=0.5)
+        ControllerConfig(arrival_emergency_ratio=0.0)    # off: legal
+        ControllerConfig(arrival_emergency_ratio=4.0)    # armed: legal
